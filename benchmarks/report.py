@@ -1,0 +1,94 @@
+"""Render EXPERIMENTS.md tables from results/dryrun records.
+
+  PYTHONPATH=src:. python -m benchmarks.report [--mesh 16x16]
+"""
+import argparse
+import glob
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def fmt_bytes(b):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if b < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def load(mesh):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ROOT, "results", "dryrun",
+                                           f"*__{mesh}.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def dryrun_table(mesh):
+    print(f"\n### Mesh {mesh}\n")
+    print("| arch | shape | status | params | bytes/device (args+tmp) | "
+          "compile s |")
+    print("|---|---|---|---|---|---|")
+    for r in load(mesh):
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | SKIP (long-context: "
+                  f"full attention) | — | — | — |")
+            continue
+        m = r.get("memory", {})
+        per_dev = (m.get("argument_size_in_bytes", 0)
+                   + m.get("temp_size_in_bytes", 0))
+        print(f"| {r['arch']} | {r['shape']} | ok | "
+              f"{r['params']/1e9:.1f}B | {fmt_bytes(per_dev)} | "
+              f"{r['compile_s']:.0f} |")
+
+
+def roofline_table(mesh):
+    print(f"\n### Roofline — mesh {mesh} (terms in seconds/step)\n")
+    print("| arch | shape | compute | memory | collective | bottleneck | "
+          "MODEL_FLOPS/HLO | note |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in load(mesh):
+        if r["status"] != "ok":
+            continue
+        ro = r["roofline"]
+        note = {
+            "compute": "near MXU limit — fuse/quantize to go further",
+            "memory": "weight/KV streaming dominates — quantize streams, "
+                      "raise arithmetic intensity (larger batch/microbatch)",
+            "collective": "gather/reduce traffic dominates — reshard, "
+                          "fewer weight re-gathers, compress grads",
+        }[ro["bottleneck"]]
+        print(f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.2e} | "
+              f"{ro['memory_s']:.2e} | {ro['collective_s']:.2e} | "
+              f"**{ro['bottleneck']}** | {ro['useful_ratio']:.2f} | "
+              f"{note} |")
+
+
+def collective_breakdown(arch, shape, mesh):
+    f = os.path.join(ROOT, "results", "dryrun",
+                     f"{arch}__{shape}__{mesh}.json")
+    r = json.load(open(f))
+    ro = r["roofline"]
+    print(f"\n{arch} × {shape} × {mesh}: collectives")
+    for k, v in ro["collectives"].items():
+        if isinstance(v, dict) and v.get("count"):
+            print(f"  {k}: n={v['count']:.0f} bytes={fmt_bytes(v['bytes'])}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline"])
+    args = ap.parse_args()
+    if args.section in ("all", "dryrun"):
+        for mesh in ("16x16", "2x16x16"):
+            dryrun_table(mesh)
+    if args.section in ("all", "roofline"):
+        roofline_table(args.mesh)
+
+
+if __name__ == "__main__":
+    main()

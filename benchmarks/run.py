@@ -1,0 +1,208 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  fig5_sequential     CSR vs CSRC Mflop/s + loads-per-flop (paper Fig. 5)
+  table2_accumulation accumulation-strategy cost (paper Table 2) — runs on
+                      8 placeholder devices in a subprocess
+  fig6_colorful       colorful vs local-buffers by band width (paper Fig. 6)
+  fig89_scaling       speedup vs shard count (paper Figs. 8/9) — subprocess
+  roofline_summary    single-pod roofline table from results/dryrun (§Roofline)
+
+Output: ``name,us_per_call,derived`` CSV rows.
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import csrc
+from repro.core.coloring import color_rows
+from repro.kernels import ref, ops
+from benchmarks.util import time_fn, row
+from benchmarks.suite import matrices
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5: sequential CSR vs CSRC
+# ---------------------------------------------------------------------------
+
+def fig5_sequential(small: bool):
+    print("# fig5_sequential: CSR vs CSRC (single device)")
+    rng = np.random.default_rng(0)
+    for name, make in matrices(small):
+        M = make()
+        x = jnp.asarray(rng.standard_normal(M.m).astype(np.float32))
+        r_idx, c_idx, vals = ref.csr_from_csrc(M)
+        r_idx = jnp.asarray(r_idx)
+        c_idx = jnp.asarray(c_idx)
+        vals = jnp.asarray(vals)
+        csr = jax.jit(lambda x: ref.csr_spmv_arrays(r_idx, c_idx, vals, x,
+                                                    M.n))
+        csrc_fn = ops.SpmvOperator(M, path="segment")
+        t_csr = time_fn(csr, x)
+        t_csrc = time_fn(csrc_fn, x)
+        flops = 2 * M.nnz - M.n
+        mflops_csr = flops / t_csr / 1e6
+        mflops_csrc = flops / t_csrc / 1e6
+        # paper §4.1 analytic loads/flops: CSR 1.5, CSRC ~1.26
+        loads_csr = 3 * M.nnz
+        loads_csrc = (5 * M.nnz // 2 - M.n // 2 if not M.numerically_symmetric
+                      else 2 * M.nnz)
+        row(f"fig5/{name}/csr", t_csr * 1e6,
+            f"mflops={mflops_csr:.0f};loads_per_flop={loads_csr/flops:.2f}")
+        row(f"fig5/{name}/csrc", t_csrc * 1e6,
+            f"mflops={mflops_csrc:.0f};loads_per_flop={loads_csrc/flops:.2f};"
+            f"speedup={t_csr/t_csrc:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# Table 2: accumulation strategies (multi-device, subprocess)
+# ---------------------------------------------------------------------------
+
+_TABLE2_CODE = """
+    import numpy as np, jax, jax.numpy as jnp, time
+    from repro.core import csrc, distributed as D
+    from benchmarks.util import time_fn
+    mesh = jax.make_mesh((8,), ('rows',))
+    # in-cache vs out-of-cache analogs (paper splits at ws ~ cache size)
+    cases = [('small_ws', 4096, 16), ('large_ws', 200000, 16)]
+    rng = np.random.default_rng(0)
+    for label, n, band in cases:
+        M = csrc.fem_band(n, band, seed=1)
+        x = jnp.asarray(rng.standard_normal(M.n).astype(np.float32))
+        for strat in ('allreduce', 'reduce_scatter', 'halo'):
+            fn = D.build_sharded_spmv(M, mesh, 'rows', strat)
+            t = time_fn(fn, x)
+            cb = D.collective_bytes_estimate(M, 8, strat)
+            print(f'table2/{label}/{strat},{t*1e6:.1f},'
+                  f'collective_bytes_per_shard={cb}')
+"""
+
+
+def table2_accumulation(small: bool):
+    print("# table2_accumulation: strategy cost on 8 shards "
+          "(all-in-one=allreduce, interval=reduce_scatter, effective=halo)")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + ":" + ROOT
+    code = _TABLE2_CODE
+    if small:
+        code = code.replace("200000", "20000")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    print(out.stdout.strip())
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6: colorful vs local buffers
+# ---------------------------------------------------------------------------
+
+def fig6_colorful(small: bool):
+    print("# fig6_colorful: colorful vs local-buffers by band width")
+    rng = np.random.default_rng(0)
+    n = 1000 if small else 4000
+    for band in (1, 2, 8):
+        M = csrc.fem_band(n, band, seed=band)
+        x = jnp.asarray(rng.standard_normal(M.n).astype(np.float32))
+        col = color_rows(M)
+        colorful = ops.SpmvOperator(M, path="colorful", coloring=col)
+        buffers = ops.SpmvOperator(M, path="segment")
+        t_c = time_fn(colorful, x)
+        t_b = time_fn(buffers, x)
+        row(f"fig6/band{band}/colorful", t_c * 1e6,
+            f"colors={col.num_colors}")
+        row(f"fig6/band{band}/local_buffers", t_b * 1e6,
+            f"speedup_vs_colorful={t_c/t_b:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# Figs. 8/9: scaling with shard count
+# ---------------------------------------------------------------------------
+
+_FIG89_CODE = """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import csrc, distributed as D
+    from repro.kernels import ops
+    from benchmarks.util import time_fn
+    rng = np.random.default_rng(0)
+    n, band = NN, 16
+    M = csrc.fem_band(n, band, seed=1)
+    x = jnp.asarray(rng.standard_normal(M.n).astype(np.float32))
+    seq = ops.SpmvOperator(M, path='segment')
+    t1 = time_fn(seq, x)
+    print(f'fig89/p1/sequential,{t1*1e6:.1f},speedup=1.00')
+    for p in (2, 4, 8):
+        mesh = jax.make_mesh((p,), ('rows',))
+        fn = D.build_sharded_spmv(M, mesh, 'rows', 'halo')
+        t = time_fn(fn, x)
+        print(f'fig89/p{p}/halo,{t*1e6:.1f},speedup={t1/t:.2f}')
+"""
+
+
+def fig89_scaling(small: bool):
+    print("# fig89_scaling: speedup vs shards (halo strategy, band FEM)")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + ":" + ROOT
+    code = _FIG89_CODE.replace("NN", "40000" if small else "400000")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    print(out.stdout.strip())
+
+
+# ---------------------------------------------------------------------------
+# §Roofline summary from the dry-run records
+# ---------------------------------------------------------------------------
+
+def roofline_summary(small: bool):
+    outdir = os.path.join(ROOT, "results", "dryrun")
+    if not os.path.isdir(outdir):
+        print("# roofline_summary: results/dryrun missing — run "
+              "`python -m repro.launch.dryrun` first")
+        return
+    print("# roofline_summary: single-pod terms per cell (seconds)")
+    import glob
+    for f in sorted(glob.glob(os.path.join(outdir, "*__16x16.json"))):
+        rec = json.load(open(f))
+        if rec["status"] != "ok":
+            continue
+        r = rec["roofline"]
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        row(f"roofline/{rec['arch']}/{rec['shape']}", dom * 1e6,
+            f"bottleneck={r['bottleneck']};compute={r['compute_s']:.3e};"
+            f"memory={r['memory_s']:.3e};collective={r['collective_s']:.3e};"
+            f"useful={r['useful_ratio']:.2f}")
+
+
+BENCHES = [fig5_sequential, table2_accumulation, fig6_colorful,
+           fig89_scaling, roofline_summary]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller matrices for CI-speed runs")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+    for bench in BENCHES:
+        if args.only and args.only not in bench.__name__:
+            continue
+        bench(args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""The benchmark matrix suite — synthetic analogs of the paper's Table 1
+classes (the UF collection is not available offline):
+
+  * FEM band matrices (the paper's angical/tracer/cube2m class);
+  * 2-D Poisson (narrow-band quasi-diagonal, tmt_sym class);
+  * extremely narrow band (torsion1/minsurfo/dixmaanl class);
+  * unstructured random pattern (cage15/F1 class — no band);
+  * dense control (dense_1000).
+"""
+from repro.core import csrc
+
+
+def matrices(small: bool = False):
+    scale = 4 if small else 1
+    out = [
+        ("poisson_64x64", lambda: csrc.poisson2d(64 // scale)),
+        ("narrow_band1", lambda: csrc.fem_band(20000 // scale, 1, seed=1)),
+        ("fem_band_w16", lambda: csrc.fem_band(20000 // scale, 16, seed=2)),
+        ("fem_band_w64", lambda: csrc.fem_band(8000 // scale, 64, seed=3)),
+        ("fem_band_w64_sym", lambda: csrc.fem_band(
+            8000 // scale, 64, seed=3, numeric_symmetric=True)),
+        ("random_nnz6", lambda: csrc.random_symmetric_pattern(
+            8000 // scale, 6, seed=4)),
+        ("dense_1000", lambda: csrc.dense_matrix(1000 // scale, seed=5)),
+    ]
+    return out

@@ -1,0 +1,23 @@
+"""Benchmark timing helpers."""
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 3, repeats: int = 10) -> float:
+    """Median wall-clock seconds per call of a jitted fn."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

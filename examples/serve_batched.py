@@ -1,0 +1,45 @@
+"""Batched serving demo: continuous batching over a small model with
+per-slot KV caches, greedy + temperature sampling.
+
+  PYTHONPATH=src python examples/serve_batched.py --requests 6
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models.transformer import build_model
+from repro.serve.engine import ServingEngine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, max_slots=3, max_len=128,
+                           eos_id=1)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        engine.submit(Request(
+            uid=i, prompt=rng.integers(2, cfg.vocab, 4 + i % 5),
+            max_new_tokens=args.max_new,
+            temperature=0.0 if i % 2 == 0 else 0.8))
+    done = engine.run_until_drained()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.out_tokens) for r in done)
+    print(f"served {len(done)} requests / {total} tokens in {dt:.2f}s")
+    for r in sorted(done, key=lambda r: r.uid):
+        print(f"  req{r.uid}: {r.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

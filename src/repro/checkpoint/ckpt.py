@@ -1,0 +1,149 @@
+"""Sharded, atomic, resumable checkpoints (no orbax in the container).
+
+Layout:
+  <dir>/step_000123.tmp-<nonce>/     (written, then atomically renamed)
+      manifest.json                  (treedef, shapes, dtypes, step)
+      arrays.npz                     (one entry per leaf, keyed by path)
+  <dir>/step_000123/
+
+Properties required at fleet scale and tested here:
+  * atomicity — a crash mid-write never corrupts the latest checkpoint
+    (tmp dir + rename; readers only see complete renames);
+  * keep-k garbage collection;
+  * restore-to-template resharding — arrays are device_put against the
+    target sharding at load, so restarts may use a different mesh/device
+    count (elastic restart);
+  * async save — the host gather + write runs on a worker thread while
+    training continues (fault tolerance without step-time hiccups).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import uuid
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    keys = []
+    for path, _leaf in flat:
+        parts = []
+        for e in path:
+            if hasattr(e, "key"):
+                parts.append(str(e.key))
+            elif hasattr(e, "idx"):
+                parts.append(str(e.idx))
+            elif hasattr(e, "name"):
+                parts.append(str(e.name))
+            else:
+                parts.append(str(e))
+        keys.append("/".join(parts))
+    return keys, [l for _, l in flat]
+
+
+def save(directory: str, step: int, tree, keep: int = 3,
+         blocking: bool = True) -> str:
+    os.makedirs(directory, exist_ok=True)
+    keys, leaves = _paths(tree)
+    # gather to host (works for sharded arrays: device_get assembles)
+    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+
+    def write():
+        tmp = os.path.join(directory, f"step_{step:09d}.tmp-{uuid.uuid4().hex[:8]}")
+        os.makedirs(tmp, exist_ok=True)
+        arrays = {f"a{i}": a for i, a in enumerate(host_leaves)}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "keys": keys,
+            "dtypes": [str(a.dtype) for a in host_leaves],
+            "shapes": [list(a.shape) for a in host_leaves],
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = os.path.join(directory, f"step_{step:09d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(directory, keep)
+
+    if blocking:
+        write()
+    else:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    return os.path.join(directory, f"step_{step:09d}")
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(all_steps(directory))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:09d}"),
+                      ignore_errors=True)
+    # drop orphaned tmp dirs (crashed writers)
+    for d in os.listdir(directory):
+        if ".tmp-" in d:
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def all_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for d in os.listdir(directory):
+        m = _STEP_RE.match(d)
+        if m and os.path.exists(os.path.join(directory, d, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: int, template) -> Any:
+    """Restore into the structure (and shardings) of ``template``.
+
+    Template leaves may be jax.Arrays (their sharding is reused — elastic
+    resharding) or ShapeDtypeStructs.
+    """
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    keys, leaves = _paths(template)
+
+    def fix_dtype(a, name):
+        # npz round-trips ml_dtypes (bfloat16 etc.) as void — view back
+        if a.dtype.kind == "V":
+            import ml_dtypes
+            a = a.view(np.dtype(getattr(ml_dtypes, name)))
+        return a
+
+    by_key = {k: fix_dtype(data[f"a{i}"], manifest["dtypes"][i])
+              for i, k in enumerate(manifest["keys"])}
+    out = []
+    for k, tmpl in zip(keys, leaves):
+        if k not in by_key:
+            raise KeyError(f"checkpoint missing leaf {k!r}")
+        a = by_key[k]
+        if tuple(a.shape) != tuple(tmpl.shape):
+            raise ValueError(
+                f"shape mismatch for {k}: ckpt {a.shape} vs {tmpl.shape}")
+        sharding = getattr(tmpl, "sharding", None)
+        arr = jax.device_put(a.astype(tmpl.dtype), sharding) \
+            if sharding is not None else jax.device_put(a.astype(tmpl.dtype))
+        out.append(arr)
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, out)

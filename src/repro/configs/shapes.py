@@ -1,0 +1,76 @@
+"""Assigned input shapes × architecture support matrix.
+
+Four shapes per arch (40 cells).  ``train_*`` lowers train_step;
+``prefill_*`` lowers a full-sequence forward; ``decode_*``/``long_*`` lower
+serve_step (one new token against a KV cache of seq_len).  long_500k needs
+sub-quadratic attention: only the SSM/hybrid archs run it (the 8 pure
+full-attention archs record a documented skip — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: InputShape
+                   ) -> Tuple[bool, str]:
+    """Whether (arch × shape) is a runnable cell, with the reason if not."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch: unbounded KV/state at "
+                       "524k — sub-quadratic attention required (skip per "
+                       "assignment; see DESIGN.md §4)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, object]:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step —
+    weak-type-correct, shardable, no device allocation.
+
+    train  -> {"inputs", "targets"}
+    prefill-> {"inputs"}
+    decode -> {"inputs", "state": <decode-state pytree>}
+    """
+    b, s = shape.batch, shape.seq
+    tok = jnp.int32
+    if cfg.input_mode == "tokens":
+        def inp(batch, seq):
+            return jax.ShapeDtypeStruct((batch, seq), tok)
+    else:
+        def inp(batch, seq):
+            return jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                        cfg.compute_dtype)
+
+    if shape.kind == "train":
+        return {"inputs": inp(b, s),
+                "targets": jax.ShapeDtypeStruct((b, s), tok)}
+    if shape.kind == "prefill":
+        return {"inputs": inp(b, s)}
+    if shape.kind == "decode":
+        from repro.models.transformer import build_model
+        model = build_model(cfg)
+        state = jax.eval_shape(
+            lambda: model.init_decode_state(b, s))
+        # a cache of seq_len tokens already filled, decoding token seq_len+1
+        return {"inputs": inp(b, 1), "state": state}
+    raise ValueError(shape.kind)

@@ -1,0 +1,124 @@
+"""The colorful partitioning method (paper §3.2).
+
+Rows are vertices of the conflict graph G[A]; two rows conflict when
+processing them concurrently could write the same y position:
+
+  * direct conflict:  row j > i has a stored lower entry in column i
+    (thread owning j scatters into y[i] while thread owning i writes y[i]);
+  * indirect conflict: rows u, v share a neighbor in the direct graph
+    (both scatter into the same third row's y slot).
+
+A greedy sequential coloring of G[A] yields conflict-free color classes; the
+product is computed color-by-color (serial across colors, parallel inside).
+
+On TPU this maps to: rows of one color form a batch whose scatter indices are
+pairwise disjoint, so the scatter is a permutation-write (safe segment_sum /
+at[].add with unique indices — no read-modify-write ordering needed).  The
+paper's locality criticism (variable-size strides inside a color) applies
+directly to VMEM tiling and is reproduced in our benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from .csrc import CSRC, row_of_slot
+
+
+@dataclasses.dataclass(frozen=True)
+class Coloring:
+    color_of_row: np.ndarray     # (n,) color id per row
+    num_colors: int
+    # rows grouped by color, concatenated; color c owns
+    # rows_by_color[color_ptr[c]:color_ptr[c+1]]
+    rows_by_color: np.ndarray
+    color_ptr: np.ndarray
+
+    def rows(self, c: int) -> np.ndarray:
+        return self.rows_by_color[self.color_ptr[c]:self.color_ptr[c + 1]]
+
+
+def direct_adjacency(M: CSRC) -> List[np.ndarray]:
+    """Adjacency lists of the *direct* conflict graph: i ~ ja[p] for every
+    stored lower slot p of row i (symmetric)."""
+    n = M.n
+    ros = row_of_slot(M)
+    ja = np.asarray(M.ja)
+    adj: List[List[int]] = [[] for _ in range(n)]
+    for i, j in zip(ros.tolist(), ja.tolist()):
+        adj[i].append(j)
+        adj[j].append(i)
+    return [np.unique(np.asarray(a, dtype=np.int64)) for a in adj]
+
+
+def color_rows(M: CSRC, include_indirect: bool = True) -> Coloring:
+    """Greedy (first-fit) sequential coloring [Coleman–Moré].
+
+    With ``include_indirect`` the conflict graph is G'^2 restricted to direct
+    edges' 2-hop closure (paper: u,v indirectly conflict when their direct
+    neighborhoods intersect) — i.e. distance-2 coloring of the direct graph.
+    """
+    n = M.n
+    adj = direct_adjacency(M)
+    color = np.full(n, -1, dtype=np.int64)
+    max_color = 0
+    scratch = np.zeros(1, dtype=np.int64)
+    for v in range(n):
+        # collect colors of direct (and optionally 2-hop) neighbors
+        forbidden = set()
+        for u in adj[v]:
+            cu = color[u]
+            if cu >= 0:
+                forbidden.add(int(cu))
+            if include_indirect:
+                for w in adj[u]:
+                    cw = color[w]
+                    if cw >= 0 and w != v:
+                        forbidden.add(int(cw))
+        c = 0
+        while c in forbidden:
+            c += 1
+        color[v] = c
+        max_color = max(max_color, c + 1)
+    del scratch
+    order = np.argsort(color, kind="stable")
+    counts = np.bincount(color, minlength=max_color)
+    ptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    return Coloring(color_of_row=color, num_colors=max_color,
+                    rows_by_color=order.astype(np.int64), color_ptr=ptr)
+
+
+def verify_coloring(M: CSRC, col: Coloring) -> bool:
+    """Property check: inside one color no two rows may share a write target
+    (each row writes y[row] and y[ja[slots of row]])."""
+    n = M.n
+    ia = np.asarray(M.ia)
+    ja = np.asarray(M.ja)
+    for c in range(col.num_colors):
+        seen = set()
+        for r in col.rows(c).tolist():
+            targets = [r] + ja[ia[r]:ia[r + 1]].tolist()
+            for t in targets:
+                if t in seen:
+                    return False
+                seen.add(t)
+    return True
+
+
+def conflict_stats(M: CSRC) -> dict:
+    """Direct/indirect conflict counts (paper Fig. 3c reports 12 direct and
+    7 indirect for its 9×9 example)."""
+    adj = direct_adjacency(M)
+    n = M.n
+    direct = sum(len(a) for a in adj) // 2
+    indirect = 0
+    for v in range(n):
+        two_hop = set()
+        for u in adj[v]:
+            for w in adj[u]:
+                if w > v and w not in adj[v].tolist():
+                    two_hop.add(int(w))
+        indirect += len(two_hop)
+    return {"direct": int(direct), "indirect": int(indirect)}

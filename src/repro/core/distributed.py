@@ -1,0 +1,241 @@
+"""Distributed CSRC SpMV: the paper's partitioning strategies on a JAX mesh.
+
+The paper parallelizes over OpenMP threads on 2–4 cores; we parallelize over
+mesh shards (chips).  The race on the destination vector is identical — the
+scatter term writes rows owned by other shards — and each of the paper's
+accumulation strategies maps onto one collective pattern (DESIGN.md §2):
+
+  strategy='allreduce'       paper: local buffers + *all-in-one* accumulation.
+      Every shard owns an nnz-balanced contiguous slot range, computes a
+      full-length partial y, and the partials are summed with psum
+      (all-reduce).  Output replicated.  Collective bytes: Θ(n) per shard.
+
+  strategy='reduce_scatter'  paper: *per buffer / interval* accumulation.
+      Same partials; psum_scatter sums them AND splits y into p equal
+      intervals, one per shard — the paper's interval boundaries realized by
+      the collective's shard boundaries.  Output row-sharded.  Θ(n/p) bytes.
+
+  strategy='halo'            paper: *effective* accumulation.
+      Row-block shards; because CSRC stores the lower triangle of a band
+      matrix, a shard's effective write range is its own rows plus a window
+      of at most `band` rows below — exchanged with the left neighbor via
+      collective_permute.  Θ(band) bytes per shard, independent of n.
+      This is the strategy the paper found best (80–93% of matrices), and
+      on TPU the gap widens: ICI halo exchange is point-to-point.
+
+The colorful method (paper §3.2) is a shared-memory construct (conflict-free
+concurrent writes to one y); across distributed memories every write is a
+message regardless of conflicts, so it degenerates to one of the above.  It
+is provided on-device in kernels/ (see ref.colorful_spmv) and benchmarked
+single-chip, as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from .csrc import CSRC, bandwidth, row_of_slot
+from .partition import partition_rows_by_nnz, RowPartition
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedSlots:
+    """Slot arrays split into p nnz-balanced groups, padded to equal length
+    and stacked on a leading shard axis."""
+    row_idx: jnp.ndarray     # (p, S) global row of each slot (pad: 0)
+    ja: jnp.ndarray          # (p, S) global col             (pad: 0)
+    al: jnp.ndarray          # (p, S)                        (pad: 0.0)
+    au: jnp.ndarray          # (p, S)
+    ad_shard: jnp.ndarray    # (p, n) diagonal owned by shard (zero elsewhere)
+    part: RowPartition
+
+
+def shard_slots(M: CSRC, p: int) -> ShardedSlots:
+    part = partition_rows_by_nnz(M, p)
+    ros = row_of_slot(M)
+    ja = np.asarray(M.ja)
+    al = np.asarray(M.al)
+    au = np.asarray(M.au)
+    ia = np.asarray(M.ia)
+    spans = [(int(ia[part.starts[t]]), int(ia[part.starts[t + 1]]))
+             for t in range(p)]
+    smax = max(1, max(e - s for s, e in spans))
+    smax = _round_up(smax, 128)
+
+    def padded(arr, fill, dtype):
+        out = np.full((p, smax), fill, dtype=dtype)
+        for t, (s, e) in enumerate(spans):
+            out[t, :e - s] = arr[s:e]
+        return jnp.asarray(out)
+
+    ad_shard = np.zeros((p, M.n), dtype=np.float32)
+    for t in range(p):
+        r0, r1 = part.rows(t)
+        ad_shard[t, r0:r1] = np.asarray(M.ad)[r0:r1]
+
+    return ShardedSlots(
+        row_idx=padded(ros, 0, np.int32),
+        ja=padded(ja, 0, np.int32),
+        al=padded(al, 0.0, np.float32),
+        au=padded(au, 0.0, np.float32),
+        ad_shard=jnp.asarray(ad_shard),
+        part=part,
+    )
+
+
+def build_spmv_allreduce(M: CSRC, mesh: Mesh, axis: str = "rows",
+                         scatter_output: bool = False) -> Callable:
+    """'allreduce' (all-in-one) and 'reduce_scatter' (per-buffer/interval)
+    strategies.  x replicated; output replicated or row-sharded."""
+    p = mesh.shape[axis]
+    ss = shard_slots(M, p)
+    n = M.n
+    n_pad = _round_up(n, p)
+
+    def local(row_idx, ja, al, au, ad_shard, x):
+        # shard-local partial: the paper's private y buffer
+        y = ad_shard[0] * x
+        y = y + jax.ops.segment_sum(al[0] * x[ja[0]], row_idx[0],
+                                    num_segments=n)
+        y = y + jax.ops.segment_sum(au[0] * x[row_idx[0]], ja[0],
+                                    num_segments=n)
+        if scatter_output:
+            y = jnp.pad(y, (0, n_pad - n))
+            return jax.lax.psum_scatter(y, axis, scatter_dimension=0,
+                                        tiled=True)
+        return jax.lax.psum(y, axis)
+
+    out_spec = P(axis) if scatter_output else P()
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None),) * 4 + (P(axis, None), P()),
+        out_specs=out_spec)
+
+    sharded = jax.device_put(
+        (ss.row_idx, ss.ja, ss.al, ss.au, ss.ad_shard),
+        jax.sharding.NamedSharding(mesh, P(axis, None)))
+
+    @jax.jit
+    def apply(x):
+        return fn(*sharded, x)
+
+    return apply
+
+
+def build_spmv_halo(M: CSRC, mesh: Mesh, axis: str = "rows") -> Callable:
+    """'halo' (effective) strategy: x and y row-sharded; only band-width
+    windows cross shard boundaries (two collective_permutes)."""
+    p = mesh.shape[axis]
+    n = M.n
+    ns = _round_up(-(-n // p), 8)          # rows per shard
+    n_pad = ns * p
+    band = bandwidth(M)
+    h = max(8, _round_up(band, 8))
+    if h > ns:
+        raise ValueError(
+            f"band {band} exceeds shard rows {ns}; halo strategy needs "
+            "band <= n/p (fall back to allreduce/reduce_scatter)")
+
+    # equal-row shard slot arrays with *local* coordinates
+    ros = row_of_slot(M)
+    ja = np.asarray(M.ja)
+    al_np = np.asarray(M.al)
+    au_np = np.asarray(M.au)
+    shard_of_slot = ros // ns
+    counts = np.bincount(shard_of_slot, minlength=p)
+    smax = _round_up(max(1, int(counts.max())), 128)
+    row_loc = np.zeros((p, smax), np.int32)
+    col_rel = np.full((p, smax), ns + h - 1, np.int32)   # inert target
+    al_s = np.zeros((p, smax), np.float32)
+    au_s = np.zeros((p, smax), np.float32)
+    fill = np.zeros(p, np.int64)
+    for idx in np.argsort(shard_of_slot, kind="stable"):
+        t = int(shard_of_slot[idx])
+        q = int(fill[t]); fill[t] += 1
+        row_loc[t, q] = int(ros[idx]) - t * ns
+        col_rel[t, q] = int(ja[idx]) - (t * ns - h)      # in [0, ns+h)
+        al_s[t, q] = al_np[idx]
+        au_s[t, q] = au_np[idx]
+    ad_pad = np.zeros(n_pad, np.float32)
+    ad_pad[:n] = np.asarray(M.ad)
+    ad_sh = ad_pad.reshape(p, ns)
+
+    def local(row_loc, col_rel, al, au, ad, x_own):
+        # x halo from the LEFT neighbor: its tail h rows
+        left_tail = jax.lax.ppermute(
+            x_own[-h:], axis, [(i, (i + 1) % p) for i in range(p)])
+        x_ext = jnp.concatenate([left_tail, x_own])      # rows [r0-h, r1)
+        row_loc, col_rel = row_loc[0], col_rel[0]
+        al, au, ad = al[0], au[0], ad[0]
+        y_ext = jnp.zeros((ns + h,), jnp.float32)
+        y_ext = y_ext.at[h + row_loc].add(al * x_ext[col_rel])
+        y_ext = y_ext.at[col_rel].add(au * x_ext[h + row_loc])
+        y_ext = y_ext.at[h:].add(ad * x_own)
+        # y halo to the LEFT neighbor (it owns rows [r0-h, r0))
+        from_right = jax.lax.ppermute(
+            y_ext[:h], axis, [(i, (i - 1) % p) for i in range(p)])
+        y_own = y_ext[h:].at[-h:].add(from_right)
+        return y_own
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None),) * 5 + (P(axis),),
+        out_specs=P(axis))
+
+    sharded = jax.device_put(
+        (jnp.asarray(row_loc), jnp.asarray(col_rel), jnp.asarray(al_s),
+         jnp.asarray(au_s), jnp.asarray(ad_sh)),
+        jax.sharding.NamedSharding(mesh, P(axis, None)))
+    x_sharding = jax.sharding.NamedSharding(mesh, P(axis))
+
+    @jax.jit
+    def apply(x):
+        x_pad = jnp.pad(x, (0, n_pad - n))
+        x_pad = jax.lax.with_sharding_constraint(x_pad, x_sharding)
+        y = fn(*sharded, x_pad)
+        return y[:n]
+
+    return apply
+
+
+STRATEGIES = ("allreduce", "reduce_scatter", "halo")
+
+
+def build_sharded_spmv(M: CSRC, mesh: Mesh, axis: str = "rows",
+                       strategy: str = "auto") -> Callable:
+    """Factory: y_fn(x) computing A·x across the mesh axis."""
+    if strategy == "auto":
+        p = mesh.shape[axis]
+        ns = -(-M.n // p)
+        strategy = "halo" if bandwidth(M) <= max(8, ns) else "reduce_scatter"
+    if strategy == "allreduce":
+        return build_spmv_allreduce(M, mesh, axis, scatter_output=False)
+    if strategy == "reduce_scatter":
+        return build_spmv_allreduce(M, mesh, axis, scatter_output=True)
+    if strategy == "halo":
+        return build_spmv_halo(M, mesh, axis)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def collective_bytes_estimate(M: CSRC, p: int, strategy: str) -> int:
+    """Napkin model used by §Roofline and the benchmarks: bytes crossing
+    links per shard per product."""
+    n, band = M.n, bandwidth(M)
+    if strategy == "allreduce":
+        return 2 * 4 * n * (p - 1) // p          # ring all-reduce
+    if strategy == "reduce_scatter":
+        return 4 * n * (p - 1) // p
+    if strategy == "halo":
+        return 2 * 4 * max(8, band)              # x halo + y halo
+    raise ValueError(strategy)

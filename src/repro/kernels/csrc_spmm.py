@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: block-ELL CSRC sparse matrix × multi-vector (SpMM).
+
+Generalizes csrc_spmv.py to B right-hand sides (batched serving / block
+Krylov solvers).  The one-hot contractions become genuine MXU matmuls —
+(S, W) one-hot @ (W, B) window — so arithmetic intensity rises with B and
+the kernel leaves the bandwidth-bound regime the paper analyzes for B=1
+(bytes/slot amortize across the RHS block: the CSRC index-halving matters
+*less* as B grows, quantified in benchmarks).
+
+Same layout/window/accumulation scheme as csrc_spmv (see that module);
+x: (n, B), output (n, B) via per-tile (W, B) windows + overlap-add.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.blockell import BlockEll
+
+
+def _kernel(vals_l_ref, vals_u_ref, col_ref, row_ref, ad_ref, x_ref,
+            out_ref, *, tm: int, w_pad: int, nrhs: int,
+            num_symmetric: bool):
+    b = pl.program_id(0)
+    kt = pl.program_id(1)
+    start = (b + 1) * tm
+    xw = jax.lax.dynamic_slice(x_ref[...], (start, 0), (w_pad, nrhs))
+
+    cols = col_ref[0]
+    rows = row_ref[0]
+    vl = vals_l_ref[0]
+    vu = vl if num_symmetric else vals_u_ref[0]
+    ks = cols.shape[0]
+    s = ks * 128
+
+    iota_w = jax.lax.broadcasted_iota(jnp.int32, (ks, 128, w_pad), 2)
+    oh_cols = (cols[..., None] == iota_w).astype(vl.dtype).reshape(s, w_pad)
+    oh_rows = (rows[..., None] == iota_w).astype(vl.dtype).reshape(s, w_pad)
+
+    xg = jax.lax.dot_general(oh_cols, xw, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (S,B)
+    xi = jax.lax.dot_general(oh_rows, xw, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    c_rows = vl.reshape(s, 1) * xg      # al[p]·x[ja[p],:] -> rows
+    c_cols = vu.reshape(s, 1) * xi      # au[p]·x[i,:]     -> cols
+
+    win = jax.lax.dot_general(oh_rows, c_rows, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    win = win + jax.lax.dot_general(oh_cols, c_cols,
+                                    (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+
+    @pl.when(kt == 0)
+    def _init():
+        diag = ad_ref[0][:, None] * jax.lax.dynamic_slice(
+            xw, (w_pad - tm, 0), (tm, nrhs))
+        base = jnp.zeros((w_pad, nrhs), jnp.float32)
+        base = jax.lax.dynamic_update_slice(base, diag, (w_pad - tm, 0))
+        out_ref[0] = base + win
+
+    @pl.when(kt != 0)
+    def _acc():
+        out_ref[0] = out_ref[0] + win
+
+
+def blockell_spmm(pack: BlockEll, X: jnp.ndarray,
+                  k_step_sublanes: int = 8,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Y = A @ X for X (n, B); returns (n, B)."""
+    n, nrhs = X.shape
+    assert n == pack.n
+    nt, s = pack.vals_l.shape
+    ks = k_step_sublanes
+    assert s % (ks * 128) == 0
+    nk = s // (ks * 128)
+    x_full = jnp.pad(X.astype(jnp.float32),
+                     ((pack.w_pad, pack.n_pad - pack.n), (0, 0)))
+
+    def reshape3(a):
+        return a.reshape(nt, nk * ks, 128)
+
+    slot_spec = pl.BlockSpec((1, ks, 128), lambda b, kt: (b, kt, 0))
+    wins = pl.pallas_call(
+        functools.partial(_kernel, tm=pack.tm, w_pad=pack.w_pad,
+                          nrhs=nrhs, num_symmetric=pack.num_symmetric),
+        grid=(nt, nk),
+        in_specs=[
+            slot_spec, slot_spec, slot_spec, slot_spec,
+            pl.BlockSpec((1, pack.tm), lambda b, kt: (b, 0)),
+            pl.BlockSpec(x_full.shape, lambda b, kt: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, pack.w_pad, nrhs),
+                               lambda b, kt: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt, pack.w_pad, nrhs),
+                                       jnp.float32),
+        interpret=interpret,
+    )(reshape3(pack.vals_l), reshape3(pack.vals_u),
+      reshape3(pack.col_local), reshape3(pack.row_in_win),
+      pack.ad, x_full)
+
+    # overlap-add per RHS column (windows are (NT, W, B))
+    tm, w = pack.tm, pack.w_pad
+    r = w // tm
+    y = jnp.zeros((pack.w_pad + pack.n_pad + w, nrhs), jnp.float32)
+    for g in range(r):
+        group = wins[g::r]
+        ng = group.shape[0]
+        if ng == 0:
+            continue
+        flat = group.reshape(ng * w, nrhs)
+        startg = (g + 1) * tm
+        y = jax.lax.dynamic_update_slice(
+            y, jax.lax.dynamic_slice(y, (startg, 0), (ng * w, nrhs))
+            + flat, (startg, 0))
+    return y[pack.w_pad:pack.w_pad + pack.n]

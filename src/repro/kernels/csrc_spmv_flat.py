@@ -1,0 +1,198 @@
+"""Flattened-grid variant of the block-ELL CSRC SpMV kernel.
+
+The rectangular (NT, NK) grid of csrc_spmv.py pads every row tile to the
+slot count of the densest tile — skewed matrices waste bandwidth on ELL
+padding (pad_ratio).  Here each row tile gets only the k-steps it needs:
+
+  * slots are packed flat as (total_ksteps, KS, 128);
+  * the grid is 1-D over k-steps; each program learns its row tile from a
+    scalar-prefetched ``tile_of_step`` array (pltpu.PrefetchScalarGridSpec
+    — the index maps consume the prefetch ref);
+  * programs of one row tile are consecutive, so the revisited-output
+    window accumulation works exactly as in the rectangular kernel, with
+    "first step of my tile" read from a second prefetched flag array.
+
+Cross-tile padding drops from (max_b nk_b)·NT to Σ_b nk_b k-steps — on a
+skewed FEM matrix this is the difference between pad_ratio ~3 and ~1.1
+(see tests and EXPERIMENTS.md §Perf kernel table).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.csrc import CSRC, bandwidth, row_of_slot
+from repro.core.blockell import _round_up, pad_x, overlap_add
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatBlockEll:
+    n: int
+    tm: int
+    nt: int
+    w_pad: int
+    total_steps: int            # Σ_b nk_b  (k-steps overall)
+    ks: int                     # sublanes per k-step
+    vals_l: jnp.ndarray         # (total, KS, 128)
+    vals_u: jnp.ndarray
+    col_local: jnp.ndarray      # (total, KS, 128)
+    row_in_win: jnp.ndarray
+    ad: jnp.ndarray             # (NT, TM)
+    tile_of_step: jnp.ndarray   # (total,) int32 — row tile of each k-step
+    first_of_tile: jnp.ndarray  # (total,) int32 — 1 on a tile's first step
+    num_symmetric: bool
+    pad_ratio: float
+
+    @property
+    def n_pad(self) -> int:
+        return self.nt * self.tm
+
+    def streamed_bytes(self) -> int:
+        b = self.vals_l.size * self.vals_l.dtype.itemsize
+        if not self.num_symmetric:
+            b += self.vals_u.size * self.vals_u.dtype.itemsize
+        b += self.col_local.size * self.col_local.dtype.itemsize
+        b += self.row_in_win.size * self.row_in_win.dtype.itemsize
+        b += self.ad.size * self.ad.dtype.itemsize
+        b += (self.n_pad + self.w_pad) * 4
+        b += self.nt * self.w_pad * 4
+        return b
+
+
+def pack_flat(M: CSRC, tm: int = 128, ks: int = 8, w_cap: int = 4096,
+              index_dtype=jnp.int32) -> FlatBlockEll:
+    """Per-tile-exact packing (no cross-tile ELL padding)."""
+    assert M.is_square
+    n = M.n
+    band = bandwidth(M)
+    w_pad = _round_up(tm + band, max(128, tm))
+    if w_pad > w_cap:
+        raise ValueError(f"window {w_pad} > cap {w_cap}")
+    nt = max(1, -(-n // tm))
+    step = ks * 128
+    ros = row_of_slot(M)
+    ja = np.asarray(M.ja)
+    al = np.asarray(M.al)
+    au = np.asarray(M.au)
+    tile_of_slot = ros // tm
+    counts = np.bincount(tile_of_slot, minlength=nt)
+    nk = np.maximum(1, -(-counts // step))          # k-steps per tile
+    total = int(nk.sum())
+
+    vals_l = np.zeros((total, step), np.float32)
+    vals_u = np.zeros((total, step), np.float32)
+    col_local = np.full((total, step), w_pad, np.int32)
+    row_in_win = np.full((total, step), w_pad - 1, np.int32)
+    tile_of_step = np.repeat(np.arange(nt, dtype=np.int32), nk)
+    first = np.zeros(total, np.int32)
+    starts = np.concatenate([[0], np.cumsum(nk)])[:-1]
+    first[starts] = 1
+
+    win_lo = (np.arange(nt) + 1) * tm - w_pad
+    fill = np.zeros(nt, np.int64)
+    for idx in np.argsort(tile_of_slot, kind="stable"):
+        t = int(tile_of_slot[idx])
+        q = int(fill[t]); fill[t] += 1
+        j = int(starts[t]) + q // step
+        pos = q % step
+        vals_l[j, pos] = al[idx]
+        vals_u[j, pos] = au[idx]
+        col_local[j, pos] = int(ja[idx]) - int(win_lo[t])
+        row_in_win[j, pos] = int(ros[idx]) - int(win_lo[t])
+
+    ad = np.zeros((nt, tm), np.float32)
+    ad.reshape(-1)[:n] = np.asarray(M.ad)
+    k = max(1, int(ja.shape[0]))
+    return FlatBlockEll(
+        n=n, tm=tm, nt=nt, w_pad=w_pad, total_steps=total, ks=ks,
+        vals_l=jnp.asarray(vals_l.reshape(total, ks, 128)),
+        vals_u=jnp.asarray((vals_l if M.numerically_symmetric else vals_u
+                            ).reshape(total, ks, 128)),
+        col_local=jnp.asarray(col_local.reshape(total, ks, 128),
+                              dtype=index_dtype),
+        row_in_win=jnp.asarray(row_in_win.reshape(total, ks, 128),
+                               dtype=index_dtype),
+        ad=jnp.asarray(ad),
+        tile_of_step=jnp.asarray(tile_of_step),
+        first_of_tile=jnp.asarray(first),
+        num_symmetric=bool(M.numerically_symmetric),
+        pad_ratio=float(total * step) / k,
+    )
+
+
+def _kernel(tile_ref, first_ref, vals_l_ref, vals_u_ref, col_ref, row_ref,
+            ad_ref, x_ref, out_ref, *, tm: int, w_pad: int,
+            num_symmetric: bool):
+    j = pl.program_id(0)
+    b = tile_ref[j]
+    start = (b + 1) * tm
+    xw = jax.lax.dynamic_slice(x_ref[...], (start,), (w_pad,))
+
+    cols = col_ref[0].astype(jnp.int32)
+    rows = row_ref[0].astype(jnp.int32)
+    vl = vals_l_ref[0]
+    vu = vl if num_symmetric else vals_u_ref[0]
+    ks = cols.shape[0]
+    s = ks * 128
+    iota_w = jax.lax.broadcasted_iota(jnp.int32, (ks, 128, w_pad), 2)
+    oh_cols = (cols[..., None] == iota_w).astype(vl.dtype).reshape(s, w_pad)
+    oh_rows = (rows[..., None] == iota_w).astype(vl.dtype).reshape(s, w_pad)
+    xg = jax.lax.dot_general(oh_cols, xw[:, None], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)[:, 0]
+    xi = jax.lax.dot_general(oh_rows, xw[:, None], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)[:, 0]
+    c_rows = vl.reshape(-1) * xg
+    c_cols = vu.reshape(-1) * xi
+    win = jax.lax.dot_general(oh_rows, c_rows[:, None],
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)[:, 0]
+    win = win + jax.lax.dot_general(oh_cols, c_cols[:, None],
+                                    (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)[:, 0]
+
+    @pl.when(first_ref[j] == 1)
+    def _init():
+        diag = ad_ref[0] * jax.lax.dynamic_slice(xw, (w_pad - tm,), (tm,))
+        base = jnp.zeros((w_pad,), jnp.float32)
+        base = jax.lax.dynamic_update_slice(base, diag, (w_pad - tm,))
+        out_ref[0] = base + win
+
+    @pl.when(first_ref[j] != 1)
+    def _acc():
+        out_ref[0] = out_ref[0] + win
+
+
+def flat_spmv(pack: FlatBlockEll, x: jnp.ndarray,
+              interpret: bool = True) -> jnp.ndarray:
+    x_full = jnp.pad(x.astype(jnp.float32),
+                     (pack.w_pad, pack.n_pad - pack.n))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(pack.total_steps,),
+        in_specs=[
+            pl.BlockSpec((1, pack.ks, 128), lambda j, tile, first: (j, 0, 0)),
+            pl.BlockSpec((1, pack.ks, 128), lambda j, tile, first: (j, 0, 0)),
+            pl.BlockSpec((1, pack.ks, 128), lambda j, tile, first: (j, 0, 0)),
+            pl.BlockSpec((1, pack.ks, 128), lambda j, tile, first: (j, 0, 0)),
+            pl.BlockSpec((1, pack.tm), lambda j, tile, first: (tile[j], 0)),
+            pl.BlockSpec(x_full.shape, lambda j, tile, first: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, pack.w_pad),
+                               lambda j, tile, first: (tile[j], 0)),
+    )
+    wins = pl.pallas_call(
+        functools.partial(_kernel, tm=pack.tm, w_pad=pack.w_pad,
+                          num_symmetric=pack.num_symmetric),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((pack.nt, pack.w_pad), jnp.float32),
+        interpret=interpret,
+    )(pack.tile_of_step, pack.first_of_tile,
+      pack.vals_l, pack.vals_u, pack.col_local, pack.row_in_win,
+      pack.ad, x_full)
+    return overlap_add(pack, wins)

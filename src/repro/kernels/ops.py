@@ -1,0 +1,92 @@
+"""Public jit'd entry points for the CSRC SpMV kernels.
+
+``spmv(M, x)`` picks the best available path:
+
+  * block-ELL Pallas kernel when the matrix is banded enough to window
+    (interpret-mode on CPU, compiled on TPU);
+  * segment-sum jnp path otherwise (the paper's finding: unbanded matrices
+    defeat locality strategies — cage15/F1 analogue).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csrc import CSRC
+from repro.core import blockell
+from . import ref
+from . import csrc_spmv as kernel_mod
+
+
+class SpmvOperator:
+    """A prepared SpMV y = A·x for repeated application (iterative solvers).
+
+    Packs once, jits once; call like a function.  ``path`` is one of
+    'auto' | 'kernel' | 'segment' | 'colorful'.
+    """
+
+    def __init__(self, M: CSRC, path: str = "auto", tm: int = 128,
+                 w_cap: int = 4096, interpret: bool = True,
+                 coloring=None):
+        self.M = M
+        self.n, self.m = M.n, M.m
+        self.pack = None
+        self.path = path
+        if path in ("auto", "kernel") and M.is_square:
+            try:
+                self.pack = blockell.pack(M, tm=tm, w_cap=w_cap)
+                self.path = "kernel"
+            except ValueError:
+                if path == "kernel":
+                    raise
+                self.path = "segment"
+        elif path == "colorful":
+            from repro.core.coloring import color_rows
+            self.coloring = coloring or color_rows(M)
+        else:
+            self.path = "segment" if path == "auto" else path
+
+        if self.path == "kernel":
+            p = self.pack
+            self._fn = jax.jit(functools.partial(
+                kernel_mod.blockell_spmv, p, interpret=interpret))
+        elif self.path == "segment":
+            self._fn = jax.jit(lambda x: ref.csrc_spmv(M, x))
+        elif self.path == "colorful":
+            col = self.coloring
+            self._fn = jax.jit(lambda x: ref.colorful_spmv(M, x, col))
+        else:
+            raise ValueError(f"unknown path {path}")
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self._fn(x)
+
+    @property
+    def flops_per_call(self) -> int:
+        """Useful flops (paper §4.1): n mul + (nnz-n) fma = 2·nnz - n."""
+        return 2 * self.M.nnz - self.M.n
+
+    @property
+    def bytes_per_call(self) -> int:
+        if self.pack is not None:
+            return self.pack.streamed_bytes()
+        return self.M.working_set_bytes()
+
+
+def spmv(M: CSRC, x: jnp.ndarray, path: str = "auto",
+         interpret: bool = True) -> jnp.ndarray:
+    """One-shot convenience wrapper."""
+    return SpmvOperator(M, path=path, interpret=interpret)(x)
+
+
+def spmv_transpose(M: CSRC, x: jnp.ndarray) -> jnp.ndarray:
+    """A^T·x — the paper's O(1) transpose (swap al/au)."""
+    return ref.csrc_spmv_transpose(M, x)
+
+
+def spmm(M: CSRC, X: jnp.ndarray) -> jnp.ndarray:
+    """Multi-RHS product (batched serving path)."""
+    return ref.csrc_spmm(M, X)

@@ -1,0 +1,170 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the correctness references (tests assert_allclose the Pallas
+kernels against them) and the fallback path on backends without Pallas.
+
+The CSRC product (paper Fig. 2a):
+
+    y[i]      = ad[i] * x[i]
+    y[i]     += al[p] * x[ja[p]]     (gather term,   p in row i's slots)
+    y[ja[p]] += au[p] * x[i]         (scatter term,  transpose contribution)
+    y[i]     += ar[q] * x[n + jar[q]]  (rectangular tail, paper Fig. 2b)
+
+The scatter term is realized with ``segment_sum`` — the jnp-native
+"local buffer + accumulate" (every slot's contribution is materialized, then
+summed by destination row), which is exactly the paper's local-buffers
+strategy expressed functionally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csrc import CSRC, row_of_slot
+
+
+def csrc_spmv_arrays(ad, row_idx, ja, al, au, x, n: int,
+                     num_symmetric: bool = False):
+    """CSRC product on raw arrays.
+
+    Args:
+      ad: (n,) diagonal. row_idx: (k,) row of each lower slot (expanded ia).
+      ja: (k,) col of each lower slot. al/au: (k,) values. x: (n,) source.
+      num_symmetric: if True, au is ignored and al is used for the upper
+        half (the paper's one-fewer-load optimization for numerically
+        symmetric matrices).
+    Returns: (n,) y.
+    """
+    upper = al if num_symmetric else au
+    y = ad * x[:n]
+    y = y + jax.ops.segment_sum(al * x[ja], row_idx, num_segments=n)
+    y = y + jax.ops.segment_sum(upper * x[row_idx], ja, num_segments=n)
+    return y
+
+
+def csrc_spmv(M: CSRC, x, use_numeric_symmetry: bool = True):
+    """CSRC product from the container (handles the rectangular tail)."""
+    row_idx = jnp.asarray(row_of_slot(M))
+    num_sym = bool(M.numerically_symmetric and use_numeric_symmetry)
+    y = csrc_spmv_arrays(M.ad, row_idx, M.ja, M.al, M.au, x, M.n, num_sym)
+    if M.jar.shape[0]:
+        ia_r = np.asarray(M.iar)
+        row_r = jnp.asarray(np.repeat(np.arange(M.n, dtype=np.int32),
+                                      np.diff(ia_r)))
+        y = y + jax.ops.segment_sum(M.ar * x[M.n + M.jar], row_r,
+                                    num_segments=M.n)
+    return y
+
+
+def csrc_spmv_transpose(M: CSRC, x):
+    """A^T x — paper §5: swap al and au, same cost."""
+    row_idx = jnp.asarray(row_of_slot(M))
+    return csrc_spmv_arrays(M.ad, row_idx, M.ja, M.au, M.al, x, M.n, False)
+
+
+def csr_spmv_arrays(row_idx, ja, a, x, n: int):
+    """Plain CSR product (the paper's baseline): y[i] += a[p] * x[ja[p]]."""
+    return jax.ops.segment_sum(a * x[ja], row_idx, num_segments=n)
+
+
+def csr_from_csrc(M: CSRC):
+    """Expand a CSRC container to full CSR arrays (baseline construction).
+
+    Returns (row_idx, col_idx, vals) covering diag + both halves + tail,
+    sorted by row — what a standard CSR of the same matrix would store."""
+    ros = row_of_slot(M)
+    ja = np.asarray(M.ja)
+    rows = [np.arange(M.n, dtype=np.int32), ros, ja]
+    cols = [np.arange(M.n, dtype=np.int32), ja, ros]
+    vals = [np.asarray(M.ad), np.asarray(M.al), np.asarray(M.au)]
+    if M.jar.shape[0]:
+        row_r = np.repeat(np.arange(M.n, dtype=np.int32),
+                          np.diff(np.asarray(M.iar)))
+        rows.append(row_r)
+        cols.append(np.asarray(M.jar) + M.n)
+        vals.append(np.asarray(M.ar))
+    rows = np.concatenate(rows)
+    cols = np.concatenate(cols)
+    vals = np.concatenate(vals)
+    order = np.lexsort((cols, rows))
+    return rows[order], cols[order], vals[order]
+
+
+def csrc_spmm(M: CSRC, X, use_numeric_symmetry: bool = True):
+    """Multi-RHS product: X is (m, B), returns (n, B)."""
+    row_idx = jnp.asarray(row_of_slot(M))
+    num_sym = bool(M.numerically_symmetric and use_numeric_symmetry)
+    upper = M.al if num_sym else M.au
+    y = M.ad[:, None] * X[:M.n]
+    y = y + jax.ops.segment_sum(M.al[:, None] * X[M.ja], row_idx,
+                                num_segments=M.n)
+    y = y + jax.ops.segment_sum(upper[:, None] * X[row_idx], M.ja,
+                                num_segments=M.n)
+    if M.jar.shape[0]:
+        row_r = jnp.asarray(np.repeat(np.arange(M.n, dtype=np.int32),
+                                      np.diff(np.asarray(M.iar))))
+        y = y + jax.ops.segment_sum(M.ar[:, None] * X[M.n + M.jar], row_r,
+                                    num_segments=M.n)
+    return y
+
+
+def colorful_spmv(M: CSRC, x, coloring):
+    """The paper's colorful method, expressed in jnp: colors are processed
+    serially; within a color all write targets are pairwise disjoint, so the
+    scatter is a permutation write (`.at[].add` with unique indices — no
+    accumulation ordering needed).
+
+    This mirrors the *algorithmic* structure (serial colors × parallel rows).
+    It is not the fast path on TPU — the benchmark reproduces the paper's
+    locality finding.
+    """
+    n = M.n
+    row_idx = jnp.asarray(row_of_slot(M))
+    ia = np.asarray(M.ia)
+    y = M.ad * x[:n]
+    for c in range(coloring.num_colors):
+        rows = coloring.rows(c)
+        slots = np.concatenate([np.arange(ia[r], ia[r + 1]) for r in rows]
+                               ) if len(rows) else np.zeros(0, np.int64)
+        slots = jnp.asarray(slots.astype(np.int32))
+        if slots.shape[0] == 0:
+            continue
+        r = row_idx[slots]
+        j = M.ja[slots]
+        y = y.at[r].add(M.al[slots] * x[j])
+        y = y.at[j].add(M.au[slots] * x[r])
+    return y
+
+
+def blockell_spmv(pack, x):
+    """Oracle for the block-ELL packed layout (core/blockell.py): the same
+    math as the Pallas kernel without tiling — used to debug pack vs kernel
+    separately.  The independent end-to-end oracle is ``csrc_spmv``."""
+    from repro.core.blockell import pad_x, overlap_add
+    x_full = pad_x(pack, x)
+    starts = (jnp.arange(pack.nt) + 1) * pack.tm
+    idx = starts[:, None] + jnp.arange(pack.w_pad)[None, :]
+    xw = x_full[idx]                                    # (NT, W)
+    col_ok = pack.col_local < pack.w_pad
+    gather_x = jnp.where(
+        col_ok,
+        jnp.take_along_axis(xw, jnp.minimum(pack.col_local, pack.w_pad - 1),
+                            axis=1),
+        0.0)
+    xi = jnp.take_along_axis(xw, pack.row_in_win, axis=1)
+    contrib_rows = pack.vals_l * gather_x               # -> row_in_win
+    contrib_cols = pack.vals_u * xi                     # -> col_local
+
+    def tile_acc(cr, cc, roww, colw):
+        w = jnp.zeros((pack.w_pad,), x_full.dtype)
+        w = w.at[roww].add(cr)
+        w = w.at[jnp.minimum(colw, pack.w_pad - 1)].add(
+            jnp.where(colw < pack.w_pad, cc, 0.0))
+        return w
+
+    wins = jax.vmap(tile_acc)(contrib_rows, contrib_cols,
+                              pack.row_in_win, pack.col_local)
+    wins = wins.at[:, pack.w_pad - pack.tm:].add(
+        pack.ad * xw[:, pack.w_pad - pack.tm:])
+    return overlap_add(pack, wins)

@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell on 512 placeholder devices, record memory/cost/collective data.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count at first init) — do not move it.
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import registry, get_config
+from repro.configs.shapes import SHAPES, cell_supported, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import build_model
+from repro.models.sharding import infer_param_specs, materialize, guard_spec
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import make_train_step, init_train_state
+
+
+def _batch_sharding(sds, mesh):
+    """inputs/targets: batch over (pod, data)."""
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    spec = P(ba) if ba else P()
+    return NamedSharding(mesh, guard_spec(spec, sds.shape, mesh))
+
+
+def _microbatches_for(arch: str, shape) -> int:
+    # grad-accum keeps per-microbatch activations bounded at 4k train
+    return 8 if shape.kind == "train" else 1
+
+
+def _strip_axis(spec_tree, axis: str):
+    """Remove one mesh axis from every PartitionSpec (serving placement:
+    weights replicated over `data`, sharded over `model` only)."""
+    from jax.sharding import PartitionSpec as P
+
+    def strip(spec):
+        out = []
+        for e in spec:
+            if e == axis:
+                out.append(None)
+            elif isinstance(e, tuple):
+                kept = tuple(a for a in e if a != axis)
+                out.append(kept if kept else None)
+            else:
+                out.append(e)
+        return P(*out)
+
+    return jax.tree.map(strip, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               verbose: bool = True, microbatches: int = None,
+               serve_tp_only: bool = False, moe_constrained: bool = False,
+               remat: str = "full", kv_quant: bool = False,
+               bf16_moments: bool = False, ssd_chunked: bool = False):
+    """Lower + compile one cell; returns result record dict.
+
+    The keyword levers are the §Perf hillclimb variants:
+      microbatches    — grad-accum count for train cells (weight re-gather
+                        multiplier under FSDP);
+      serve_tp_only   — decode params replicated over `data`, sharded over
+                        `model` only (weight-stationary serving placement);
+      moe_constrained — explicit EP dispatch shardings (models/moe.py);
+      remat           — activation checkpoint policy for train cells.
+    """
+    import dataclasses
+    from repro.models import moe as moe_mod
+    from repro.models import mamba2 as mamba_mod
+    from repro.models import rwkv6 as rwkv_mod
+    moe_mod.CONSTRAIN_DISPATCH = moe_constrained
+    mamba_mod.CHUNKED_SSD = bool(ssd_chunked)
+    rwkv_mod.CHUNKED_WKV = bool(ssd_chunked)   # one flag: chunked scans
+    cfg = get_config(arch)
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": why}
+
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+    t0 = time.time()
+
+    with mesh:
+        # parameter ShapeDtypeStructs + shardings (no allocation)
+        params_sds = jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0)))
+        param_specs = infer_param_specs(params_sds, mesh)
+        if serve_tp_only and shape.kind != "train":
+            param_specs = _strip_axis(param_specs, "data")
+        param_sh = jax.tree.map(
+            lambda spec, sds: NamedSharding(
+                mesh, guard_spec(spec, sds.shape, mesh)),
+            param_specs, params_sds)
+
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig(
+                moment_dtype="bfloat16" if bf16_moments else "float32")
+            mb = microbatches or _microbatches_for(arch, shape)
+            step_fn = make_train_step(model, opt_cfg, microbatches=mb,
+                                      remat=remat)
+            state_sds = jax.eval_shape(
+                lambda: init_train_state(model, opt_cfg,
+                                         jax.random.PRNGKey(0)))
+            state_sh = type(state_sds)(
+                params=param_sh,
+                opt=type(state_sds.opt)(
+                    step=NamedSharding(mesh, P()),
+                    m=param_sh, v=param_sh),
+                step=NamedSharding(mesh, P()))
+            batch_sds = {"inputs": specs["inputs"],
+                         "targets": specs["targets"]}
+            batch_sh = jax.tree.map(
+                lambda s: _batch_sharding(s, mesh), batch_sds)
+            jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_sds, batch_sds)
+        elif shape.kind == "prefill":
+            def prefill_fn(params, inputs):
+                return model.prefill(params, inputs)
+            in_sh = (param_sh, _batch_sharding(specs["inputs"], mesh))
+            jitted = jax.jit(prefill_fn, in_shardings=in_sh)
+            lowered = jitted.lower(params_sds, specs["inputs"])
+        else:  # decode
+            def serve_step(params, state, inputs):
+                return model.decode_step(params, state, inputs)
+            state_sds = specs["state"]
+            state_specs = model.decode_state_specs(
+                batch_axes=tuple(a for a in ("pod", "data")
+                                 if a in mesh.axis_names),
+                model_size=dict(mesh.shape).get("model", 1))
+            state_sh = materialize(state_specs, state_sds, mesh)
+            in_sh = (param_sh, state_sh,
+                     _batch_sharding(specs["inputs"], mesh))
+            jitted = jax.jit(serve_step, in_shardings=in_sh,
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_sds, state_sds, specs["inputs"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        if hasattr(mem, attr):
+            mem_rec[attr] = int(getattr(mem, attr))
+
+    from repro.roofline.analysis import analyze
+    hlo = compiled.as_text()
+    chips = mesh.devices.size
+    roof = analyze(arch, SHAPES[shape_name], mesh_name, chips, cost, hlo,
+                   cfg)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "cost": {k: v for k, v in cost.items()
+                 if k in ("flops", "bytes accessed")},
+        "memory": mem_rec,
+        "roofline": roof.to_dict(),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: OK "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s, "
+              f"bottleneck={roof.bottleneck})", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    # §Perf hillclimb variant levers
+    ap.add_argument("--variant", default=None,
+                    help="suffix for result files (perf experiments)")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--serve-tp-only", action="store_true")
+    ap.add_argument("--moe-constrained", default=False, nargs="?",
+                    const="constrain",
+                    help="'constrain' or 'hierarchical' dispatch mode")
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--bf16-moments", action="store_true")
+    ap.add_argument("--ssd-chunked", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(registry()) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                suffix = f"__{args.variant}" if args.variant else ""
+                path = os.path.join(
+                    args.out,
+                    f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+                if args.skip_existing and os.path.exists(path):
+                    continue
+                try:
+                    mesh = make_production_mesh(multi_pod=multi)
+                    rec = lower_cell(
+                        arch, shape_name, mesh, mesh_name,
+                        microbatches=args.microbatches,
+                        serve_tp_only=args.serve_tp_only,
+                        moe_constrained=args.moe_constrained,
+                        remat=args.remat, kv_quant=args.kv_quant,
+                        bf16_moments=args.bf16_moments,
+                        ssd_chunked=args.ssd_chunked)
+                    if args.variant:
+                        rec["variant"] = args.variant
+                except Exception as e:  # record the failure, keep going
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "failed",
+                           "error": repr(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                    print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: "
+                          f"FAILED {e!r}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"[dryrun] done, {failures} failures", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

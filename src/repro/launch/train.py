@@ -1,0 +1,67 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+      --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Full configs target the production mesh (--mesh single|multi requires the
+matching device fleet or the dry-run's placeholder devices); --reduced runs
+the family-preserving small config on whatever devices exist (CPU ok).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs.base import get_config
+from repro.data.pipeline import pipeline_for_model
+from repro.models.transformer import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import make_train_step, init_train_state
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "full", "dots"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = build_model(cfg)
+    opt_cfg = AdamWConfig(lr_peak=args.lr, warmup_steps=args.steps // 10,
+                          total_steps=args.steps)
+    state = init_train_state(model, opt_cfg, jax.random.PRNGKey(args.seed))
+    n_params = sum(p.size for p in jax.tree.leaves(state.params))
+    print(f"[train] {cfg.name} ({'reduced' if args.reduced else 'full'}): "
+          f"{n_params:,} params")
+
+    pipe = pipeline_for_model(cfg, global_batch=args.batch,
+                              seq_len=args.seq, seed=args.seed)
+    step_fn = jax.jit(make_train_step(
+        model, opt_cfg, microbatches=args.microbatches, remat=args.remat),
+        donate_argnums=(0,))
+    trainer = Trainer(
+        TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every, log_every=10),
+        step_fn, pipe, state)
+    trainer.run()
+    for h in trainer.history:
+        print(json.dumps(h))
+    if trainer.monitor.flagged:
+        print(f"[train] stragglers flagged: {trainer.monitor.flagged}")
+
+
+if __name__ == "__main__":
+    main()

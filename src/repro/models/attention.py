@@ -1,0 +1,255 @@
+"""Attention: GQA/MQA/MHA with RoPE, qk-norm, biases, sliding window, and a
+chunked (flash-style) softmax for long sequences.
+
+The chunked path scans over KV blocks with running (max, denom, acc) in fp32
+— O(S·chunk) live memory instead of O(S²), required for the 32k prefill
+shapes.  Heads are the TP axis; the per-(B,S) layout keeps batch on the data
+axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, init_dense, rms_norm
+
+NEG_INF = -1e30
+
+
+def init_attn(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              qkv_bias: bool = False, qk_norm: bool = False,
+              dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": init_dense(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": init_dense(ks[1], d_model, n_kv * head_dim, dtype),
+        "wv": init_dense(ks[2], d_model, n_kv * head_dim, dtype),
+        "wo": init_dense(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((head_dim,), jnp.float32)
+    return p
+
+
+def qkv(params, x, n_heads: int, n_kv: int, head_dim: int,
+        positions, rope_theta: float = 10000.0, qk_norm: bool = False):
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv, head_dim)
+    v = v.reshape(b, s, n_kv, head_dim)
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _mask(pos_q, pos_k, window: Optional[int]):
+    """(Sq, Sk) bool mask: causal, optionally sliding-window."""
+    m = pos_q[:, None] >= pos_k[None, :]
+    if window is not None:
+        m &= (pos_q[:, None] - pos_k[None, :]) < window
+    return m
+
+
+def attention(q, k, v, pos_q, pos_k, window: Optional[int] = None,
+              kv_chunk: Optional[int] = None):
+    """Causal grouped attention.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KH, hd); H = KH * G.
+    pos_q: (Sq,), pos_k: (Sk,) absolute positions (drive masking).
+    Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kh, _ = k.shape
+    hd_v = v.shape[-1]          # may differ from hd (MLA absorbed decode)
+    g = h // kh
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, sq, kh, g, hd) * scale
+
+    if kv_chunk is None or sk <= kv_chunk:
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                            preferred_element_type=jnp.float32)
+        scores = jnp.where(_mask(pos_q, pos_k, window)[None, None, None],
+                           scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+        return out.reshape(b, sq, h, hd_v)
+
+    # ---- chunked online-softmax over KV blocks ----
+    assert sk % kv_chunk == 0, "cache length must divide kv_chunk"
+    nchunks = sk // kv_chunk
+    kc = k.reshape(b, nchunks, kv_chunk, kh, hd)
+    vc = v.reshape(b, nchunks, kv_chunk, kh, hd_v)
+    pkc = pos_k.reshape(nchunks, kv_chunk)
+
+    def step(carry, inp):
+        m_run, l_run, acc = carry
+        kb, vb, pb = inp                     # (B,C,KH,hd), (C,)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, kb,
+                       preferred_element_type=jnp.float32)
+        s = jnp.where(_mask(pos_q, pb, window)[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_run = l_run * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(vb.dtype), vb
+                        ).astype(jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l_run, acc), None
+
+    m0 = jnp.full((b, kh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, sq, hd_v), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), pkc))
+    # (b, kh, g, sq, hd_v) -> (b, sq, kh, g, hd_v)
+    out = jnp.transpose(acc / jnp.maximum(l_f, 1e-30)[..., None],
+                        (0, 3, 1, 2, 4))
+    return out.reshape(b, sq, h, hd_v).astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, T, KH, hd)
+    v: jnp.ndarray
+    length: jnp.ndarray   # () int32 — tokens filled
+
+
+def init_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def attn_forward(params, x, positions, *, n_heads, n_kv, head_dim,
+                 rope_theta=10000.0, qk_norm=False, window=None,
+                 kv_chunk=2048):
+    """Training / prefill self-attention over a full sequence."""
+    q, k, v = qkv(params, x, n_heads, n_kv, head_dim, positions,
+                  rope_theta, qk_norm)
+    out = attention(q, k, v, positions, positions, window=window,
+                    kv_chunk=kv_chunk)
+    b, s = x.shape[:2]
+    y = out.reshape(b, s, n_heads * head_dim) @ params["wo"]
+    return y, (k, v)
+
+
+def ring_positions(length, t: int):
+    """Absolute position held by each slot of a ring buffer of size t after
+    writing token ``length`` at slot ``length % t``: the largest p <= length
+    with p ≡ slot (mod t); unwritten slots get +inf so the causal mask
+    removes them."""
+    i = jnp.arange(t)
+    p = length - (length - i) % t
+    return jnp.where(p < 0, jnp.iinfo(jnp.int32).max, p)
+
+
+def attn_decode_ring(params, x, k_cache, v_cache, length, *, n_heads, n_kv,
+                     head_dim, rope_theta=10000.0, qk_norm=False,
+                     window: Optional[int] = None):
+    """Single-token decode against a bounded ring-buffer cache (sliding-
+    window attention; caches stay O(window) for 500k-token decode).
+
+    k_cache/v_cache: (B, t, KH, hd) with t = min(max_len, window).
+    Degenerates to the linear cache when length < t.
+    """
+    b = x.shape[0]
+    pos = length[None]
+    q, k, v = qkv(params, x, n_heads, n_kv, head_dim, pos,
+                  rope_theta, qk_norm)
+    t = k_cache.shape[1]
+    slot = length % t
+    k_new = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+    v_new = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+    pos_k = ring_positions(length, t)
+    out = attention(q, k_new, v_new, pos, pos_k, window=window,
+                    kv_chunk=None)
+    y = out.reshape(b, 1, n_heads * head_dim) @ params["wo"]
+    return y, k_new, v_new
+
+
+def quantize_kv(k):
+    """Per-(token,head) max-abs int8 quantization of a KV tensor
+    (..., head_dim).  Returns (int8 values, bf16 scales)."""
+    amax = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(k.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32)
+            * scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
+def attn_decode_quant(params, x, k_q, v_q, k_s, v_s, length, *, n_heads,
+                      n_kv, head_dim, rope_theta=10000.0, qk_norm=False,
+                      window=None):
+    """Single-token decode against an int8-quantized KV cache (§Perf cell C:
+    halves the dominant decode HBM stream; dequant fuses into the score
+    matmul on TPU).
+
+    k_q/v_q: (B, T, KH, hd) int8; k_s/v_s: (B, T, KH) bf16 scales.
+    """
+    b = x.shape[0]
+    pos = length[None]
+    q, k, v = qkv(params, x, n_heads, n_kv, head_dim, pos,
+                  rope_theta, qk_norm)
+    k_i8, k_sc = quantize_kv(k)
+    v_i8, v_sc = quantize_kv(v)
+    k_q = jax.lax.dynamic_update_slice(k_q, k_i8, (0, length, 0, 0))
+    v_q = jax.lax.dynamic_update_slice(v_q, v_i8, (0, length, 0, 0))
+    k_s = jax.lax.dynamic_update_slice(k_s, k_sc, (0, length, 0))
+    v_s = jax.lax.dynamic_update_slice(v_s, v_sc, (0, length, 0))
+    t = k_q.shape[1]
+    out = attention(q, dequantize_kv(k_q, k_s), dequantize_kv(v_q, v_s),
+                    pos, jnp.arange(t), window=window, kv_chunk=None)
+    y = out.reshape(b, 1, n_heads * head_dim) @ params["wo"]
+    return y, (k_q, v_q, k_s, v_s)
+
+
+def attn_decode(params, x, cache: KVCache, *, n_heads, n_kv, head_dim,
+                rope_theta=10000.0, qk_norm=False, window=None):
+    """Single-token decode against a KV cache.
+
+    x: (B, 1, D); cache holds max_len positions, cache.length are filled.
+    """
+    b = x.shape[0]
+    pos = cache.length[None]                       # (1,) current position
+    q, k, v = qkv(params, x, n_heads, n_kv, head_dim, pos,
+                  rope_theta, qk_norm)
+    k_new = jax.lax.dynamic_update_slice(
+        cache.k, k.astype(cache.k.dtype), (0, cache.length, 0, 0))
+    v_new = jax.lax.dynamic_update_slice(
+        cache.v, v.astype(cache.v.dtype), (0, cache.length, 0, 0))
+    t = cache.k.shape[1]
+    pos_k = jnp.arange(t)
+    # mask positions beyond current length
+    valid_window = window
+    out = attention(q, k_new, v_new, pos, pos_k, window=valid_window,
+                    kv_chunk=None)
+    y = out.reshape(b, 1, n_heads * head_dim) @ params["wo"]
+    new_cache = KVCache(k=k_new, v=v_new, length=cache.length + 1)
+    return y, new_cache

@@ -1,0 +1,112 @@
+"""Shared building blocks for the model zoo.
+
+Conventions:
+  * params are plain dict pytrees; init functions take an explicit PRNG key;
+  * compute dtype is configurable (bf16 default), accumulation/normalization
+    in fp32;
+  * every weight has a logical axis annotation (see sharding.py) used to
+    derive PartitionSpecs for the production mesh.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-6, offset: float = 0.0):
+    """RMSNorm in fp32 (gemma uses (1+scale) — pass offset=1.0)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (offset + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias=None, eps: float = 1e-5):
+    """LayerNorm in fp32 (RWKV blocks use LN, not RMSNorm)."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = xf.var(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_dense(key, in_dim: int, out_dim: int, dtype=jnp.bfloat16,
+               scale: Optional[float] = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * s
+            ).astype(dtype)
+
+
+def init_embed(key, vocab: int, dim: int, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                     # (..., seq, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": init_dense(k1, d_model, d_ff, dtype),
+        "wi_up": init_dense(k2, d_model, d_ff, dtype),
+        "wo": init_dense(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params, x, activation: str = "silu"):
+    """SwiGLU (llama-family) or GeGLU (gemma)."""
+    gate = x @ params["wi_gate"]
+    up = x @ params["wi_up"]
+    if activation == "silu":
+        act = jax.nn.silu(gate.astype(jnp.float32))
+    elif activation == "gelu":
+        act = jax.nn.gelu(gate.astype(jnp.float32), approximate=True)
+    else:
+        raise ValueError(activation)
+    return (act.astype(x.dtype) * up) @ params["wo"]
+
+
+def cross_entropy_loss(logits, labels, z_loss: float = 1e-4):
+    """Token-mean cross entropy with z-loss regularization; fp32 reduction.
+
+    logits: (..., V) — may be sharded on V (logsumexp reduces across the
+    shard axis via GSPMD); labels: (...), -100 entries are masked.
+    """
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    denom = jnp.maximum(mask.sum(), 1)
+    return jnp.where(mask, nll, 0.0).sum() / denom

@@ -1,0 +1,182 @@
+"""Mamba2 (SSD) block — the state-space component of Zamba2 hybrids.
+
+h_t = exp(A·dt_t)·h_{t-1} + dt_t·(x_t ⊗ B_t);   y_t = h_t·C_t + D·x_t
+
+with per-head scalar A (negative), data-dependent dt (softplus), a width-4
+causal conv on the (x,B,C) stream, and gated output.  State per layer:
+(B, heads, head_dim, d_state) fp32 + conv tail (B, conv-1, conv_dim) —
+O(1) in sequence length, enabling the 500k decode shape.
+
+Recurrent lax.scan formulation (faithful); the chunked block-parallel SSD
+is a §Perf candidate.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense, rms_norm
+
+CONV_W = 4
+
+# §Perf lever (EXPERIMENTS.md, zamba2 cells): the block-parallel SSD form
+# (Mamba2's own chunked algorithm).  The recurrent scan streams the
+# (B,H,P,N) state every timestep — the dominant memory-roofline term for
+# hybrid/ssm train/prefill.  Chunking crosses the scan boundary once per
+# SSD_CHUNK steps and turns intra-chunk work into masked matmuls (MXU).
+# Default off: the recurrent form is the paper-faithful baseline.
+CHUNKED_SSD = False
+SSD_CHUNK = 16
+
+
+def _ssd_chunked(xs, B, C, dt, a, h0):
+    """Block-parallel SSD (Mamba2 Alg. 1, single B/C group).
+
+    xs: (Bt, T, H, P); B/C: (Bt, T, N); dt: (Bt, T, H) softplus'd;
+    a: (H,) negative; h0: (Bt, H, P, N) fp32.
+    Returns y (Bt, T, H, P) fp32, h_final.
+
+    Within a chunk:  log-decay L_t = Σ_{s<=t} a·dt_s;
+      y_t = C_t·(e^{L_t} h0) + Σ_{s<=t} e^{L_t - L_s} dt_s (C_t·B_s) x_s
+      h_end = e^{L_K} h0 + Σ_s e^{L_K - L_s} dt_s (x_s ⊗ B_s)
+    The inner sum is a causal-masked (K×K) matmul per head — MXU work
+    instead of K sequential state updates.
+    """
+    bt, t, h, p = xs.shape
+    n = B.shape[-1]
+    k = SSD_CHUNK
+    nc = t // k
+
+    xs = xs.astype(jnp.float32).reshape(bt, nc, k, h, p)
+    Bc = B.astype(jnp.float32).reshape(bt, nc, k, n)
+    Cc = C.astype(jnp.float32).reshape(bt, nc, k, n)
+    dtc = dt.astype(jnp.float32).reshape(bt, nc, k, h)
+
+    # per-chunk log-decays
+    la = a[None, None, None, :] * dtc                   # (Bt,nc,K,H)
+    L = jnp.cumsum(la, axis=2)                          # L_t inclusive
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)          # (Bt,nc,K,K)
+    # G[t,s] = e^{L_t - L_s} dt_s (C_t·B_s) for s<=t
+    diff = L[:, :, :, None, :] - L[:, :, None, :, :]    # (Bt,nc,K,K,H)
+    mask = jnp.tril(jnp.ones((k, k), bool))
+    G = jnp.where(mask[None, None, :, :, None],
+                  jnp.exp(diff), 0.0) * dtc[:, :, None, :, :] \
+        * cb[..., None]                                 # (Bt,nc,K,K,H)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", G, xs)
+
+    # inter-chunk: carry h through chunk ends (scan over nc chunks)
+    ed = jnp.exp(L)                                     # e^{L_t}
+    # contribution of h0_c to each step: C_t · (e^{L_t} h0)
+    # state update over the chunk:
+    #   h_end = e^{L_K} h0 + Σ_s e^{L_K - L_s} dt_s (x_s ⊗ B_s)
+    w_end = jnp.exp(L[:, :, -1:, :] - L) * dtc          # (Bt,nc,K,H)
+    dxb = jnp.einsum("bcsh,bcshp,bcsn->bchpn", w_end, xs, Bc)
+
+    def chunk_step(h, inp):
+        ed_c, Cc_c, dxb_c, laK = inp
+        y_h0 = jnp.einsum("bth,btn,bhpn->bthp", ed_c, Cc_c, h)
+        h = jnp.exp(laK)[..., None, None] * h + dxb_c
+        return h, y_h0
+
+    la_sum = L[:, :, -1, :]                             # (Bt,nc,H)
+    h_fin, y_h0 = jax.lax.scan(
+        chunk_step, h0,
+        (jnp.moveaxis(ed, 1, 0), jnp.moveaxis(Cc, 1, 0),
+         jnp.moveaxis(dxb, 1, 0), jnp.moveaxis(la_sum, 1, 0)))
+    y = y_intra + jnp.moveaxis(y_h0, 0, 1)
+    return y.reshape(bt, t, h, p), h_fin
+
+
+def init_mamba2(key, d_model: int, d_inner: int, d_state: int,
+                head_dim: int = 64, dtype=jnp.bfloat16):
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state
+    ks = jax.random.split(key, 5)
+    return {
+        # z (gate), xBC (conv stream), dt (heads)
+        "w_in": init_dense(ks[0], d_model,
+                           d_inner + conv_dim + n_heads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_W, conv_dim), jnp.float32)
+                   * (CONV_W ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.full((n_heads,), math.log(math.e - 1), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "out_norm": jnp.ones((d_inner,), jnp.float32),
+        "w_out": init_dense(ks[2], d_inner, d_model, dtype),
+    }
+
+
+class Mamba2State(NamedTuple):
+    h: jnp.ndarray          # (B, H, P, N) fp32 SSM state
+    conv: jnp.ndarray       # (B, CONV_W-1, conv_dim) conv tail
+
+
+def init_state(batch: int, d_inner: int, d_state: int, head_dim: int = 64,
+               dtype=jnp.bfloat16) -> Mamba2State:
+    n_heads = d_inner // head_dim
+    return Mamba2State(
+        h=jnp.zeros((batch, n_heads, head_dim, d_state), jnp.float32),
+        conv=jnp.zeros((batch, CONV_W - 1, d_inner + 2 * d_state), dtype))
+
+
+def _split(p, x, d_inner: int, d_state: int, n_heads: int):
+    zxbcdt = x @ p["w_in"]
+    conv_dim = d_inner + 2 * d_state
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim:]
+    return z, xbc, dt
+
+
+def _conv(p, xbc, conv_state):
+    """Causal depthwise conv width 4; conv_state holds the previous CONV_W-1
+    inputs.  Returns (activated stream, new tail)."""
+    full = jnp.concatenate([conv_state, xbc], axis=1)   # (B, T+3, C)
+    t = xbc.shape[1]
+    acc = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for w in range(CONV_W):
+        acc = acc + (full[:, w:w + t] * p["conv_w"][w]).astype(jnp.float32)
+    acc = acc + p["conv_b"].astype(jnp.float32)
+    return jax.nn.silu(acc).astype(xbc.dtype), full[:, -(CONV_W - 1):]
+
+
+def mamba2_forward(p, x, state: Mamba2State, *, d_inner: int, d_state: int,
+                   head_dim: int = 64):
+    """x: (B, T, D) -> (y, new_state)."""
+    b, t, _ = x.shape
+    n_heads = d_inner // head_dim
+    z, xbc, dt = _split(p, x, d_inner, d_state, n_heads)
+    xbc, conv_tail = _conv(p, xbc, state.conv)
+    xs = xbc[..., :d_inner].reshape(b, t, n_heads, head_dim)
+    B = xbc[..., d_inner:d_inner + d_state]              # (B,T,N) group=1
+    C = xbc[..., d_inner + d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    a = -jnp.exp(p["a_log"])                             # (H,) negative
+
+    if CHUNKED_SSD and t % SSD_CHUNK == 0 and t > 1:
+        y, h_new = _ssd_chunked(xs, B, C, dt, a, state.h)
+    else:
+        def step(h, inp):
+            x_t, b_t, c_t, dt_t = inp   # (B,H,P), (B,N), (B,N), (B,H)
+            decay = jnp.exp(a * dt_t)   # (B,H)
+            dbx = (dt_t[..., None] * x_t)[..., None] * b_t[:, None, None, :]
+            h = decay[..., None, None] * h + dbx
+            y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+            return h, y
+
+        h_new, ys = jax.lax.scan(
+            step, state.h,
+            (jnp.moveaxis(xs, 1, 0).astype(jnp.float32),
+             jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+             jnp.moveaxis(C, 1, 0).astype(jnp.float32),
+             jnp.moveaxis(dt, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1)                        # (B,T,H,P)
+    y = y + p["d_skip"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, t, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"])
+    return y @ p["w_out"], Mamba2State(h=h_new, conv=conv_tail)

@@ -1,0 +1,214 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (TPU/GSPMD-native).
+
+Dispatch is the sparse step: the (tokens × experts) routing matrix is
+exactly a structurally *asymmetric* sparse matrix, and dispatch/combine are
+SpMM with it — the MoE analogue of the paper's scatter problem (DESIGN.md
+§4).  Like the CSRC kernel, we avoid data-dependent scatter ordering by
+sorting: tokens are argsorted by expert id, positions-within-expert come
+from a running count, overflow beyond capacity is dropped (standard
+Switch-style capacity bound keeps every shape static).
+
+Experts are sharded over the `model` axis (EP); tokens live on the `data`
+axis.  GSPMD turns the token→expert buffer scatter into the EP all-to-all.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense, init_mlp, mlp
+from .sharding import constrain
+
+# §Perf lever (EXPERIMENTS.md §Perf cell A).  Modes:
+#   None / False    — baseline: global sort-based dispatch, placement left
+#                     to GSPMD propagation (paper-faithful starting point);
+#   "constrain"     — same computation with explicit sharding constraints
+#                     (token-major on batch axes, expert-major on `model`);
+#   "hierarchical"  — two-stage production dispatch: tokens are grouped so
+#                     each data shard sorts only its own tokens (no global
+#                     argsort), then ONE buffer reshard (batch-major →
+#                     expert-major) moves data — GSPMD emits it as the EP
+#                     all-to-all instead of all-reducing the whole buffer.
+# Toggled by launch/dryrun --moe-constrained / --moe-hierarchical.
+CONSTRAIN_DISPATCH = False
+DISPATCH_GROUPS = 16        # = data-axis size; groups sort locally
+
+
+def init_moe(key, d_model: int, d_ff_expert: int, num_experts: int,
+             num_shared: int = 0, d_ff_shared: int = 0,
+             dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 5)
+
+    def expert_weights(k, fan_in, shape):
+        return (jax.random.normal(k, shape, jnp.float32) * fan_in ** -0.5
+                ).astype(dtype)
+
+    p = {
+        "router": init_dense(ks[0], d_model, num_experts, jnp.float32),
+        "w_gate": expert_weights(ks[1], d_model,
+                                 (num_experts, d_model, d_ff_expert)),
+        "w_up": expert_weights(ks[2], d_model,
+                               (num_experts, d_model, d_ff_expert)),
+        "w_down": expert_weights(ks[3], d_ff_expert,
+                                 (num_experts, d_ff_expert, d_model)),
+    }
+    if num_shared:
+        p["shared"] = init_mlp(ks[4], d_model, d_ff_shared, dtype)
+    return p
+
+
+def moe_forward_hierarchical(params, x, *, num_experts: int, top_k: int,
+                             capacity_factor: float = 1.25,
+                             router_normalize: bool = True
+                             ) -> Tuple[jnp.ndarray, dict]:
+    """Two-stage EP dispatch (§Perf cell A optimized path).
+
+    Tokens are split into G groups aligned with the data axis; each group
+    sorts and capacity-packs locally (vmap over G — shard-local compute),
+    producing buf (G, E, C, D) batch-major.  The single transpose to
+    expert-major (E, G·C, D) sharded on `model` is the EP all-to-all.
+    Numerically equivalent to `moe_forward` up to which tokens are dropped
+    at tight capacity (capacity is per-group here, as in real EP systems).
+    """
+    b, s, d = x.shape
+    t = b * s
+    g = min(DISPATCH_GROUPS, b)
+    while b % g:                 # groups must tile the batch exactly
+        g -= 1
+    tg = t // g
+    xf = x.reshape(g, tg, d)
+    logits = (xf.astype(jnp.float32) @ params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                 # (G, Tg, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)     # (G, Tg, k)
+    if router_normalize:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+    capacity = max(1, int(tg * top_k / num_experts * capacity_factor))
+
+    def dispatch_group(xg, eidx, gv):
+        flat_e = eidx.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        sorted_tok = jnp.repeat(jnp.arange(tg), top_k)[order]
+        sorted_g = gv.reshape(-1)[order]
+        counts = jnp.bincount(sorted_e, length=num_experts)
+        starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                                  jnp.cumsum(counts)[:-1]])
+        pos = jnp.arange(tg * top_k) - starts[sorted_e]
+        keep = pos < capacity
+        pos_c = jnp.minimum(pos, capacity - 1)
+        buf = jnp.zeros((num_experts, capacity, d), x.dtype)
+        src = jnp.where(keep[:, None], xg[sorted_tok], 0).astype(x.dtype)
+        buf = buf.at[sorted_e, pos_c].add(src)
+        return buf, (sorted_e, sorted_tok, sorted_g, keep, pos_c)
+
+    buf, meta = jax.vmap(dispatch_group)(xf, expert_idx, gate_vals)
+    buf = constrain(buf, ("pod", "data"), None, None, None)  # batch-major
+    # --- the EP all-to-all: batch-major -> expert-major ---
+    buf_e = jnp.swapaxes(buf, 0, 1)                  # (E, G, C, D)
+    buf_e = constrain(buf_e, "model", None, None, None)
+    h_gate = jnp.einsum("egcd,edf->egcf", buf_e, params["w_gate"])
+    h_up = jnp.einsum("egcd,edf->egcf", buf_e, params["w_up"])
+    h = (jax.nn.silu(h_gate.astype(jnp.float32)).astype(x.dtype) * h_up)
+    out_e = jnp.einsum("egcf,efd->egcd", h, params["w_down"])
+    out_e = constrain(out_e, "model", None, None, None)
+    out_buf = jnp.swapaxes(out_e, 0, 1)              # (G, E, C, D)
+    out_buf = constrain(out_buf, ("pod", "data"), None, None, None)
+
+    def combine_group(out_g, meta_g):
+        sorted_e, sorted_tok, sorted_g, keep, pos_c = meta_g
+        gathered = out_g[sorted_e, pos_c]
+        contrib = jnp.where(keep[:, None], gathered, 0) * \
+            sorted_g[:, None].astype(x.dtype)
+        return jax.ops.segment_sum(contrib, sorted_tok, num_segments=tg)
+
+    y = jax.vmap(combine_group)(out_buf, meta)       # (G, Tg, D)
+    y = y.reshape(t, d)
+    if "shared" in params:
+        y = y + mlp(params["shared"], x.reshape(t, d)).reshape(t, d)
+    me = probs.reshape(t, num_experts).mean(axis=0)
+    fe = jnp.bincount(expert_idx.reshape(-1), length=num_experts) / (
+        t * top_k)
+    keep_frac = meta[3].astype(jnp.float32).mean()
+    aux = {
+        "load_balance_loss": num_experts * jnp.sum(fe * me),
+        "dropped_fraction": 1.0 - keep_frac,
+    }
+    return y.reshape(b, s, d), aux
+
+
+def moe_forward(params, x, *, num_experts: int, top_k: int,
+                capacity_factor: float = 1.25,
+                router_normalize: bool = True) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, D) -> (B, S, D), aux metrics (load-balance loss etc.)."""
+    if CONSTRAIN_DISPATCH == "hierarchical":
+        return moe_forward_hierarchical(
+            params, x, num_experts=num_experts, top_k=top_k,
+            capacity_factor=capacity_factor,
+            router_normalize=router_normalize)
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = (xf.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)     # (T, k)
+    if router_normalize:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(t * top_k / num_experts * capacity_factor))
+
+    flat_e = expert_idx.reshape(-1)                         # (T*k,)
+    flat_g = gate_vals.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), top_k)
+
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    sorted_tok = flat_tok[order]
+    sorted_g = flat_g[order]
+    # position within expert: index - start offset of that expert
+    counts = jnp.bincount(sorted_e, length=num_experts)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(t * top_k) - starts[sorted_e]
+    keep = pos < capacity
+    pos_c = jnp.minimum(pos, capacity - 1)
+
+    # ---- dispatch: scatter kept tokens into (E, C, D) expert buffers ----
+    buf = jnp.zeros((num_experts, capacity, d), x.dtype)
+    src = jnp.where(keep[:, None], xf[sorted_tok], 0).astype(x.dtype)
+    if CONSTRAIN_DISPATCH:
+        src = constrain(src, ("pod", "data"), None)   # token-major: batch
+    buf = buf.at[sorted_e, pos_c].add(src)   # unique (e,pos) among kept
+    if CONSTRAIN_DISPATCH:
+        buf = constrain(buf, "model", None, None)     # expert-major: EP
+
+    # ---- expert computation: batched GLU MLP over the expert axis ----
+    h_gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    h_up = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    h = (jax.nn.silu(h_gate.astype(jnp.float32)).astype(x.dtype) * h_up)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    if CONSTRAIN_DISPATCH:
+        out_buf = constrain(out_buf, "model", None, None)
+
+    # ---- combine: gather back and weight by gates ----
+    gathered = out_buf[sorted_e, pos_c]                     # (T*k, D)
+    if CONSTRAIN_DISPATCH:
+        gathered = constrain(gathered, ("pod", "data"), None)
+    contrib = jnp.where(keep[:, None], gathered, 0) * sorted_g[:, None
+                                                               ].astype(x.dtype)
+    y = jax.ops.segment_sum(contrib, sorted_tok, num_segments=t)
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], xf).reshape(t, d)
+
+    # Switch aux load-balance loss: E * Σ_e f_e · p_e
+    me = probs.mean(axis=0)
+    fe = jnp.bincount(flat_e, length=num_experts) / (t * top_k)
+    aux = {
+        "load_balance_loss": num_experts * jnp.sum(fe * me),
+        "dropped_fraction": 1.0 - keep.mean(),
+    }
+    return y.reshape(b, s, d), aux

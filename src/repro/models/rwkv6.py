@@ -1,0 +1,206 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time-mix with
+data-dependent decay, plus the squared-ReLU channel-mix.
+
+State per layer: the WKV matrix S (B, H, N, N) in fp32, the previous token
+for the time-mix shift, and the previous token for the channel-mix shift —
+O(1) in sequence length, which is why this arch (not full attention) runs
+the 500k-token decode shape.
+
+Training runs a lax.scan over time (recurrent form — the paper-faithful
+formulation); the chunked-parallel form is a §Perf candidate.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense
+
+LORA_MIX = 32     # low-rank size of the data-dependent mixing MLP
+LORA_DECAY = 64   # low-rank size of the data-dependent decay MLP
+
+# §Perf lever (EXPERIMENTS.md cell F): chunked block-parallel WKV6 — the
+# same transform as Mamba2's SSD (models/mamba2.py).  The recurrent scan
+# streams the (B,H,N,N) state every token; chunking crosses the scan
+# boundary once per WKV_CHUNK steps and computes intra-chunk interactions
+# as masked matmuls in log-decay space (per-channel decays, so the decay
+# kernel is materialized per (t,s,channel) — (K,K,N) per head-chunk).
+CHUNKED_WKV = False
+WKV_CHUNK = 16
+
+
+def init_time_mix(key, d: int, n_heads: int, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 12)
+    hd = d // n_heads
+    return {
+        "maa_x": jnp.zeros((d,), dtype),
+        "maa_rkvwg": jnp.zeros((5, d), dtype),
+        "maa_w1": init_dense(ks[0], d, 5 * LORA_MIX, dtype, scale=1e-4),
+        "maa_w2": (jax.random.normal(ks[1], (5, LORA_MIX, d), jnp.float32)
+                   * LORA_MIX ** -0.5).astype(dtype),
+        "decay_base": jnp.asarray(
+            jnp.tile(-6.0 + 5.0 * (jnp.arange(d) / max(1, d - 1)) ** 0.9,
+                     1), jnp.float32),
+        "decay_w1": init_dense(ks[2], d, LORA_DECAY, dtype, scale=1e-4),
+        "decay_w2": init_dense(ks[3], LORA_DECAY, d, dtype, scale=1e-4),
+        "bonus": jnp.zeros((n_heads, hd), jnp.float32),        # u
+        "wr": init_dense(ks[4], d, d, dtype),
+        "wk": init_dense(ks[5], d, d, dtype),
+        "wv": init_dense(ks[6], d, d, dtype),
+        "wg": init_dense(ks[7], d, d, dtype),
+        "wo": init_dense(ks[8], d, d, dtype),
+        "ln_x": jnp.ones((d,), jnp.float32),                   # group norm
+    }
+
+
+def init_channel_mix(key, d: int, d_ff: int, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    return {
+        "maa_k": jnp.zeros((d,), dtype),
+        "maa_r": jnp.zeros((d,), dtype),
+        "wk": init_dense(ks[0], d, d_ff, dtype),
+        "wv": init_dense(ks[1], d_ff, d, dtype),
+        "wr": init_dense(ks[2], d, d, dtype),
+    }
+
+
+def _mix_inputs(p, x, x_prev):
+    """Data-dependent token-shift interpolation (the Finch novelty).
+
+    x: (B, T, D); x_prev: (B, D) token before the window.
+    Returns 5 mixed streams (r, k, v, w, g) each (B, T, D).
+    """
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xx = shifted - x
+    xxx = x + xx * p["maa_x"]
+    mixed = jnp.tanh(xxx @ p["maa_w1"])                     # (B,T,5*L)
+    b, t, _ = mixed.shape
+    mixed = mixed.reshape(b, t, 5, LORA_MIX)
+    deltas = jnp.einsum("btfl,fld->fbtd", mixed, p["maa_w2"])
+    outs = []
+    for f in range(5):
+        m = p["maa_rkvwg"][f] + deltas[f]
+        outs.append(x + xx * m)
+    return outs  # xr, xk, xv, xw, xg
+
+
+def _decay(p, xw):
+    """Per-channel data-dependent decay w in (0,1): exp(-exp(base+lora))."""
+    lora = jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    return jnp.exp(-jnp.exp(p["decay_base"] + lora.astype(jnp.float32)))
+
+
+def _group_norm(x, scale, n_heads, eps=1e-5):
+    b, t, d = x.shape
+    xg = x.reshape(b, t, n_heads, d // n_heads).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = xg.var(-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(b, t, d) * scale).astype(x.dtype)
+
+
+def _wkv_chunked(r, k, v, w, u, S0):
+    """Block-parallel WKV6 (cell F): exact chunked form of the recurrence
+
+        S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+        y_t = r_t · (S_{t-1} + diag(u) k_t ⊗ v_t)
+
+    Per chunk, in log-decay space (decays are per key-channel, so the
+    intra-chunk kernel sums over channels with the exp inside):
+        G[t,s] = Σ_i r_ti k_si e^{L_{t-1,i} - L_{s,i}}   (s < t)
+        G[t,t] = (r_t ⊙ u) · k_t                         (bonus)
+        y = G @ v + (r_t ⊙ e^{L_{t-1}}) · S_carry
+    All exponents are ≤ 0 (decays < 1), so no overflow.
+    r/k/v/w: (B,T,H,N) fp32; u: (H,N); S0: (B,H,N,N).
+    """
+    b, t, h, n = r.shape
+    kk = WKV_CHUNK
+    nc = t // kk
+
+    def resh(a):
+        return jnp.moveaxis(a.reshape(b, nc, kk, h, n), 1, 0)
+
+    r_, k_, v_, w_ = map(resh, (r, k, v, w))      # (nc,B,K,H,N)
+    mask_lt = jnp.tril(jnp.ones((kk, kk), jnp.bool_), -1)
+
+    def chunk(S, inp):
+        rc, kc, vc, wc = inp                      # (B,K,H,N)
+        logw = jnp.log(jnp.maximum(wc, 1e-38))
+        L = jnp.cumsum(logw, axis=1)
+        Lp = L - logw                             # L_{t-1}
+        diff = Lp[:, :, None] - L[:, None]        # (B,K,K,H,N) [t,s]
+        dk = jnp.where(mask_lt[None, :, :, None, None],
+                       jnp.exp(diff), 0.0)
+        G = jnp.einsum("bthn,bshn,btshn->btsh", rc, kc, dk)
+        Gdiag = jnp.einsum("bthn,hn,bthn->bth", rc, u, kc)
+        y = jnp.einsum("btsh,bshn->bthn", G, vc) + Gdiag[..., None] * vc
+        y = y + jnp.einsum("bthi,bhij->bthj", rc * jnp.exp(Lp), S)
+        wend = jnp.exp(L[:, -1][:, None] - L)     # e^{L_K - L_s}
+        S = jnp.exp(L[:, -1])[..., None] * S + jnp.einsum(
+            "bshn,bshm->bhnm", kc * wend, vc)
+        return S, y
+
+    S_fin, ys = jax.lax.scan(chunk, S0, (r_, k_, v_, w_))
+    return jnp.moveaxis(ys, 0, 1).reshape(b, t, h, n), S_fin
+
+
+def time_mix(p, x, x_prev, S, n_heads: int):
+    """WKV6 over a window.  x: (B,T,D); S: (B,H,N,N) fp32 state.
+    Returns (y, new_x_prev, new_S)."""
+    b, t, d = x.shape
+    n = d // n_heads
+    xr, xk, xv, xw, xg = _mix_inputs(p, x, x_prev)
+    r = (xr @ p["wr"]).reshape(b, t, n_heads, n).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(b, t, n_heads, n).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(b, t, n_heads, n).astype(jnp.float32)
+    g = jax.nn.silu((xg @ p["wg"]).astype(jnp.float32))
+    w = _decay(p, xw).reshape(b, t, n_heads, n)             # (B,T,H,N)
+    u = p["bonus"]                                          # (H,N)
+
+    if CHUNKED_WKV and t % WKV_CHUNK == 0 and t > 1:
+        ys_btd, S_new = _wkv_chunked(r, k, v, w, u, S)
+        wkv = ys_btd.reshape(b, t, d).astype(x.dtype)
+    else:
+        def step(S, inp):
+            r_t, k_t, v_t, w_t = inp                        # (B,H,N)
+            kv = k_t[..., :, None] * v_t[..., None, :]      # (B,H,N,N)
+            y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., None] * kv)
+            S = w_t[..., None] * S + kv
+            return S, y
+
+        S_new, ys = jax.lax.scan(
+            step, S,
+            (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+             jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0)))
+        wkv = jnp.moveaxis(ys, 0, 1).reshape(b, t, d).astype(x.dtype)
+    out = _group_norm(wkv, p["ln_x"], n_heads)
+    y = (out * g.astype(out.dtype)) @ p["wo"]
+    return y.astype(x.dtype), x[:, -1], S_new
+
+
+def channel_mix(p, x, x_prev):
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xx = shifted - x
+    xk = x + xx * p["maa_k"]
+    xr = x + xx * p["maa_r"]
+    k = jnp.square(jax.nn.relu((xk @ p["wk"]).astype(jnp.float32)))
+    kv = k.astype(x.dtype) @ p["wv"]
+    return jax.nn.sigmoid((xr @ p["wr"]).astype(jnp.float32)
+                          ).astype(x.dtype) * kv, x[:, -1]
+
+
+class RWKVLayerState(NamedTuple):
+    tm_x: jnp.ndarray     # (B, D) last token seen by time-mix
+    cm_x: jnp.ndarray     # (B, D) last token seen by channel-mix
+    S: jnp.ndarray        # (B, H, N, N) fp32 WKV state
+
+
+def init_state(batch: int, d: int, n_heads: int, dtype=jnp.bfloat16):
+    n = d // n_heads
+    return RWKVLayerState(
+        tm_x=jnp.zeros((batch, d), dtype),
+        cm_x=jnp.zeros((batch, d), dtype),
+        S=jnp.zeros((batch, n_heads, n, n), jnp.float32))

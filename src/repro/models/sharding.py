@@ -1,0 +1,206 @@
+"""Sharding rules: map model parameters and activations onto the mesh.
+
+Mesh axes (launch/mesh.py):
+  pod    — data parallelism across pods (crosses DCI);
+  data   — in-pod data parallelism; parameters are FSDP-sharded here
+           (ZeRO-style — GSPMD inserts the use-site all-gathers);
+  model  — tensor/expert parallelism (heads, d_ff, vocab, experts).
+
+Rules are name-based over the trailing dims of each leaf (stacked layer
+axes are padded with None on the left) with per-dim divisibility guards —
+a dim that does not divide its mesh axis falls back to replication (e.g.
+granite's vocab 49155 on 16-way model).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# rules: leaf-name -> spec for the trailing dims (None-padded on the left).
+# "col" = (in, out) -> (data, model); "row" = (in, out) -> (model, data).
+_COL2 = ("data", "model")
+_ROW2 = ("model", "data")
+_RULES = {
+    # embeddings / head
+    "embed": ("model", "data"),
+    "head": _COL2,
+    # attention
+    "wq": _COL2, "wk": _COL2, "wv": _COL2, "wo": _ROW2,
+    # mlp
+    "wi_gate": _COL2, "wi_up": _COL2, "w_down": _ROW2,
+    # moe (E, D, F) / (E, F, D); experts over model (EP)
+    "w_gate": ("model", "data", None),
+    "w_up": ("model", "data", None),
+    "router": ("data", None),
+    # mla
+    "w_dkv": _COL2,
+    "w_uk": (None, "model", None), "w_uv": (None, "model", None),
+    "w_q": ("data", "model", None), "w_o": ("model", None, "data"),
+    # rwkv
+    "wr": _COL2, "wg": _COL2,
+    "maa_w1": _COL2, "decay_w1": _COL2, "decay_w2": _ROW2,
+    # mamba2
+    "w_in": _COL2, "w_out": _ROW2, "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    # lora adapters (hybrid shared block)
+    "lora_a": _COL2, "lora_b": _ROW2,
+}
+# name collisions resolved by parent path fragment
+_CONTEXT_RULES = {
+    ("cm", "wv"): _ROW2,        # rwkv channel-mix down-proj (F, D)
+    ("moe", "w_down"): ("model", None, "data"),
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "name"):
+            names.append(str(e.name))
+    return tuple(names)
+
+
+def _guard(spec_tail, shape, axis_sizes):
+    """Drop axes that don't divide their dim; pad front with None."""
+    tail = list(spec_tail)
+    k = len(tail)
+    full = [None] * (len(shape) - k) + tail
+    out = []
+    for dim, ax in zip(shape, full):
+        if ax is None:
+            out.append(None)
+        elif isinstance(ax, str):
+            size = axis_sizes.get(ax, 1)
+            out.append(ax if size > 1 and dim % size == 0 else None)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _axis_sizes(mesh):
+    return dict(mesh.shape)      # works for Mesh and AbstractMesh
+
+
+def infer_param_specs(params, mesh) -> "jax.tree_util.PyTreeDef":
+    """PartitionSpec pytree matching ``params`` for the given mesh."""
+    axis_sizes = _axis_sizes(mesh)
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        if leaf.ndim <= 1:
+            return P()
+        for (ctx, n), spec in _CONTEXT_RULES.items():
+            if n == name and ctx in names:
+                return _guard(spec, leaf.shape, axis_sizes)
+        if name in _RULES:
+            return _guard(_RULES[name], leaf.shape, axis_sizes)
+        if leaf.ndim >= 2:
+            return _guard(_COL2, leaf.shape, axis_sizes)   # generic matmul
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def guard_spec(spec: P, shape, mesh) -> P:
+    """Drop spec entries that don't divide their dim on this mesh; flatten
+    axis tuples whose axes are absent."""
+    axis_sizes = _axis_sizes(mesh)
+    out = []
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for dim, e in zip(shape, entries):
+        if e is None:
+            out.append(None)
+            continue
+        axes = (e,) if isinstance(e, str) else tuple(e)
+        axes = tuple(a for a in axes if axis_sizes.get(a, 1) > 1)
+        total = 1
+        for a in axes:
+            total *= axis_sizes[a]
+        if axes and dim % total == 0:
+            out.append(axes[0] if len(axes) == 1 else axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def materialize(spec_tree, sds_tree, mesh):
+    """Logical spec pytree + ShapeDtypeStruct pytree -> NamedSharding pytree
+    (guarded per-leaf)."""
+    from jax.sharding import NamedSharding
+
+    def one(spec, sds):
+        if not isinstance(spec, P):
+            spec = P() if spec is None else spec
+        return NamedSharding(mesh, guard_spec(spec, sds.shape, mesh))
+
+    return jax.tree.map(one, spec_tree, sds_tree,
+                        is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints (no-ops outside a mesh context)
+# ---------------------------------------------------------------------------
+
+def _current_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            m = jax.interpreters.pxla.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def batch_axes(mesh=None) -> Tuple[str, ...]:
+    mesh = mesh or _current_mesh()
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint with divisibility guards; identity when no
+    mesh is active (CPU smoke tests)."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    axis_sizes = _axis_sizes(mesh)
+    out = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        axes = tuple(a for a in axes if axis_sizes.get(a, 1) > 1)
+        total = 1
+        for a in axes:
+            total *= axis_sizes[a]
+        if axes and total > 1 and dim % total == 0:
+            out.append(axes[0] if len(axes) == 1 else axes)
+        else:
+            out.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*out))
+
+
+def constrain_tokens(x):
+    """(B, S[, D]) activations: batch over (pod, data)."""
+    ba = batch_axes()
+    if not ba:
+        return x
+    spec = [ba] + [None] * (x.ndim - 1)
+    return constrain(x, *spec)

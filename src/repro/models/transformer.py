@@ -1,0 +1,787 @@
+"""Unified LM assembly for all assigned architecture families.
+
+Every model exposes the same interface (used by train/serve/launch):
+
+  model = build_model(cfg)
+  params = model.init(key)
+  logits = model.forward(params, inputs)                 # (B, S, V)
+  loss, metrics = model.loss(params, batch)
+  state = model.init_decode_state(batch, max_len)
+  state, logits = model.decode_step(params, state, inputs_1)   # one token
+  state, logits = model.prefill(params, inputs)
+
+``inputs`` is token ids (B, S) int32 for input_mode='tokens', or precomputed
+frontend embeddings (B, S, D) for 'embeds' (audio/vlm stubs).
+
+Layers are stacked on a leading axis and iterated with lax.scan — O(1)
+compile in depth, which the 512-device dry-run requires.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import attention as A
+from . import mla as MLA
+from . import moe as MOE
+from . import rwkv6 as R6
+from . import mamba2 as M2
+from .layers import (cross_entropy_loss, init_dense, init_embed, init_mlp,
+                     layer_norm, mlp, rms_norm)
+from .sharding import constrain_tokens
+
+
+def _norm(cfg, x, scale):
+    return rms_norm(x, scale, offset=cfg.norm_offset)
+
+
+def _maybe_remat(fn, policy: str):
+    """Wrap a layer-scan body with activation checkpointing.
+
+    'none'  — save everything (fastest, highest memory);
+    'full'  — recompute the whole layer in backward (lowest memory);
+    'dots'  — save matmul outputs only (balanced; the usual prod default).
+    """
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(f"unknown remat policy {policy!r}")
+
+
+# ===========================================================================
+# Embedding / head (common)
+# ===========================================================================
+
+def _init_embed_head(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    p = {}
+    if cfg.input_mode == "tokens":
+        p["embed"] = init_embed(k1, cfg.vocab, cfg.d_model, cfg.compute_dtype)
+        if not cfg.tie_embeddings:
+            p["head"] = init_dense(k2, cfg.d_model, cfg.vocab,
+                                   cfg.compute_dtype)
+    else:
+        p["head"] = init_dense(k2, cfg.d_model, cfg.vocab, cfg.compute_dtype)
+    p["final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return p
+
+
+def _embed_in(cfg, params, inputs):
+    if cfg.input_mode == "tokens":
+        x = params["embed"][inputs]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    else:
+        x = inputs.astype(cfg.compute_dtype)
+    return constrain_tokens(x)
+
+
+def _head_out(cfg, params, x):
+    x = _norm(cfg, x, params["final_norm"])
+    if cfg.input_mode == "tokens" and cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["head"]
+
+
+# ===========================================================================
+# Dense-family block (dense / audio / vlm / moe; attention = GQA or MLA)
+# ===========================================================================
+
+def _init_block(cfg: ModelConfig, key, use_moe: bool):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+         "ln2": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.mla is not None:
+        c = cfg.mla
+        p["mla"] = MLA.init_mla(k1, cfg.d_model, cfg.n_heads, c.kv_lora,
+                                c.nope_dim, c.rope_dim, c.v_dim,
+                                cfg.compute_dtype)
+    else:
+        p["attn"] = A.init_attn(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                cfg.head_dim, cfg.qkv_bias, cfg.qk_norm,
+                                cfg.compute_dtype)
+    if use_moe:
+        m = cfg.moe
+        p["moe"] = MOE.init_moe(k2, cfg.d_model, m.d_ff_expert,
+                                m.num_experts, m.num_shared, m.d_ff_shared,
+                                cfg.compute_dtype)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.compute_dtype)
+    return p
+
+
+def _block_attn_forward(cfg, p, x, positions, kv_chunk, window):
+    h = _norm(cfg, x, p["ln1"])
+    if cfg.mla is not None:
+        c = cfg.mla
+        y, kv = MLA.mla_forward(
+            p["mla"], h, positions, n_heads=cfg.n_heads, kv_lora=c.kv_lora,
+            nope_dim=c.nope_dim, rope_dim=c.rope_dim, v_dim=c.v_dim,
+            rope_theta=cfg.rope_theta, kv_chunk=kv_chunk)
+    else:
+        y, kv = A.attn_forward(
+            p["attn"], h, positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            qk_norm=cfg.qk_norm, window=window, kv_chunk=kv_chunk)
+    return x + y, kv
+
+
+def _block_ffn_forward(cfg, p, x, use_moe: bool):
+    h = _norm(cfg, x, p["ln2"])
+    if use_moe:
+        m = cfg.moe
+        y, aux = MOE.moe_forward(
+            p["moe"], h, num_experts=m.num_experts, top_k=m.top_k,
+            capacity_factor=m.capacity_factor)
+    else:
+        y = mlp(p["mlp"], h, cfg.activation)
+        aux = {"load_balance_loss": jnp.zeros((), jnp.float32),
+               "dropped_fraction": jnp.zeros((), jnp.float32)}
+    return x + y, aux
+
+
+def _block_attn_decode(cfg, p, x, kcache, vcache, length, window):
+    """Single-token decode; returns (x, new_k, new_v)."""
+    h = _norm(cfg, x, p["ln1"])
+    if cfg.mla is not None:
+        c = cfg.mla
+        cache = MLA.MLACache(c_kv=kcache, k_rope=vcache, length=length)
+        y, new = MLA.mla_decode(
+            p["mla"], h, cache, n_heads=cfg.n_heads, kv_lora=c.kv_lora,
+            nope_dim=c.nope_dim, rope_dim=c.rope_dim, v_dim=c.v_dim,
+            rope_theta=cfg.rope_theta)
+        return x + y, new.c_kv, new.k_rope
+    cache = A.KVCache(k=kcache, v=vcache, length=length)
+    y, new = A.attn_decode(
+        p["attn"], h, cache, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm, window=window)
+    return x + y, new.k, new.v
+
+
+class DenseLM:
+    """dense / audio / vlm / moe families (GQA or MLA attention)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        m = cfg.moe
+        self.n_first_dense = m.first_dense if m else 0
+        self.n_scanned = cfg.n_layers - self.n_first_dense
+        self.use_moe = m is not None
+        self.remat = "none"          # set by train/step.make_train_step
+
+    # ---- params ----
+    def init(self, key):
+        cfg = self.cfg
+        k_eh, k_first, k_rest = jax.random.split(key, 3)
+        p = _init_embed_head(cfg, k_eh)
+        if self.n_first_dense:
+            firsts = [
+                _init_block(cfg, k, use_moe=False)
+                for k in jax.random.split(k_first, self.n_first_dense)]
+            p["first_layers"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *firsts) \
+                if len(firsts) > 1 else jax.tree.map(
+                    lambda x: x[None], firsts[0])
+        keys = jax.random.split(k_rest, self.n_scanned)
+        p["layers"] = jax.vmap(
+            functools.partial(_init_block, cfg, use_moe=self.use_moe))(keys)
+        return p
+
+    # ---- full-sequence forward (train / prefill math) ----
+    def forward(self, params, inputs, return_kv: bool = False,
+                return_aux: bool = False, window: Optional[int] = None,
+                logits_mode: str = "all"):
+        cfg = self.cfg
+        x = _embed_in(cfg, params, inputs)
+        s = x.shape[1]
+        positions = jnp.arange(s)
+        kv_chunk = 2048 if s > 2048 else None
+        window = window if window is not None else cfg.sliding_window
+
+        first_kv = []
+        for i in range(self.n_first_dense):
+            lp = jax.tree.map(lambda a, i=i: a[i], params["first_layers"])
+            x, kv = _block_attn_forward(cfg, lp, x, positions, kv_chunk,
+                                        window)
+            x, _ = _block_ffn_forward(cfg, lp, x, use_moe=False)
+            first_kv.append(kv)
+
+        def body(x, lp):
+            x, kv = _block_attn_forward(cfg, lp, x, positions, kv_chunk,
+                                        window)
+            x, aux = _block_ffn_forward(cfg, lp, x, use_moe=self.use_moe)
+            x = constrain_tokens(x)
+            return x, (kv, aux)
+
+        x, (kvs, auxs) = jax.lax.scan(_maybe_remat(body, self.remat), x,
+                                      params["layers"])
+        aux_mean = jax.tree.map(jnp.mean, auxs)
+        if logits_mode == "last":
+            x = x[:, -1:]        # serving prefill: last-token logits only
+        logits = _head_out(cfg, params, x)
+        out = (logits,)
+        if return_kv:
+            out += ((first_kv, kvs),)
+        if return_aux:
+            out += (aux_mean,)
+        return out if len(out) > 1 else logits
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch["inputs"], return_aux=True)
+        ce = cross_entropy_loss(logits, batch["targets"])
+        total = ce
+        metrics = {"ce": ce}
+        if self.use_moe:
+            total = total + 0.01 * aux["load_balance_loss"]
+            metrics.update(aux)
+        return total, metrics
+
+    # ---- decode ----
+    @property
+    def _kv_int8(self):
+        return (self.cfg.kv_cache_dtype == "int8"
+                and self.cfg.mla is None)
+
+    def init_decode_state(self, batch: int, max_len: int):
+        cfg = self.cfg
+        L, Ld = self.n_scanned, self.n_first_dense
+        dt = cfg.compute_dtype
+        if cfg.mla is not None:
+            c = cfg.mla
+            mk = lambda n: {
+                "k": jnp.zeros((n, batch, max_len, c.kv_lora), dt),
+                "v": jnp.zeros((n, batch, max_len, c.rope_dim), dt)}
+        elif self._kv_int8:
+            mk = lambda n: {
+                "k": jnp.zeros((n, batch, max_len, cfg.n_kv, cfg.head_dim),
+                               jnp.int8),
+                "v": jnp.zeros((n, batch, max_len, cfg.n_kv, cfg.head_dim),
+                               jnp.int8),
+                "ks": jnp.zeros((n, batch, max_len, cfg.n_kv),
+                                jnp.bfloat16),
+                "vs": jnp.zeros((n, batch, max_len, cfg.n_kv),
+                                jnp.bfloat16)}
+        else:
+            mk = lambda n: {
+                "k": jnp.zeros((n, batch, max_len, cfg.n_kv, cfg.head_dim),
+                               dt),
+                "v": jnp.zeros((n, batch, max_len, cfg.n_kv, cfg.head_dim),
+                               dt)}
+        state = {"scan": mk(L), "length": jnp.zeros((), jnp.int32)}
+        if Ld:
+            state["first"] = mk(Ld)
+        return state
+
+    def decode_state_specs(self, batch_axes=("pod", "data"),
+                           model_size: int = 16):
+        """Logical PartitionSpecs matching init_decode_state's structure
+        (guarded against the concrete mesh by launch/dryrun).
+
+        KV caches shard their head dim over `model` when divisible;
+        otherwise the *sequence* dim is sharded (flash-decoding-style
+        sequence parallelism — GSPMD inserts the softmax-stat reductions).
+        Without this, GQA caches with n_kv < model replicate across the
+        model axis and blow the per-chip HBM budget (e.g. granite decode:
+        21 GB/chip replicated vs 1.3 GB sequence-sharded).
+        """
+        from jax.sharding import PartitionSpec as P
+        cfg = self.cfg
+        if cfg.mla is not None:
+            # latent cache sharded over `model` on the TIME dim (flash-
+            # decoding layout): scores/ctx contract T with tiny psum'd
+            # softmax stats.  Latent-dim sharding forces per-layer cache
+            # all-gathers; full replication blows HBM (§Perf cell B log).
+            kv = {"k": P(None, batch_axes, "model", None),
+                  "v": P(None, batch_axes, "model", None)}
+        else:
+            if cfg.n_kv % model_size == 0:
+                kv = {"k": P(None, batch_axes, None, "model", None),
+                      "v": P(None, batch_axes, None, "model", None)}
+                if self._kv_int8:
+                    kv["ks"] = P(None, batch_axes, None, "model")
+                    kv["vs"] = P(None, batch_axes, None, "model")
+            else:
+                kv = {"k": P(None, batch_axes, "model", None, None),
+                      "v": P(None, batch_axes, "model", None, None)}
+                if self._kv_int8:
+                    kv["ks"] = P(None, batch_axes, "model", None)
+                    kv["vs"] = P(None, batch_axes, "model", None)
+        state = {"scan": dict(kv), "length": P()}
+        if self.n_first_dense:
+            state["first"] = dict(kv)
+        return state
+
+    def decode_step(self, params, state, inputs):
+        cfg = self.cfg
+        x = _embed_in(cfg, params, inputs)           # (B, 1, D)
+        length = state["length"]
+        window = cfg.sliding_window
+
+        new_first = None
+        if self.n_first_dense:
+            ks, vs = [], []
+            for i in range(self.n_first_dense):
+                lp = jax.tree.map(lambda a, i=i: a[i],
+                                  params["first_layers"])
+                x, k, v = _block_attn_decode(
+                    cfg, lp, x, state["first"]["k"][i],
+                    state["first"]["v"][i], length, window)
+                x, _ = _block_ffn_forward(cfg, lp, x, use_moe=False)
+                ks.append(k)
+                vs.append(v)
+            new_first = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+
+        if self._kv_int8:
+            x, caches = self._decode_scan_quant(params, state, x, length,
+                                                window)
+            logits = _head_out(cfg, params, x)
+            new_state = {"scan": caches, "length": length + 1}
+            if new_first is not None:
+                new_state["first"] = new_first
+            return new_state, logits
+
+        def body(x, inp):
+            lp, k, v = inp
+            x, k, v = _block_attn_decode(cfg, lp, x, k, v, length, window)
+            x, _ = _block_ffn_forward(cfg, lp, x, use_moe=self.use_moe)
+            return x, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], state["scan"]["k"],
+                      state["scan"]["v"]))
+        logits = _head_out(cfg, params, x)
+        new_state = {"scan": {"k": ks, "v": vs}, "length": length + 1}
+        if new_first is not None:
+            new_state["first"] = new_first
+        return new_state, logits
+
+    def _decode_scan_quant(self, params, state, x, length, window):
+        cfg = self.cfg
+
+        def body(x, inp):
+            lp, k, v, ks_, vs_ = inp
+            h = _norm(cfg, x, lp["ln1"])
+            y, (k, v, ks_, vs_) = A.attn_decode_quant(
+                lp["attn"], h, k, v, ks_, vs_, length,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                window=window)
+            x = x + y
+            x, _ = _block_ffn_forward(cfg, lp, x, use_moe=self.use_moe)
+            return x, (k, v, ks_, vs_)
+
+        sc = state["scan"]
+        x, (k, v, ks_, vs_) = jax.lax.scan(
+            body, x, (params["layers"], sc["k"], sc["v"], sc["ks"],
+                      sc["vs"]))
+        return x, {"k": k, "v": v, "ks": ks_, "vs": vs_}
+
+    def prefill(self, params, inputs, max_len: Optional[int] = None):
+        """Full-sequence pass that also fills the decode caches."""
+        cfg = self.cfg
+        b, s = inputs.shape[:2]
+        max_len = max_len or s
+        logits, (first_kv, kvs) = self.forward(params, inputs,
+                                               return_kv=True,
+                                               logits_mode="last")
+        state = self.init_decode_state(b, max_len)
+
+        def fill(cache, kv):
+            # kv: (L, B, S, ...) from scan; cache: (L, B, T, ...)
+            return jax.lax.dynamic_update_slice(
+                cache, kv.astype(cache.dtype), (0,) * cache.ndim)
+
+        def fill_group(group, k_new, v_new):
+            if self._kv_int8:
+                k_i8, k_sc = A.quantize_kv(k_new)
+                v_i8, v_sc = A.quantize_kv(v_new)
+                group["k"] = fill(group["k"], k_i8)
+                group["v"] = fill(group["v"], v_i8)
+                group["ks"] = fill(group["ks"], k_sc)
+                group["vs"] = fill(group["vs"], v_sc)
+            else:
+                group["k"] = fill(group["k"], k_new)
+                group["v"] = fill(group["v"], v_new)
+
+        fill_group(state["scan"], kvs[0], kvs[1])
+        if self.n_first_dense:
+            fill_group(state["first"],
+                       jnp.stack([kv[0] for kv in first_kv]),
+                       jnp.stack([kv[1] for kv in first_kv]))
+        state["length"] = jnp.asarray(s, jnp.int32)
+        return state, logits
+
+
+# ===========================================================================
+# RWKV6 (ssm family)
+# ===========================================================================
+
+def _init_rwkv_layer(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln1_b": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2_b": jnp.zeros((cfg.d_model,), jnp.float32),
+        "tm": R6.init_time_mix(k1, cfg.d_model, cfg.n_heads,
+                               cfg.compute_dtype),
+        "cm": R6.init_channel_mix(k2, cfg.d_model, cfg.d_ff,
+                                  cfg.compute_dtype),
+    }
+
+
+class RWKVLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.remat = "none"
+
+    def init(self, key):
+        cfg = self.cfg
+        k_eh, k_l, k0 = jax.random.split(key, 3)
+        p = _init_embed_head(cfg, k_eh)
+        p["ln0"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["ln0_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        keys = jax.random.split(k_l, cfg.n_layers)
+        p["layers"] = jax.vmap(
+            functools.partial(_init_rwkv_layer, cfg))(keys)
+        return p
+
+    def _zero_states(self, batch):
+        cfg = self.cfg
+        L = cfg.n_layers
+        st = R6.init_state(batch, cfg.d_model, cfg.n_heads,
+                           cfg.compute_dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), st)
+
+    def _run(self, params, x, states):
+        cfg = self.cfg
+
+        def body(x, inp):
+            lp, st = inp
+            h = layer_norm(x, lp["ln1"], lp["ln1_b"])
+            y, tm_x, S = R6.time_mix(lp["tm"], h, st.tm_x, st.S,
+                                     cfg.n_heads)
+            x = x + y
+            h = layer_norm(x, lp["ln2"], lp["ln2_b"])
+            y, cm_x = R6.channel_mix(lp["cm"], h, st.cm_x)
+            x = x + y
+            x = constrain_tokens(x)
+            return x, R6.RWKVLayerState(tm_x=tm_x, cm_x=cm_x, S=S)
+
+        x, new_states = jax.lax.scan(_maybe_remat(body, self.remat), x,
+                                     (params["layers"], states))
+        return x, new_states
+
+    def forward(self, params, inputs):
+        cfg = self.cfg
+        x = _embed_in(cfg, params, inputs)
+        x = layer_norm(x, params["ln0"], params["ln0_b"])
+        states = self._zero_states(x.shape[0])
+        x, _ = self._run(params, x, states)
+        return _head_out(cfg, params, x)
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch["inputs"])
+        ce = cross_entropy_loss(logits, batch["targets"])
+        return ce, {"ce": ce}
+
+    def init_decode_state(self, batch: int, max_len: int = 0):
+        return {"states": self._zero_states(batch),
+                "length": jnp.zeros((), jnp.int32)}
+
+    def decode_state_specs(self, batch_axes=("pod", "data"),
+                           model_size: int = 16):
+        from jax.sharding import PartitionSpec as P
+        return {"states": R6.RWKVLayerState(
+            tm_x=P(None, batch_axes, "model"),
+            cm_x=P(None, batch_axes, "model"),
+            S=P(None, batch_axes, "model", None, None)),
+            "length": P()}
+
+    def decode_step(self, params, state, inputs):
+        cfg = self.cfg
+        x = _embed_in(cfg, params, inputs)            # (B, 1, D)
+        x = layer_norm(x, params["ln0"], params["ln0_b"])
+        x, new_states = self._run(params, x, state["states"])
+        logits = _head_out(cfg, params, x)
+        return ({"states": new_states, "length": state["length"] + 1},
+                logits)
+
+    def prefill(self, params, inputs, max_len: Optional[int] = None):
+        cfg = self.cfg
+        x = _embed_in(cfg, params, inputs)
+        x = layer_norm(x, params["ln0"], params["ln0_b"])
+        states = self._zero_states(x.shape[0])
+        x, new_states = self._run(params, x, states)
+        logits = _head_out(cfg, params, x[:, -1:])
+        return ({"states": new_states,
+                 "length": jnp.asarray(inputs.shape[1], jnp.int32)}, logits)
+
+
+# ===========================================================================
+# Zamba2-style hybrid: Mamba2 stack + weight-shared attention block
+# ===========================================================================
+
+def _init_mamba_layer(cfg: ModelConfig, key):
+    s = cfg.ssm
+    d_inner = s.d_inner or 2 * cfg.d_model
+    return {
+        "ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "m": M2.init_mamba2(key, cfg.d_model, d_inner, s.d_state,
+                            s.head_dim, cfg.compute_dtype),
+    }
+
+
+def _init_lora(cfg, key):
+    """Per-application LoRA on the shared block's qkv input proj."""
+    r = cfg.shared_lora_rank
+    k1, k2 = jax.random.split(key)
+    return {
+        "lora_a": init_dense(k1, cfg.d_model, r, cfg.compute_dtype,
+                             scale=1e-4),
+        "lora_b": init_dense(k2, r, cfg.d_model, cfg.compute_dtype),
+    }
+
+
+class HybridLM:
+    """n_layers Mamba2 blocks; after every `hybrid_period` of them the
+    weight-shared attention+MLP block runs with a per-application LoRA
+    delta on its input (Zamba2 mechanism, simplified per DESIGN.md §7)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.period = cfg.hybrid_period
+        self.n_groups = cfg.n_layers // self.period
+        self.n_tail = cfg.n_layers - self.n_groups * self.period
+        s = cfg.ssm
+        self.d_inner = s.d_inner or 2 * cfg.d_model
+        self.remat = "none"
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        p = _init_embed_head(cfg, ks[0])
+        # grouped mamba layers (G, period, ...)
+        gkeys = jax.random.split(ks[1], self.n_groups * self.period)
+        stacked = jax.vmap(functools.partial(_init_mamba_layer, cfg))(gkeys)
+        p["mamba_groups"] = jax.tree.map(
+            lambda a: a.reshape((self.n_groups, self.period) + a.shape[1:]),
+            stacked)
+        if self.n_tail:
+            tkeys = jax.random.split(ks[2], self.n_tail)
+            p["mamba_tail"] = jax.vmap(
+                functools.partial(_init_mamba_layer, cfg))(tkeys)
+        p["shared"] = {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": A.init_attn(ks[3], cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                cfg.head_dim, dtype=cfg.compute_dtype),
+            "mlp": init_mlp(ks[4], cfg.d_model, cfg.d_ff, cfg.compute_dtype),
+        }
+        lkeys = jax.random.split(ks[5], self.n_groups)
+        p["lora"] = jax.vmap(functools.partial(_init_lora, cfg))(lkeys)
+        return p
+
+    def _mamba_block(self, lp, x, st):
+        cfg = self.cfg
+        h = _norm(cfg, x, lp["ln"])
+        y, new_st = M2.mamba2_forward(
+            lp["m"], h, st, d_inner=self.d_inner,
+            d_state=cfg.ssm.d_state, head_dim=cfg.ssm.head_dim)
+        return x + y, new_st
+
+    def _shared_block_forward(self, params, lora, x, positions, window,
+                              kv_chunk):
+        cfg = self.cfg
+        sp = params["shared"]
+        h = _norm(cfg, x, sp["ln1"])
+        h = h + (h @ lora["lora_a"]) @ lora["lora_b"]     # per-app LoRA
+        y, kv = A.attn_forward(
+            sp["attn"], h, positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            window=window, kv_chunk=kv_chunk)
+        x = x + y
+        x = x + mlp(sp["mlp"], _norm(cfg, x, sp["ln2"]), cfg.activation)
+        return x, kv
+
+    def _zero_mamba_state(self, batch, n):
+        cfg = self.cfg
+        st = M2.init_state(batch, self.d_inner, cfg.ssm.d_state,
+                           cfg.ssm.head_dim, cfg.compute_dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), st)
+
+    def forward(self, params, inputs, window: Optional[int] = None,
+                return_state: bool = False, max_len: Optional[int] = None,
+                logits_mode: str = "all"):
+        cfg = self.cfg
+        x = _embed_in(cfg, params, inputs)
+        b, s = x.shape[:2]
+        positions = jnp.arange(s)
+        kv_chunk = 2048 if s > 2048 else None
+        window = window if window is not None else cfg.sliding_window
+
+        def inner(x, inp):
+            lp, st = inp
+            x, new_st = self._mamba_block(lp, x, st)
+            return x, new_st
+
+        def group(x, inp):
+            glp, lora, gst = inp
+            x, new_gst = jax.lax.scan(inner, x, (glp, gst))
+            x, kv = self._shared_block_forward(params, lora, x, positions,
+                                               window, kv_chunk)
+            x = constrain_tokens(x)
+            return x, (new_gst, kv)
+
+        gstates = jax.tree.map(
+            lambda a: a.reshape((self.n_groups, self.period) + a.shape[1:]),
+            self._zero_mamba_state(b, self.n_groups * self.period))
+        x, (new_gstates, kvs) = jax.lax.scan(
+            _maybe_remat(group, self.remat), x,
+            (params["mamba_groups"], params["lora"], gstates))
+        new_tail = None
+        if self.n_tail:
+            tstates = self._zero_mamba_state(b, self.n_tail)
+            x, new_tail = jax.lax.scan(inner, x,
+                                       (params["mamba_tail"], tstates))
+        if logits_mode == "last":
+            x = x[:, -1:]
+        logits = _head_out(cfg, params, x)
+        if return_state:
+            return logits, (new_gstates, new_tail, kvs)
+        return logits
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch["inputs"])
+        ce = cross_entropy_loss(logits, batch["targets"])
+        return ce, {"ce": ce}
+
+    def init_decode_state(self, batch: int, max_len: int):
+        cfg = self.cfg
+        # long-context mode: attention cache bounded by the sliding window
+        window = cfg.long_context_window
+        t = min(max_len, window) if cfg.supports_long_context else max_len
+        dt = cfg.compute_dtype
+        return {
+            "groups": jax.tree.map(
+                lambda a: a.reshape((self.n_groups, self.period)
+                                    + a.shape[1:]),
+                self._zero_mamba_state(batch, self.n_groups * self.period)),
+            "tail": (self._zero_mamba_state(batch, self.n_tail)
+                     if self.n_tail else None),
+            "k": jnp.zeros((self.n_groups, batch, t, cfg.n_kv,
+                            cfg.head_dim), dt),
+            "v": jnp.zeros((self.n_groups, batch, t, cfg.n_kv,
+                            cfg.head_dim), dt),
+            "length": jnp.zeros((), jnp.int32),
+        }
+
+    def decode_state_specs(self, batch_axes=("pod", "data"),
+                           model_size: int = 16):
+        from jax.sharding import PartitionSpec as P
+        kv_ax = "model" if self.cfg.n_kv % model_size == 0 else None
+        seq_ax = None if kv_ax else "model"
+        mamba = M2.Mamba2State(
+            h=P(None, None, batch_axes, "model", None, None),
+            conv=P(None, None, batch_axes, None, "model"))
+        out = {
+            "groups": mamba,
+            "tail": (M2.Mamba2State(
+                h=P(None, batch_axes, "model", None, None),
+                conv=P(None, batch_axes, None, "model"))
+                if self.n_tail else None),
+            "k": P(None, batch_axes, seq_ax, kv_ax, None),
+            "v": P(None, batch_axes, seq_ax, kv_ax, None),
+            "length": P(),
+        }
+        return out
+
+    def decode_step(self, params, state, inputs):
+        cfg = self.cfg
+        x = _embed_in(cfg, params, inputs)
+        length = state["length"]
+        t_cache = state["k"].shape[2]
+
+        def inner(x, inp):
+            lp, st = inp
+            x, new_st = self._mamba_block(lp, x, st)
+            return x, new_st
+
+        def group(x, inp):
+            glp, lora, gst, k, v = inp
+            x, new_gst = jax.lax.scan(inner, x, (glp, gst))
+            sp = params["shared"]
+            h = _norm(cfg, x, sp["ln1"])
+            h = h + (h @ lora["lora_a"]) @ lora["lora_b"]
+            y, k_new, v_new = A.attn_decode_ring(
+                sp["attn"], h, k, v, length, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                rope_theta=cfg.rope_theta,
+                window=cfg.long_context_window
+                if cfg.supports_long_context else None)
+            x = x + y
+            x = x + mlp(sp["mlp"], _norm(cfg, x, sp["ln2"]), cfg.activation)
+            return x, (new_gst, k_new, v_new)
+
+        x, (new_g, ks, vs) = jax.lax.scan(
+            group, x, (params["mamba_groups"], params["lora"],
+                       state["groups"], state["k"], state["v"]))
+        new_tail = None
+        if self.n_tail:
+            x, new_tail = jax.lax.scan(
+                inner, x, (params["mamba_tail"], state["tail"]))
+        logits = _head_out(cfg, params, x)
+        return ({"groups": new_g, "tail": new_tail, "k": ks, "v": vs,
+                 "length": length + 1}, logits)
+
+    def prefill(self, params, inputs, max_len: Optional[int] = None):
+        cfg = self.cfg
+        b, s = inputs.shape[:2]
+        max_len = max_len or s
+        logits, (gstates, tail, kvs) = self.forward(params, inputs,
+                                                    return_state=True,
+                                                    logits_mode="last")
+        state = self.init_decode_state(b, max_len)
+        state["groups"] = gstates
+        state["tail"] = tail
+        t = state["k"].shape[2]
+        k_new, v_new = kvs
+        if s >= t:
+            # ring order: slot i must hold the largest position p < s with
+            # p ≡ i (mod t) — static gather (s, t are trace-time constants)
+            import numpy as np
+            i = np.arange(t)
+            pos_idx = (s - 1) - ((s - 1 - i) % t)
+            state["k"] = k_new[:, :, pos_idx].astype(state["k"].dtype)
+            state["v"] = v_new[:, :, pos_idx].astype(state["v"].dtype)
+        else:
+            state["k"] = jax.lax.dynamic_update_slice(
+                state["k"], k_new.astype(state["k"].dtype), (0,) * 5)
+            state["v"] = jax.lax.dynamic_update_slice(
+                state["v"], v_new.astype(state["v"].dtype), (0,) * 5)
+        state["length"] = jnp.asarray(s, jnp.int32)
+        return state, logits
+
+
+# ===========================================================================
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "audio", "vlm", "moe"):
+        return DenseLM(cfg)
+    if cfg.family == "ssm":
+        return RWKVLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,64 @@
+"""Gradient compression utilities (distributed-optimization tricks).
+
+Two mechanisms, each the paper's "reduce the bytes of the accumulation
+step" idea applied to training state instead of SpMV buffers:
+
+  * ``ef_accumulate`` — bf16 gradient-accumulation across microbatches with
+    an fp32 error-feedback residual: halves accumulation-buffer HBM traffic
+    while keeping the summed gradient unbiased to fp32 over time;
+  * ``compressed_psum`` — explicit shard_map all-reduce in bf16 (or int8
+    with per-tensor scale) for DP gradient reduction when the training step
+    is expressed with explicit collectives.  With pjit/GSPMD the backward
+    reduce-scatter is XLA-inserted and keeps the grad dtype — so the lever
+    there is casting grads to bf16 *before* the optimizer (see train/step).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_accumulate(acc_bf16, residual_f32, grad):
+    """One error-feedback accumulation step.
+
+    acc_bf16: running sum (bf16); residual_f32: fp32 error carry;
+    grad: new fp32/bf16 microbatch gradient.
+    Returns (new_acc, new_residual).
+    """
+    def one(a, r, g):
+        want = r + g.astype(jnp.float32)
+        new_a = (a.astype(jnp.float32) + want).astype(jnp.bfloat16)
+        new_r = want - (new_a.astype(jnp.float32) - a.astype(jnp.float32))
+        return new_a, new_r
+    flat_a, td = jax.tree.flatten(acc_bf16)
+    flat_r = jax.tree.leaves(residual_f32)
+    flat_g = jax.tree.leaves(grad)
+    out = [one(a, r, g) for a, r, g in zip(flat_a, flat_r, flat_g)]
+    return (jax.tree.unflatten(td, [o[0] for o in out]),
+            jax.tree.unflatten(td, [o[1] for o in out]))
+
+
+def compressed_psum(tree, axis_name: str, mode: str = "bfloat16"):
+    """All-reduce a pytree across a shard_map axis with on-the-wire
+    compression.  bf16 halves collective bytes; int8 quarters them with
+    per-tensor max-abs scaling (scale itself psum_max'ed first)."""
+    if mode == "float32":
+        return jax.tree.map(lambda g: jax.lax.psum(g, axis_name), tree)
+    if mode == "bfloat16":
+        def one(g):
+            s = jax.lax.psum(g.astype(jnp.bfloat16), axis_name)
+            return s.astype(g.dtype)
+        return jax.tree.map(one, tree)
+    if mode == "int8":
+        def one(g):
+            amax = jnp.max(jnp.abs(g)).astype(jnp.float32)
+            amax = jax.lax.pmax(amax, axis_name)
+            scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+            q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale),
+                         -127, 127).astype(jnp.int8)
+            s = jax.lax.psum(q.astype(jnp.int32), axis_name)
+            return (s.astype(jnp.float32) * scale).astype(g.dtype)
+        return jax.tree.map(one, tree)
+    raise ValueError(mode)

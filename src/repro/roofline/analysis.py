@@ -1,0 +1,153 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+  compute    = HLO_FLOPs            / (chips × 197 TFLOP/s)
+  memory     = HLO_bytes_accessed   / (chips × 819 GB/s)
+  collective = collective_bytes     / (chips × 50 GB/s per link)
+
+HLO_FLOPs / bytes come from compiled.cost_analysis() (already per-module,
+post-SPMD: they are *per-device* totals on the CPU backend's partitioned
+module).  collective_bytes is parsed from the post-optimization HLO text:
+we sum operand bytes of all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute ops.
+
+MODEL_FLOPS (6·N·D train, 2·N·D inference; N = active params for MoE) gives
+the useful-work ratio — remat recompute and ELL/capacity padding show up as
+HLO_FLOPs > MODEL_FLOPS.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  f32[16,512]{1,0}  or  bf16[2,4096]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, int]]:
+    """Per-collective-kind {count, bytes} from post-SPMD HLO text.
+
+    Bytes = output shape bytes of each collective instruction (per-device).
+    Tuple-shaped outputs sum their components.
+    """
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "<name> = <shape> <op>(...)" — find "= shape op(" patterns
+        m = re.match(r"[%\w.\-]+ = ((?:\([^)]*\))|(?:\w+\[[\d,]*\][^ ]*)) "
+                     r"([\w\-]+)\(", s)
+        if not m:
+            continue
+        shape_str, op = m.groups()
+        base = op.rstrip("-start").rstrip("-done") if op.endswith(
+            ("-start", "-done")) else op
+        if base.endswith("-start"):
+            base = base[:-6]
+        if base not in _COLLECTIVES:
+            continue
+        if op.endswith("-done"):
+            continue                      # counted at -start
+        if shape_str.startswith("("):
+            total = sum(_shape_bytes(p.strip())
+                        for p in shape_str[1:-1].split(","))
+        else:
+            total = _shape_bytes(shape_str)
+        stats[base]["count"] += 1
+        stats[base]["bytes"] += total
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+    bytes_per_device: float = 0.0
+    collectives: Optional[dict] = None
+
+    def finalize(self):
+        self.compute_s = self.hlo_flops / PEAK_FLOPS_BF16
+        self.memory_s = self.hlo_bytes / HBM_BW
+        self.collective_s = self.collective_bytes / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        self.useful_ratio = (self.model_flops / max(1.0, self.hlo_flops
+                                                    * self.chips))
+        return self
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (train) / 2·N·D (inference) with N = active params."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.batch
+
+
+def analyze(arch: str, shape, mesh_name: str, chips: int,
+            cost: Dict, hlo_text: str, cfg) -> Roofline:
+    """All three terms from the trip-count-aware HLO rollup (hlo_cost.py).
+
+    XLA's raw cost_analysis counts while bodies once (layer scans would be
+    undercounted ~n_layers×) — its values are kept as ``xla_raw_*``
+    diagnostics only.
+    """
+    from .hlo_cost import analyze_hlo
+    costs = analyze_hlo(hlo_text)
+    r = Roofline(arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+                 hlo_flops=costs.flops, hlo_bytes=costs.bytes,
+                 collective_bytes=costs.collective_bytes,
+                 model_flops=model_flops(cfg, shape),
+                 collectives=costs.collectives)
+    r = r.finalize()
+    r.collectives = dict(r.collectives)
+    r.collectives["xla_raw_flops"] = float(cost.get("flops", 0.0))
+    r.collectives["xla_raw_bytes"] = float(cost.get("bytes accessed", 0.0))
+    return r

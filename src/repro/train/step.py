@@ -1,0 +1,103 @@
+"""train_step factory: remat policy, microbatch gradient accumulation
+(with optional bf16 error-feedback), AdamW update.
+
+Microbatch accumulation uses lax.scan so XLA overlaps the DP gradient
+reduce-scatter of microbatch i with the compute of i+1 (compute/comm
+overlap without manual scheduling).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from repro.optim.compress import ef_accumulate
+
+
+class TrainState(NamedTuple):
+    params: object
+    opt: adamw.AdamWState
+    step: jnp.ndarray
+
+
+def init_train_state(model, opt_cfg: adamw.AdamWConfig, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=adamw.init(opt_cfg, params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(model, opt_cfg: adamw.AdamWConfig,
+                    microbatches: int = 1, remat: str = "full",
+                    accum_dtype: str = "float32") -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``accum_dtype='bfloat16'`` enables error-feedback bf16 accumulation of
+    microbatch gradients (optim/compress.py).
+    """
+    model.remat = remat
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(a):
+                b = a.shape[0]
+                assert b % microbatches == 0, (
+                    f"batch {b} must divide microbatches {microbatches}")
+                return a.reshape((microbatches, b // microbatches)
+                                 + a.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            if accum_dtype == "bfloat16":
+                acc0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+                res0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def body(carry, mb_i):
+                    acc, res, loss_sum = carry
+                    (loss, _), g = grad_fn(params, mb_i)
+                    acc, res = ef_accumulate(acc, res, g)
+                    return (acc, res, loss_sum + loss), None
+
+                (acc, res, loss_sum), _ = jax.lax.scan(
+                    body, (acc0, res0, jnp.zeros((), jnp.float32)), mb)
+                grads = jax.tree.map(
+                    lambda a, r: (a.astype(jnp.float32) + r)
+                    / microbatches, acc, res)
+            else:
+                acc0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def body(carry, mb_i):
+                    acc, loss_sum = carry
+                    (loss, _), g = grad_fn(params, mb_i)
+                    acc = jax.tree.map(
+                        lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                    return (acc, loss_sum + loss), None
+
+                (acc, loss_sum), _ = jax.lax.scan(
+                    body, (acc0, jnp.zeros((), jnp.float32)), mb)
+                grads = jax.tree.map(lambda a: a / microbatches, acc)
+            loss = loss_sum / microbatches
+            metrics = {"ce": loss}
+
+        new_params, new_opt, opt_metrics = adamw.update(
+            opt_cfg, state.opt, params, grads)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# allow plain `pytest tests/` without PYTHONPATH=src
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: deliberately NOT setting XLA_FLAGS here — smoke tests and benches
+# must see 1 device; only launch/dryrun.py forces 512 placeholder devices,
+# and multi-device tests spawn subprocesses with their own XLA_FLAGS.

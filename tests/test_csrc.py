@@ -1,0 +1,102 @@
+"""CSRC format invariants: construction, round-trip, transpose, rectangular
+extension — unit + hypothesis property tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import csrc
+from repro.kernels import ref
+
+
+def dense_roundtrip(A, **kw):
+    M = csrc.from_dense(A, **kw)
+    back = csrc.to_dense(M)
+    np.testing.assert_allclose(back, A.astype(back.dtype), rtol=1e-6)
+    return M
+
+
+def test_paper_example_shape():
+    """A 9×9 structurally-symmetric matrix like the paper's Figure 1:
+    nnz = n + 2k must hold exactly."""
+    M = csrc.fem_band(9, 3, seed=0)
+    assert M.nnz == M.n + 2 * M.k
+    A = csrc.to_dense(M)
+    # structural symmetry: pattern(A) == pattern(A^T)
+    assert ((A != 0) == (A != 0).T).all()
+
+
+def test_roundtrip_poisson():
+    M = csrc.poisson2d(8)
+    A = csrc.to_dense(M)
+    assert A.shape == (64, 64)
+    np.testing.assert_allclose(A, A.T)       # numerically symmetric
+    assert M.numerically_symmetric
+
+
+def test_roundtrip_nonsymmetric_values():
+    M = csrc.fem_band(40, 6, seed=3)
+    A = csrc.to_dense(M)
+    assert not np.allclose(A, A.T)
+    assert not M.numerically_symmetric
+    dense_roundtrip(A)
+
+
+def test_pattern_padding():
+    """General matrices get explicit zeros at missing transpose slots."""
+    A = np.zeros((4, 4), np.float32)
+    A[0, 0] = 1; A[2, 0] = 3.0; A[3, 3] = 2.0     # (0,2) missing
+    M = csrc.from_dense(A)
+    assert M.k == 1                                 # one lower slot
+    np.testing.assert_allclose(csrc.to_dense(M), A)
+
+
+def test_transpose_is_swap():
+    M = csrc.fem_band(32, 5, seed=1)
+    Mt = csrc.transpose(M)
+    np.testing.assert_allclose(csrc.to_dense(Mt), csrc.to_dense(M).T,
+                               rtol=1e-6)
+    # O(1): same underlying arrays, swapped
+    assert Mt.al is M.au and Mt.au is M.al
+
+
+def test_rectangular_extension():
+    M = csrc.rectangular_fem(24, 8, 4, seed=2)
+    assert M.m == 32 and M.n == 24
+    A = csrc.to_dense(M)
+    x = np.random.default_rng(0).standard_normal(32).astype(np.float32)
+    y = ref.csrc_spmv(M, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(y), A @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_bandwidth_and_nnz_per_row():
+    M = csrc.fem_band(50, 7, seed=0)
+    assert csrc.bandwidth(M) <= 7
+    npr = csrc.nnz_per_row(M)
+    A = csrc.to_dense(M)
+    np.testing.assert_array_equal(npr, (A != 0).sum(axis=1))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 24), st.integers(1, 6), st.integers(0, 10_000))
+def test_property_roundtrip_and_spmv(n, band, seed):
+    """Property: for any random band matrix, CSRC round-trips exactly and
+    its SpMV matches the dense product."""
+    M = csrc.fem_band(n, min(band, n - 1), seed=seed)
+    A = csrc.to_dense(M)
+    assert ((A != 0) == (A != 0).T).all()
+    x = np.random.default_rng(seed).standard_normal(n).astype(np.float32)
+    y = np.asarray(ref.csrc_spmv(M, jnp.asarray(x)))
+    np.testing.assert_allclose(y, A @ x, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 12), st.integers(0, 10_000))
+def test_property_dense_general(n, seed):
+    """Any dense nonsymmetric matrix is representable (pattern padding)."""
+    rng = np.random.default_rng(seed)
+    A = np.where(rng.random((n, n)) < 0.5,
+                 rng.standard_normal((n, n)), 0.0).astype(np.float32)
+    M = csrc.from_dense(A)
+    np.testing.assert_allclose(csrc.to_dense(M), A, rtol=1e-6)
+    assert M.nnz >= int((A != 0).sum())      # padding only adds slots

@@ -1,0 +1,118 @@
+"""Mamba2 SSD: chunked block-parallel form vs the recurrent scan."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import mamba2 as M
+
+
+def _recurrent(xs, Bm, Cm, dt, a, h0):
+    def step(h, inp):
+        x_t, b_t, c_t, dt_t = inp
+        decay = jnp.exp(a * dt_t)
+        dbx = (dt_t[..., None] * x_t)[..., None] * b_t[:, None, None, :]
+        h = decay[..., None, None] * h + dbx
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+        return h, y
+    h_new, ys = jax.lax.scan(
+        step, h0, (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(Bm, 1, 0),
+                   jnp.moveaxis(Cm, 1, 0), jnp.moveaxis(dt, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), h_new
+
+
+@pytest.mark.parametrize("t", [16, 64, 128])
+def test_chunked_ssd_matches_recurrent(t):
+    rng = np.random.default_rng(t)
+    bt, h, p, n = 2, 3, 8, 4
+    xs = jnp.asarray(rng.standard_normal((bt, t, h, p)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((bt, t, n)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((bt, t, n)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((bt, t, h))) * 0.1,
+                     jnp.float32)
+    a = -jnp.exp(jnp.linspace(0.0, 1.0, h))
+    h0 = jnp.asarray(rng.standard_normal((bt, h, p, n)) * 0.1, jnp.float32)
+    y_ref, h_ref = _recurrent(xs, Bm, Cm, dt, a, h0)
+    y_chk, h_chk = M._ssd_chunked(xs, Bm, Cm, dt, a, h0)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_flag_end_to_end():
+    """Full hybrid model forward agrees between recurrent and chunked."""
+    from repro.configs.base import get_config
+    from repro.models.transformer import build_model
+    cfg = get_config("zamba2-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    inputs = jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)
+    y1 = model.forward(params, inputs)
+    old = M.CHUNKED_SSD
+    try:
+        M.CHUNKED_SSD = True
+        y2 = model.forward(params, inputs)
+    finally:
+        M.CHUNKED_SSD = old
+    err = float(jnp.abs(y1.astype(jnp.float32)
+                        - y2.astype(jnp.float32)).max())
+    scale = float(jnp.abs(y1.astype(jnp.float32)).max()) + 1e-6
+    assert err / scale < 2e-2, err / scale
+
+
+class TestChunkedWKV:
+    """RWKV6 chunked WKV (cell F) vs recurrent scan."""
+
+    @staticmethod
+    def _recurrent(r, k, v, w, u, S):
+        def step(S, inp):
+            r_t, k_t, v_t, w_t = inp
+            kv = k_t[..., :, None] * v_t[..., None, :]
+            y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., None] * kv)
+            S = w_t[..., None] * S + kv
+            return S, y
+        S, ys = jax.lax.scan(
+            step, S, tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w)))
+        return jnp.moveaxis(ys, 0, 1), S
+
+    @pytest.mark.parametrize("t", [16, 48, 96])
+    def test_matches_recurrent(self, t):
+        from repro.models import rwkv6 as R
+        rng = np.random.default_rng(t)
+        b, h, n = 2, 3, 8
+        r = jnp.asarray(rng.standard_normal((b, t, h, n)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, t, h, n)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, t, h, n)), jnp.float32)
+        w = jnp.asarray(rng.uniform(0.05, 0.99, (b, t, h, n)), jnp.float32)
+        u = jnp.asarray(rng.standard_normal((h, n)), jnp.float32)
+        S0 = jnp.asarray(rng.standard_normal((b, h, n, n)) * 0.1,
+                         jnp.float32)
+        y_ref, s_ref = self._recurrent(r, k, v, w, u, S0)
+        y_chk, s_chk = R._wkv_chunked(r, k, v, w, u, S0)
+        np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                                   rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s_chk), np.asarray(s_ref),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_end_to_end_flag(self):
+        from repro.configs.base import get_config
+        from repro.models.transformer import build_model
+        from repro.models import rwkv6 as R
+        cfg = get_config("rwkv6-1.6b", reduced=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        inputs = jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)
+        y1 = model.forward(params, inputs)
+        old = R.CHUNKED_WKV
+        try:
+            R.CHUNKED_WKV = True
+            y2 = model.forward(params, inputs)
+        finally:
+            R.CHUNKED_WKV = old
+        err = float(jnp.abs(y1.astype(jnp.float32)
+                            - y2.astype(jnp.float32)).max())
+        scale = float(jnp.abs(y1.astype(jnp.float32)).max()) + 1e-6
+        assert err / scale < 2e-2, err / scale
