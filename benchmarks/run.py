@@ -21,13 +21,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import csrc
+from repro.core import csrc, tuner
 from repro.core.coloring import color_rows
 from repro.kernels import ref, ops
 from benchmarks.util import time_fn, row
 from benchmarks.suite import matrices
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+PLAN_CACHE_PATH = os.path.join(ROOT, "results", "plans.json")
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +166,47 @@ def fig89_scaling(small: bool):
 
 
 # ---------------------------------------------------------------------------
+# Tuned vs default execution plans (the plan/autotune subsystem)
+# ---------------------------------------------------------------------------
+
+def tuned_vs_default(small: bool):
+    """Per matrix class: the autotuned ExecutionPlan vs the static default
+    (the old hard-coded kernel-else-segment decision) — the paper's point
+    that strategy selection is a per-matrix problem, measured."""
+    print("# tuned_vs_default: autotuned plan vs static default per class")
+    rng = np.random.default_rng(0)
+    cache = tuner.PlanCache()          # in-memory; --tune persists to disk
+    for name, make in matrices(small):
+        M = make()
+        x = jnp.asarray(rng.standard_normal(M.m).astype(np.float32))
+        default_op = ops.SpmvOperator(M)              # static 'auto'
+        result = tuner.tune(M, cache=cache, x=np.asarray(x),
+                            candidates=tuner.enumerate_plans(
+                                tuner.stats_of(M), colorful_max_n=1200))
+        tuned_op = ops.SpmvOperator.from_plan(M, result.plan)
+        t_def = time_fn(default_op, x)
+        t_tuned = time_fn(tuned_op, x)
+        row(f"tuned/{name}", t_tuned * 1e6,
+            f"plan={result.plan.key()};default={default_op.plan.key()};"
+            f"default_us={t_def*1e6:.1f};speedup={t_def/t_tuned:.2f}")
+
+
+def pretune(small: bool):
+    """Offline pre-tuning (``python -m benchmarks.run --tune``): tune every
+    suite matrix and persist the plan cache for solvers/serving to load."""
+    cache = tuner.PlanCache(path=PLAN_CACHE_PATH)
+    for name, make in matrices(small):
+        M = make()
+        result = tuner.tune(M, cache=cache)
+        state = "cached" if result.cached else "tuned"
+        print(f"# pretune {name}: {state} -> {result.plan.key()} "
+              f"({result.fingerprint})")
+    cache.save()
+    print(f"# plan cache written: {PLAN_CACHE_PATH} "
+          f"({len(cache)} entries)")
+
+
+# ---------------------------------------------------------------------------
 # §Roofline summary from the dry-run records
 # ---------------------------------------------------------------------------
 
@@ -189,15 +231,21 @@ def roofline_summary(small: bool):
 
 
 BENCHES = [fig5_sequential, table2_accumulation, fig6_colorful,
-           fig89_scaling, roofline_summary]
+           fig89_scaling, tuned_vs_default, roofline_summary]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller matrices for CI-speed runs")
+    ap.add_argument("--tune", action="store_true",
+                    help="pre-tune the suite offline and write "
+                         "results/plans.json, then exit")
     ap.add_argument("--only", default=None)
     args, _ = ap.parse_known_args()
+    if args.tune:
+        pretune(args.quick)
+        return
     for bench in BENCHES:
         if args.only and args.only not in bench.__name__:
             continue

@@ -1,11 +1,11 @@
-"""Quickstart: the CSRC sparse engine in six steps.
+"""Quickstart: the CSRC sparse engine in seven steps.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import csrc, solvers
+from repro.core import csrc, solvers, tuner
 from repro.core.coloring import color_rows
 from repro.kernels import ops
 
@@ -43,3 +43,13 @@ print(f"CG: converged={bool(res.converged)} iters={int(res.iters)} "
 X = jnp.asarray(np.random.default_rng(1).standard_normal((M.n, 8)),
                 dtype=jnp.float32)
 print("SpMM out:", ops.spmm(M, X).shape)
+
+# 7. Autotune: measure every feasible ExecutionPlan, cache the argmin by
+#    matrix fingerprint (README "Execution plans and autotuning").
+cache = tuner.PlanCache()
+result = tuner.tune(M, cache=cache)
+print(f"tuned plan: {result.plan.key()}  "
+      f"({len(result.timings_s)} candidates measured)")
+res2, op2 = solvers.cg_solve(M, b, cache=cache, maxiter=2000)
+print(f"cg_solve via cached plan: converged={bool(res2.converged)} "
+      f"plan={op2.plan.key()} cache_hits={cache.hits}")

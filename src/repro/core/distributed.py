@@ -39,7 +39,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+try:                                    # jax >= 0.6 top-level export
+    from jax import shard_map
+except ImportError:                     # jax 0.4.x
+    from jax.experimental.shard_map import shard_map
 
 from .csrc import CSRC, bandwidth, row_of_slot
 from .partition import partition_rows_by_nnz, RowPartition

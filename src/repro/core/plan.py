@@ -1,0 +1,123 @@
+"""Execution plans: every degree of freedom of a CSRC SpMV, in one record.
+
+The paper's central empirical result is that *which* parallelization
+strategy wins — local buffers with one of four accumulation methods, or
+colorful partitioning — depends on the matrix: working-set size, band
+structure, and numeric symmetry decide it per input (§4, Figs. 5–9).
+``ExecutionPlan`` reifies that decision so it can be enumerated, measured,
+cached, and shipped between processes instead of being hard-coded in
+``SpmvOperator``:
+
+  path               single-device compute strategy
+                       'kernel'   block-ELL Pallas kernel (banded matrices)
+                       'segment'  segment-sum jnp path (any matrix)
+                       'colorful' color-by-color permutation writes (§3.2)
+  tm                 block-ELL row-tile height (kernel path)
+  w_cap              max window width the kernel will accept before the
+                     pack is declared infeasible (bandwidth gate)
+  k_step_sublanes    slot padding granularity in 128-lane sublanes; the
+                     pack's k_step is 128 * k_step_sublanes
+  partition          row partitioning for sharding: 'nnz' (paper's
+                     nnz-guided split) or 'count' (naive row count)
+  accumulation       distributed accumulation strategy (core/distributed):
+                     'allreduce' (all-in-one), 'reduce_scatter'
+                     (per-buffer/interval), or 'halo' (effective)
+
+Plans are plain data: JSON-serializable, hashable, comparable.  The tuner
+(core/tuner.py) enumerates feasible plans from matrix statistics, measures
+them, and caches the argmin per matrix fingerprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict
+
+PATHS = ("kernel", "segment", "colorful")
+PARTITIONS = ("nnz", "count")
+ACCUMULATIONS = ("allreduce", "reduce_scatter", "halo")
+
+LANES = 128                     # TPU lane count; sublane unit for k_step
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """A fully-resolved SpMV execution strategy (no 'auto' anywhere)."""
+
+    path: str = "segment"
+    tm: int = 128
+    w_cap: int = 4096
+    k_step_sublanes: int = 8
+    partition: str = "nnz"
+    accumulation: str = "allreduce"
+
+    def __post_init__(self):
+        if self.path not in PATHS:
+            raise ValueError(f"path {self.path!r} not in {PATHS}")
+        if self.partition not in PARTITIONS:
+            raise ValueError(
+                f"partition {self.partition!r} not in {PARTITIONS}")
+        if self.accumulation not in ACCUMULATIONS:
+            raise ValueError(
+                f"accumulation {self.accumulation!r} not in {ACCUMULATIONS}")
+        if self.tm < 1:
+            raise ValueError(f"tm must be >= 1, got {self.tm}")
+        if self.k_step_sublanes < 1:
+            raise ValueError(
+                f"k_step_sublanes must be >= 1, got {self.k_step_sublanes}")
+
+    @property
+    def k_step(self) -> int:
+        return LANES * self.k_step_sublanes
+
+    def key(self) -> str:
+        """Stable short identifier (used in cache timing tables and CSV)."""
+        if self.path == "kernel":
+            return (f"kernel:tm{self.tm}:ks{self.k_step_sublanes}"
+                    f":{self.partition}:{self.accumulation}")
+        return f"{self.path}:{self.partition}:{self.accumulation}"
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ExecutionPlan":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExecutionPlan":
+        return cls.from_dict(json.loads(s))
+
+
+def kernel_window(tm: int, bandwidth: int) -> int:
+    """The padded window width the block-ELL pack would use (blockell.pack):
+    round_up(tm + bandwidth, max(128, tm))."""
+    return _round_up(tm + bandwidth, max(LANES, tm))
+
+
+def feasible(plan: ExecutionPlan, *, n: int, m: int, bandwidth: int) -> bool:
+    """Can this plan execute the matrix at all?
+
+    * 'segment' handles everything, including the rectangular tail;
+    * 'kernel' needs a square matrix whose window fits under w_cap;
+    * 'colorful' needs a square matrix (the color loop covers only the
+      structurally-symmetric part).
+    """
+    if plan.path == "segment":
+        return True
+    if n != m:
+        return False
+    if plan.path == "kernel":
+        return kernel_window(plan.tm, bandwidth) <= plan.w_cap
+    return True                  # colorful
+
+
+DEFAULT_PLAN = ExecutionPlan()

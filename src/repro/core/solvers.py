@@ -16,7 +16,7 @@ shard_map product — so the whole paper stack composes.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -105,3 +105,29 @@ def bicgstab(spmv: Callable, b: jnp.ndarray,
     out = jax.lax.while_loop(cond, body, init)
     x, k, res = out[0], out[-2], out[-1]
     return SolveResult(x=x, iters=k, residual=res, converged=res <= tol)
+
+
+def cg_solve(M, b: jnp.ndarray, *, plan=None, cache=None,
+             autotune: bool = False, interpret: bool = True,
+             x0: Optional[jnp.ndarray] = None, tol: float = 1e-6,
+             maxiter: int = 1000, precondition: bool = True,
+             **tune_kw) -> Tuple[SolveResult, object]:
+    """Matrix-level CG: builds the SpMV operator through the plan/tuner
+    subsystem instead of a hard-coded path.
+
+    Resolution order: an explicit ``plan`` wins; else the plan-cache /
+    tuner (``autotune=True`` measures candidates, ``False`` uses the
+    measurement-free heuristic; either way a cache hit skips everything).
+    Returns ``(SolveResult, operator)`` — the operator exposes the
+    concrete plan it ran as ``op.plan``.
+    """
+    from repro.core import tuner as _tuner
+    from repro.kernels.ops import SpmvOperator
+
+    if plan is None:
+        plan = _tuner.plan_for(M, cache=cache, autotune=autotune,
+                               interpret=interpret, **tune_kw)
+    op = SpmvOperator.from_plan(M, plan, interpret=interpret)
+    res = cg(op, b, x0=x0, tol=tol, maxiter=maxiter,
+             diag=M.ad if precondition else None)
+    return res, op

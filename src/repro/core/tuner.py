@@ -1,0 +1,361 @@
+"""Autotuner: measure feasible ExecutionPlans per matrix, cache the argmin.
+
+This is the paper's per-matrix strategy-selection problem (§4: which of
+local-buffers/accumulation-variants vs. colorful wins depends on the
+matrix) solved the way RACE (arXiv:1907.06487) and Bergmans et al.
+(arXiv:2502.19284) do it: enumerate feasible candidates from matrix
+statistics, *measure* them, and remember the winner.
+
+Pieces:
+
+  MatrixStats / stats_of     the statistics that gate candidates
+                             (bandwidth, nnz/row deviation, working set,
+                             numeric symmetry)
+  fingerprint                stable string key of a matrix *class*
+                             (n, m, k, bandwidth, nnz-histogram digest)
+  enumerate_plans            feasible candidates from stats; extensible —
+                             new kernels register a candidate source with
+                             @register_candidate_source
+  heuristic_plan             measurement-free default (mirrors the old
+                             static auto path, plus distributed strategy
+                             selection from the collective-bytes model)
+  PlanCache                  JSON plan cache keyed by fingerprint; a hit
+                             skips re-measurement entirely
+  tune / plan_for            the tuning entry points used by solvers,
+                             the serve engine, and benchmarks
+
+The timing harness is benchmarks/util.time_fn when importable (running
+from the repo root); a same-contract fallback is inlined so the tuner
+works from any installed location.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from .csrc import CSRC, bandwidth as csrc_bandwidth, nnz_per_row
+from .plan import ExecutionPlan, feasible, kernel_window
+
+try:                                          # repo-root layout
+    from benchmarks.util import time_fn as _time_fn
+except ImportError:                           # installed / src-only path
+    def _time_fn(fn, *args, warmup: int = 3, repeats: int = 10) -> float:
+        """Median wall-clock seconds per call (benchmarks/util.py contract)."""
+        import jax
+        for _ in range(warmup):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+
+# ---------------------------------------------------------------------------
+# Matrix statistics and fingerprinting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MatrixStats:
+    n: int
+    m: int
+    k: int
+    nnz: int
+    bandwidth: int
+    working_set_bytes: int
+    nnz_row_mean: float
+    nnz_row_dev: float            # std of nnz per row (load-balance driver)
+    numerically_symmetric: bool
+
+
+def stats_of(M: CSRC) -> MatrixStats:
+    w = nnz_per_row(M)
+    return MatrixStats(
+        n=M.n, m=M.m, k=M.k, nnz=M.nnz,
+        bandwidth=csrc_bandwidth(M),
+        working_set_bytes=M.working_set_bytes(),
+        nnz_row_mean=float(w.mean()),
+        nnz_row_dev=float(w.std()),
+        numerically_symmetric=bool(M.numerically_symmetric),
+    )
+
+
+def fingerprint(M: CSRC) -> str:
+    """Stable key of the matrix *class*: (n, m, k, bandwidth) in the clear
+    plus a digest of the nnz-per-row histogram and symmetry flag.  Two
+    matrices of the same class (same generator, same size) share a key, so
+    solvers and the serve engine never re-tune a known class."""
+    w = nnz_per_row(M)
+    hist = np.bincount(np.minimum(w, 255).astype(np.int64), minlength=256)
+    h = hashlib.sha1()
+    h.update(hist.astype(np.int64).tobytes())
+    h.update(bytes([int(M.numerically_symmetric)]))
+    band = csrc_bandwidth(M)
+    return f"n{M.n}m{M.m}k{M.k}b{band}-{h.hexdigest()[:12]}"
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration
+# ---------------------------------------------------------------------------
+
+_CANDIDATE_SOURCES: List[Callable[[MatrixStats], List[ExecutionPlan]]] = []
+
+
+def register_candidate_source(fn):
+    """Extension hook: future kernels register a function
+    ``stats -> [ExecutionPlan, ...]``; its (feasible) plans join every
+    enumeration and therefore every tuning run."""
+    _CANDIDATE_SOURCES.append(fn)
+    return fn
+
+
+def _distributed_fields(stats: MatrixStats, p_hint: int = 8):
+    """Analytic choice of the sharding degrees of freedom (not measured on
+    a single chip): nnz-guided partition unless rows are uniform; halo when
+    the band fits inside a shard (the collective-bytes model's winner),
+    reduce_scatter otherwise."""
+    partition = "nnz" if stats.nnz_row_dev > 0 else "count"
+    rows_per_shard = max(1, -(-stats.n // p_hint))
+    acc = ("halo" if stats.bandwidth <= max(8, rows_per_shard)
+           else "reduce_scatter")
+    return partition, acc
+
+
+def enumerate_plans(stats: MatrixStats,
+                    tms=(32, 128),
+                    k_steps_sublanes=(8,),
+                    w_cap: int = 4096,
+                    colorful_max_n: int = 2048,
+                    p_hint: int = 8) -> List[ExecutionPlan]:
+    """All feasible candidate plans for a matrix with these statistics.
+
+    The segment path is always a candidate.  Kernel plans are emitted per
+    (tm, k_step) whose window fits under ``w_cap``.  Colorful is emitted
+    for square matrices small enough that the O(n·deg²) greedy coloring is
+    worth attempting (the paper benchmarks it on narrow-band matrices).
+    """
+    partition, acc = _distributed_fields(stats, p_hint)
+    plans = [ExecutionPlan(path="segment", w_cap=w_cap,
+                           partition=partition, accumulation=acc)]
+    square = stats.n == stats.m
+    if square:
+        for tm in tms:
+            if kernel_window(tm, stats.bandwidth) > w_cap:
+                continue
+            for ks in k_steps_sublanes:
+                plans.append(ExecutionPlan(
+                    path="kernel", tm=tm, w_cap=w_cap, k_step_sublanes=ks,
+                    partition=partition, accumulation=acc))
+        if stats.n <= colorful_max_n and stats.k > 0:
+            plans.append(ExecutionPlan(path="colorful", w_cap=w_cap,
+                                       partition=partition,
+                                       accumulation=acc))
+    for source in _CANDIDATE_SOURCES:
+        for p in source(stats):
+            if feasible(p, n=stats.n, m=stats.m, bandwidth=stats.bandwidth):
+                plans.append(p)
+    # dedup on the full plan (frozen dataclass), preserving order — key()
+    # elides execution-irrelevant fields and must not drop distinct plans
+    seen, out = set(), []
+    for p in plans:
+        if p not in seen:
+            seen.add(p)
+            out.append(p)
+    return out
+
+
+def heuristic_plan(stats: MatrixStats, tm: int = 128,
+                   w_cap: int = 4096) -> ExecutionPlan:
+    """Measurement-free plan: the old SpmvOperator 'auto' logic (kernel if
+    the window fits, else segment) with the analytic distributed fields."""
+    partition, acc = _distributed_fields(stats)
+    square = stats.n == stats.m
+    if square and kernel_window(tm, stats.bandwidth) <= w_cap:
+        return ExecutionPlan(path="kernel", tm=tm, w_cap=w_cap,
+                             partition=partition, accumulation=acc)
+    return ExecutionPlan(path="segment", w_cap=w_cap,
+                         partition=partition, accumulation=acc)
+
+
+# ---------------------------------------------------------------------------
+# Plan cache
+# ---------------------------------------------------------------------------
+
+class PlanCache:
+    """JSON plan cache keyed by matrix fingerprint.
+
+    File format (version 1):
+
+        {"version": 1,
+         "entries": {"<fingerprint>": {"plan": {...ExecutionPlan fields...},
+                                       "best_us": 12.3,
+                                       "timings_us": {"<plan key>": 12.3}}}}
+
+    A ``get`` hit returns the stored plan without any re-measurement; the
+    hit/miss counters let tests (and ops dashboards) assert that.  Entries
+    carry a ``measured`` flag: heuristic (unmeasured) plans cached by
+    ``plan_for(autotune=False)`` are visible to heuristic lookups but do
+    NOT satisfy ``tune()``, which would otherwise report a never-measured
+    plan as the argmin.
+    """
+
+    VERSION = 1
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.entries: Dict[str, Dict] = {}
+        self.hits = 0
+        self.misses = 0
+        if path is not None and os.path.exists(path):
+            self._read(path)
+
+    def _read(self, path: str):
+        with open(path) as f:
+            data = json.load(f)
+        if data.get("version") != self.VERSION:
+            raise ValueError(
+                f"plan cache {path}: version {data.get('version')!r} "
+                f"!= {self.VERSION}")
+        self.entries = dict(data.get("entries", {}))
+
+    def save(self, path: Optional[str] = None):
+        path = path or self.path
+        if path is None:
+            raise ValueError("PlanCache.save: no path given or stored")
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"version": self.VERSION, "entries": self.entries},
+                      f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        self.path = path
+
+    def get(self, fp: str,
+            require_measured: bool = False) -> Optional[ExecutionPlan]:
+        e = self.entries.get(fp)
+        if e is None or (require_measured and not e.get("measured")):
+            self.misses += 1
+            return None
+        self.hits += 1
+        return ExecutionPlan.from_dict(e["plan"])
+
+    def put(self, fp: str, plan: ExecutionPlan,
+            timings_s: Optional[Dict[str, float]] = None):
+        entry: Dict = {"plan": plan.to_dict(),
+                       "measured": bool(timings_s)}
+        if timings_s:
+            entry["timings_us"] = {k: round(v * 1e6, 3)
+                                   for k, v in timings_s.items()}
+            entry["best_us"] = round(min(timings_s.values()) * 1e6, 3)
+        self.entries[fp] = entry
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+
+# ---------------------------------------------------------------------------
+# Tuning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    plan: ExecutionPlan
+    fingerprint: str
+    timings_s: Dict[str, float]   # plan.key() -> seconds; empty on cache hit
+    cached: bool
+
+
+def tune(M: CSRC,
+         cache: Optional[PlanCache] = None,
+         x: Optional[np.ndarray] = None,
+         candidates: Optional[List[ExecutionPlan]] = None,
+         measure: Optional[Callable] = None,
+         warmup: int = 1,
+         repeats: int = 3,
+         interpret: bool = True,
+         save: bool = True) -> TuneResult:
+    """Measure every feasible candidate and return the argmin plan.
+
+    ``cache`` short-circuits: a fingerprint hit returns the stored plan
+    with zero measurements.  ``measure(op, x) -> seconds`` is injectable
+    for tests; the default is the benchmarks/util timing harness with a
+    small budget (the tuner runs at operator-construction time).
+    """
+    from repro.kernels.ops import SpmvOperator   # local: avoid import cycle
+
+    fp = fingerprint(M)
+    if cache is not None:
+        # a heuristic (unmeasured) entry must not satisfy a tune request
+        hit = cache.get(fp, require_measured=True)
+        if hit is not None:
+            return TuneResult(plan=hit, fingerprint=fp, timings_s={},
+                              cached=True)
+
+    stats = stats_of(M)
+    cands = candidates if candidates is not None else enumerate_plans(stats)
+    if measure is None:
+        def measure(op, xv):
+            return _time_fn(op, xv, warmup=warmup, repeats=repeats)
+    if x is None:
+        x = np.random.default_rng(0).standard_normal(M.m).astype(np.float32)
+    import jax.numpy as jnp
+    xj = jnp.asarray(x)
+
+    timings: Dict[str, float] = {}
+    best_plan, best_t = None, float("inf")
+    for p in cands:
+        if not feasible(p, n=M.n, m=M.m, bandwidth=stats.bandwidth):
+            continue
+        try:
+            op = SpmvOperator.from_plan(M, p, interpret=interpret)
+        except ValueError:
+            continue              # pack-time infeasibility (bandwidth gate)
+        t = float(measure(op, xj))
+        timings[p.key()] = t
+        if t < best_t:
+            best_plan, best_t = p, t
+    if best_plan is None:
+        raise ValueError("no feasible execution plan for this matrix")
+
+    if cache is not None:
+        cache.put(fp, best_plan, timings)
+        if save and cache.path is not None:
+            cache.save()
+    return TuneResult(plan=best_plan, fingerprint=fp, timings_s=timings,
+                      cached=False)
+
+
+def plan_for(M: CSRC,
+             cache: Optional[PlanCache] = None,
+             autotune: bool = False,
+             **tune_kw) -> ExecutionPlan:
+    """The plan to run this matrix with.
+
+    Cache hit wins; otherwise ``autotune=True`` measures (and fills the
+    cache), ``autotune=False`` falls back to the measurement-free
+    heuristic (still cached, so the decision is stable across calls).
+    """
+    if autotune:
+        # tune() performs the cache probe itself — probing here too would
+        # double-count misses and fingerprint twice
+        return tune(M, cache=cache, **tune_kw).plan
+    fp = fingerprint(M)
+    if cache is not None:
+        hit = cache.get(fp)
+        if hit is not None:
+            return hit
+    plan = heuristic_plan(stats_of(M))
+    if cache is not None:
+        cache.put(fp, plan)
+        if cache.path is not None:
+            cache.save()
+    return plan

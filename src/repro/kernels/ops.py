@@ -1,11 +1,17 @@
 """Public jit'd entry points for the CSRC SpMV kernels.
 
-``spmv(M, x)`` picks the best available path:
+``SpmvOperator`` executes an :class:`repro.core.plan.ExecutionPlan`:
 
-  * block-ELL Pallas kernel when the matrix is banded enough to window
-    (interpret-mode on CPU, compiled on TPU);
-  * segment-sum jnp path otherwise (the paper's finding: unbanded matrices
-    defeat locality strategies — cage15/F1 analogue).
+  * 'kernel'   block-ELL Pallas kernel when the matrix is banded enough to
+    window (interpret-mode on CPU, compiled on TPU);
+  * 'segment'  segment-sum jnp path (any matrix, incl. the rectangular tail);
+  * 'colorful' the paper's §3.2 color-by-color permutation writes.
+
+Construction accepts either a fully-resolved plan (``from_plan``, the
+tuner path) or the legacy keyword form where ``path='auto'`` resolves to
+kernel-if-packable-else-segment (the paper's static fallback).  Either
+way the operator *emits* the concrete plan it runs as ``op.plan``, so
+callers can cache, log, or replay the decision.
 """
 from __future__ import annotations
 
@@ -17,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core.csrc import CSRC
 from repro.core import blockell
+from repro.core.plan import ExecutionPlan
 from . import ref
 from . import csrc_spmv as kernel_mod
 
@@ -25,25 +32,40 @@ class SpmvOperator:
     """A prepared SpMV y = A·x for repeated application (iterative solvers).
 
     Packs once, jits once; call like a function.  ``path`` is one of
-    'auto' | 'kernel' | 'segment' | 'colorful'.
+    'auto' | 'kernel' | 'segment' | 'colorful'; or pass ``plan=`` /
+    use :meth:`from_plan` to pin every degree of freedom.
     """
 
     def __init__(self, M: CSRC, path: str = "auto", tm: int = 128,
                  w_cap: int = 4096, interpret: bool = True,
-                 coloring=None):
+                 coloring=None, k_step: int = 1024,
+                 plan: Optional[ExecutionPlan] = None):
+        if plan is not None:
+            path, tm, w_cap = plan.path, plan.tm, plan.w_cap
+            k_step = plan.k_step
         self.M = M
         self.n, self.m = M.n, M.m
         self.pack = None
+        self.coloring = coloring
         self.path = path
         if path in ("auto", "kernel") and M.is_square:
             try:
-                self.pack = blockell.pack(M, tm=tm, w_cap=w_cap)
+                self.pack = blockell.pack(M, tm=tm, k_step=k_step,
+                                          w_cap=w_cap)
                 self.path = "kernel"
             except ValueError:
                 if path == "kernel":
                     raise
                 self.path = "segment"
+        elif path == "kernel":
+            raise ValueError(
+                "kernel path packs the square CSRC part only; "
+                "use 'segment' for rectangular matrices")
         elif path == "colorful":
+            if not M.is_square:
+                raise ValueError(
+                    "colorful path covers the square CSRC part only; "
+                    "use 'segment' for rectangular matrices")
             from repro.core.coloring import color_rows
             self.coloring = coloring or color_rows(M)
         else:
@@ -61,6 +83,21 @@ class SpmvOperator:
         else:
             raise ValueError(f"unknown path {path}")
 
+        # the concrete plan this operator executes (legacy 'auto' resolved)
+        if plan is not None and plan.path == self.path:
+            self.plan = plan
+        else:
+            self.plan = ExecutionPlan(
+                path=self.path, tm=tm, w_cap=w_cap,
+                k_step_sublanes=max(1, k_step // 128))
+
+    @classmethod
+    def from_plan(cls, M: CSRC, plan: ExecutionPlan,
+                  interpret: bool = True, coloring=None) -> "SpmvOperator":
+        """Strict construction: the plan's path is executed as given (a
+        'kernel' plan whose window does not fit raises ValueError)."""
+        return cls(M, interpret=interpret, coloring=coloring, plan=plan)
+
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
         return self._fn(x)
 
@@ -77,9 +114,10 @@ class SpmvOperator:
 
 
 def spmv(M: CSRC, x: jnp.ndarray, path: str = "auto",
-         interpret: bool = True) -> jnp.ndarray:
+         interpret: bool = True,
+         plan: Optional[ExecutionPlan] = None) -> jnp.ndarray:
     """One-shot convenience wrapper."""
-    return SpmvOperator(M, path=path, interpret=interpret)(x)
+    return SpmvOperator(M, path=path, interpret=interpret, plan=plan)(x)
 
 
 def spmv_transpose(M: CSRC, x: jnp.ndarray) -> jnp.ndarray:

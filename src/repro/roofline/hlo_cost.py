@@ -86,9 +86,11 @@ def shape_bytes(shape: str) -> int:
 def _split_tuple(s: str) -> List[str]:
     out, depth, cur = [], 0, ""
     for ch in s:
-        if ch == "(" or ch == "[":
+        # '{' guards layout annotations: "f32[32,48]{1,0} %x" must not be
+        # split at the comma inside the layout
+        if ch in "([{":
             depth += 1
-        elif ch == ")" or ch == "]":
+        elif ch in ")]}":
             depth -= 1
         if ch == "," and depth == 0:
             out.append(cur)

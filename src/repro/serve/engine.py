@@ -1,10 +1,19 @@
-"""Batched continuous serving engine.
+"""Batched continuous serving engines.
 
-Fixed-slot batching (the standard TPU serving shape discipline): the decode
-step always runs at (max_slots, 1); finished or empty slots hold padding.
-Requests are admitted into free slots between steps (continuous batching),
-prefill fills the slot's cache region, greedy/temperature sampling produces
-tokens until EOS or max_new_tokens.
+Two engines share the continuous-batching discipline:
+
+* ``ServingEngine`` — token generation.  Fixed-slot batching (the standard
+  TPU serving shape discipline): the decode step always runs at
+  (max_slots, 1); finished or empty slots hold padding.  Requests are
+  admitted into free slots between steps, prefill fills the slot's cache
+  region, greedy/temperature sampling produces tokens until EOS or
+  max_new_tokens.
+
+* ``SpmvServingEngine`` — the paper's workload as a service: clients
+  submit (matrix_id, x) products; matrices are registered once and get an
+  :class:`ExecutionPlan` from the plan-cache/tuner (a cache hit means a
+  known matrix class is never re-tuned), and each tick answers all pending
+  requests per matrix with one batched multi-RHS product.
 
 Single-chip CPU execution here; the decode step is the same function the
 launch layer lowers for the 256-chip serve dry-run.
@@ -100,4 +109,105 @@ class ServingEngine:
             out.extend(self.step())
             if not self.queue and not self.active:
                 break
+        return out
+
+
+# ---------------------------------------------------------------------------
+# SpMV serving (the paper's kernel as a traffic-serving endpoint)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SpmvRequest:
+    uid: int
+    matrix_id: str
+    x: np.ndarray
+
+
+class SpmvServingEngine:
+    """Continuous-batching SpMV service over tuned execution plans.
+
+    ``register`` resolves the matrix's plan through the shared plan cache
+    (``autotune=True`` measures candidates on a miss; a hit — e.g. a second
+    matrix of an already-served class — constructs the operator with zero
+    measurements).  ``step`` groups the queue by matrix and answers each
+    group with one batched product: a single pending request runs the
+    operator's tuned single-vector path, several run the multi-RHS spmm.
+    """
+
+    def __init__(self, cache=None, autotune: bool = False,
+                 interpret: bool = True, max_batch: int = 64):
+        from repro.core.tuner import PlanCache
+        self.cache = cache if cache is not None else PlanCache()
+        self.autotune = autotune
+        self.interpret = interpret
+        self.max_batch = max_batch
+        self._matrices: Dict[str, object] = {}
+        self._ops: Dict[str, object] = {}
+        self.queue: List[SpmvRequest] = []
+        self._uid = 0
+
+    def register(self, matrix_id: str, M):
+        """Install a matrix; returns the ExecutionPlan it will run with."""
+        from repro.core import tuner as _tuner
+        from repro.kernels.ops import SpmvOperator
+        plan = _tuner.plan_for(M, cache=self.cache, autotune=self.autotune,
+                               interpret=self.interpret)
+        self._matrices[matrix_id] = M
+        self._ops[matrix_id] = SpmvOperator.from_plan(
+            M, plan, interpret=self.interpret)
+        return plan
+
+    def plan(self, matrix_id: str):
+        return self._ops[matrix_id].plan
+
+    def submit(self, matrix_id: str, x: np.ndarray) -> int:
+        if matrix_id not in self._ops:
+            raise KeyError(f"matrix {matrix_id!r} not registered")
+        x = np.asarray(x, dtype=np.float32)
+        m = self._matrices[matrix_id].m
+        if x.shape != (m,):
+            # out-of-range gathers clamp silently in jax; reject early
+            raise ValueError(
+                f"x has shape {x.shape}, matrix {matrix_id!r} needs ({m},)")
+        uid = self._uid
+        self._uid += 1
+        self.queue.append(SpmvRequest(uid=uid, matrix_id=matrix_id, x=x))
+        return uid
+
+    def step(self) -> Dict[int, np.ndarray]:
+        """One tick: answer up to max_batch requests per matrix."""
+        from repro.kernels import ops as _ops
+        by_matrix: Dict[str, List[SpmvRequest]] = {}
+        rest: List[SpmvRequest] = []
+        for r in self.queue:
+            grp = by_matrix.setdefault(r.matrix_id, [])
+            if len(grp) < self.max_batch:
+                grp.append(r)
+            else:
+                rest.append(r)
+        self.queue = rest
+        out: Dict[int, np.ndarray] = {}
+        for mid, group in by_matrix.items():
+            op = self._ops[mid]
+            if len(group) == 1:
+                out[group[0].uid] = np.asarray(op(jnp.asarray(group[0].x)))
+            else:
+                X = jnp.asarray(np.stack([r.x for r in group], axis=1))
+                if op.path == "kernel":
+                    # the tuned plan's block-ELL pack serves batches too
+                    from repro.kernels.csrc_spmm import blockell_spmm
+                    Y = np.asarray(blockell_spmm(op.pack, X,
+                                                 interpret=self.interpret))
+                else:
+                    Y = np.asarray(_ops.spmm(self._matrices[mid], X))
+                for i, r in enumerate(group):
+                    out[r.uid] = Y[:, i]
+        return out
+
+    def run_until_drained(self, max_ticks: int = 1000) -> Dict[int, np.ndarray]:
+        out: Dict[int, np.ndarray] = {}
+        for _ in range(max_ticks):
+            if not self.queue:
+                break
+            out.update(self.step())
         return out

@@ -1,0 +1,122 @@
+"""Property-test shim: `given` / `settings` / `st` with or without hypothesis.
+
+The tier-1 suite must collect and pass from a clean checkout where
+`hypothesis` is not installed.  When the real library is available
+(``pip install -r requirements-dev.txt``) it is used directly, with a
+"tier1" profile capping example counts so the default run stays fast.
+Otherwise this module provides a minimal drop-in: strategies draw from a
+seeded ``random.Random`` (deterministic per test function) and ``given``
+simply loops the test body over ``max_examples`` draws.
+
+Usage in test modules (replaces ``from hypothesis import ...``):
+
+    from _propshim import given, settings, st
+
+Env knobs:
+    PROPSHIM_MAX_EXAMPLES   hard cap on examples per property (default 10)
+"""
+from __future__ import annotations
+
+import functools
+import os
+import random
+import zlib
+
+MAX_EXAMPLES_CAP = int(os.environ.get("PROPSHIM_MAX_EXAMPLES", "10"))
+
+try:
+    import hypothesis as _hyp
+    from hypothesis import given, strategies as st
+
+    HAVE_HYPOTHESIS = True
+
+    _hyp.settings.register_profile(
+        "tier1", max_examples=MAX_EXAMPLES_CAP, deadline=None)
+    _hyp.settings.load_profile(
+        os.environ.get("HYPOTHESIS_PROFILE", "tier1"))
+
+    def settings(max_examples: int = MAX_EXAMPLES_CAP, **kw):
+        """Pass through to hypothesis.settings, capping max_examples so the
+        tier-1 suite stays fast even where tests ask for more."""
+        return _hyp.settings(
+            max_examples=min(max_examples, MAX_EXAMPLES_CAP), **kw)
+
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A draw function wrapper mimicking a hypothesis SearchStrategy."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self._draw(rng)))
+
+        def filter(self, pred, _tries: int = 100):
+            def draw(rng):
+                for _ in range(_tries):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("propshim: filter predicate never satisfied")
+            return _Strategy(draw)
+
+    class st:
+        """Namespace mirroring the subset of hypothesis.strategies we use."""
+
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def floats(min_value: float = 0.0, max_value: float = 1.0,
+                   **_kw) -> _Strategy:
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq) -> _Strategy:
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0,
+                  max_size: int = 8) -> _Strategy:
+            return _Strategy(lambda rng: [
+                elements.draw(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+    def settings(max_examples: int = MAX_EXAMPLES_CAP, **_kw):
+        """Record the example budget on the (already given-wrapped) test."""
+        def deco(fn):
+            fn._shim_max_examples = min(max_examples, MAX_EXAMPLES_CAP)
+            return fn
+        return deco
+
+    def given(*strategies: _Strategy):
+        """Loop the test over deterministic seeded draws.
+
+        The seed is derived from the test's qualified name (crc32, not
+        ``hash`` — the latter is salted per process), so failures reproduce.
+        """
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples", MAX_EXAMPLES_CAP)
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    drawn = [s.draw(rng) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+            # wraps sets __wrapped__, which makes pytest introspect the
+            # original signature and demand fixtures named like the drawn
+            # params — hide it so the wrapper's (*args) signature is used
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

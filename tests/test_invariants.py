@@ -1,0 +1,90 @@
+"""Standalone guards for invariants the rest of the stack relies on but
+nothing previously tested in isolation: the O(1) CSRC transpose, the
+transpose product, and coloring validity across every generator class."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _propshim import given, settings, st
+from repro.core import csrc
+from repro.core.coloring import color_rows, verify_coloring
+from repro.kernels import ops
+
+
+SQUARE_GENERATORS = [
+    ("poisson2d", lambda: csrc.poisson2d(7)),
+    ("fem_band_sym", lambda: csrc.fem_band(48, 4, seed=1,
+                                           numeric_symmetric=True)),
+    ("fem_band_asym", lambda: csrc.fem_band(48, 4, seed=2)),
+    ("random_symmetric_pattern",
+     lambda: csrc.random_symmetric_pattern(40, 3, seed=3)),
+    ("dense_matrix", lambda: csrc.dense_matrix(24, seed=4)),
+]
+
+
+def _same_csrc(a: csrc.CSRC, b: csrc.CSRC):
+    assert a.n == b.n and a.m == b.m
+    for f in ("ad", "ia", "ja", "al", "au", "iar", "jar", "ar"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+
+
+@pytest.mark.parametrize("name,make", SQUARE_GENERATORS,
+                         ids=[n for n, _ in SQUARE_GENERATORS])
+def test_transpose_involution(name, make):
+    """transpose(transpose(M)) == M, field for field (paper §5: the CSRC
+    transpose is an al/au swap, so applying it twice is the identity)."""
+    M = make()
+    _same_csrc(csrc.transpose(csrc.transpose(M)), M)
+    # and the single transpose really is A^T
+    np.testing.assert_allclose(csrc.to_dense(csrc.transpose(M)),
+                               csrc.to_dense(M).T)
+
+
+@pytest.mark.parametrize("name,make", SQUARE_GENERATORS,
+                         ids=[n for n, _ in SQUARE_GENERATORS])
+def test_spmv_transpose_matches_dense(name, make):
+    M = make()
+    A = csrc.to_dense(M).astype(np.float64)
+    x = np.random.default_rng(5).standard_normal(M.n).astype(np.float32)
+    y = np.asarray(ops.spmv_transpose(M, jnp.asarray(x)), dtype=np.float64)
+    y_ref = A.T @ x.astype(np.float64)
+    scale = max(1.0, np.abs(y_ref).max())
+    np.testing.assert_allclose(y / scale, y_ref / scale,
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(4, 48), st.integers(1, 6), st.integers(0, 10_000))
+def test_property_transpose_product_duality(n, band, seed):
+    """<A x, y> == <x, A^T y> for random band matrices."""
+    M = csrc.fem_band(n, min(band, max(1, n - 1)), seed=seed)
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    ax = np.asarray(ops.spmv(M, jnp.asarray(x), path="segment"),
+                    dtype=np.float64)
+    aty = np.asarray(ops.spmv_transpose(M, jnp.asarray(y)),
+                     dtype=np.float64)
+    lhs, rhs = float(ax @ y), float(x @ aty)
+    assert abs(lhs - rhs) <= 1e-3 * max(1.0, abs(lhs))
+
+
+@pytest.mark.parametrize("name,make", SQUARE_GENERATORS,
+                         ids=[n for n, _ in SQUARE_GENERATORS])
+def test_coloring_valid_across_generators(name, make):
+    """verify_coloring(M, color_rows(M)) for every matrix class — the §3.2
+    conflict-free guarantee the colorful path depends on."""
+    M = make()
+    col = color_rows(M)
+    assert verify_coloring(M, col)
+    # every row colored exactly once
+    rows = np.sort(np.concatenate(
+        [col.rows(c) for c in range(col.num_colors)]))
+    np.testing.assert_array_equal(rows, np.arange(M.n))
+
+
+def test_transpose_rejects_rectangular():
+    M = csrc.rectangular_fem(24, 8, 3, seed=0)
+    with pytest.raises(AssertionError):
+        csrc.transpose(M)

@@ -21,7 +21,8 @@ def _recurrent(xs, Bm, Cm, dt, a, h0):
     return jnp.moveaxis(ys, 0, 1), h_new
 
 
-@pytest.mark.parametrize("t", [16, 64, 128])
+@pytest.mark.parametrize("t", [16, 64,
+    pytest.param(128, marks=pytest.mark.slow)])
 def test_chunked_ssd_matches_recurrent(t):
     rng = np.random.default_rng(t)
     bt, h, p, n = 2, 3, 8, 4
@@ -40,6 +41,7 @@ def test_chunked_ssd_matches_recurrent(t):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_chunked_flag_end_to_end():
     """Full hybrid model forward agrees between recurrent and chunked."""
     from repro.configs.base import get_config
@@ -77,7 +79,8 @@ class TestChunkedWKV:
             step, S, tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w)))
         return jnp.moveaxis(ys, 0, 1), S
 
-    @pytest.mark.parametrize("t", [16, 48, 96])
+    @pytest.mark.parametrize("t", [16, 48,
+        pytest.param(96, marks=pytest.mark.slow)])
     def test_matches_recurrent(self, t):
         from repro.models import rwkv6 as R
         rng = np.random.default_rng(t)
@@ -96,6 +99,7 @@ class TestChunkedWKV:
         np.testing.assert_allclose(np.asarray(s_chk), np.asarray(s_ref),
                                    rtol=1e-3, atol=1e-4)
 
+    @pytest.mark.slow
     def test_end_to_end_flag(self):
         from repro.configs.base import get_config
         from repro.models.transformer import build_model

@@ -10,6 +10,14 @@ from repro.configs.base import registry, get_config
 from repro.models.transformer import build_model
 
 ARCHS = sorted(registry())
+# big reduced-configs dominate suite time: their smokes run with -m ""
+# (tier-1 keeps only the cheapest arch, qwen1.5-0.5b, as the default
+# smoke; every arch still gets the cheap param-count check below)
+_SLOW_ARCHS = {"deepseek-v2-lite-16b", "gemma-2b", "granite-3-2b",
+               "llava-next-34b", "musicgen-large", "qwen3-8b",
+               "qwen3-moe-235b-a22b", "rwkv6-1.6b", "zamba2-7b"}
+SMOKE_ARCHS = [pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_ARCHS
+               else a for a in ARCHS]
 
 
 def _batch(cfg, b, s, rng):
@@ -22,7 +30,7 @@ def _batch(cfg, b, s, rng):
     return {"inputs": inputs, "targets": targets}
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", SMOKE_ARCHS)
 def test_smoke_forward_and_train_step(arch):
     cfg = get_config(arch, reduced=True)
     model = build_model(cfg)
@@ -46,7 +54,7 @@ def test_smoke_forward_and_train_step(arch):
                for p in jax.tree.leaves(state.params))
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", SMOKE_ARCHS)
 def test_smoke_decode_consistency(arch):
     """prefill + one decode_step == forward on the extended sequence."""
     cfg = get_config(arch, reduced=True)
@@ -68,7 +76,10 @@ def test_smoke_decode_consistency(arch):
     assert err / scale < 0.05, f"{arch}: rel err {err / scale}"
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", [
+    pytest.param(a, marks=pytest.mark.slow)
+    if a in ("deepseek-v2-lite-16b", "zamba2-7b", "rwkv6-1.6b",
+             "qwen3-moe-235b-a22b", "gemma-2b") else a for a in ARCHS])
 def test_param_count_formula(arch):
     """The analytic param_count driving §Roofline MODEL_FLOPS must track
     the real initialized count on the reduced config (within 20% — the
@@ -99,6 +110,7 @@ def test_hybrid_sliding_window_decode_bounded():
     assert t == cfg.long_context_window        # bounded, not 500k
 
 
+@pytest.mark.slow
 def test_moe_aux_metrics():
     cfg = get_config("qwen3-moe-235b-a22b", reduced=True)
     model = build_model(cfg)

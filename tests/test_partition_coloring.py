@@ -2,7 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propshim import given, settings, st
 
 from repro.core import csrc
 from repro.core.partition import (partition_rows_by_nnz,
@@ -62,7 +62,7 @@ def test_interval_boundaries_and_halo():
     assert all(h <= 6 for h in halo_widths(part))   # halo bounded by band
 
 
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=6, deadline=None)
 @given(st.integers(8, 40), st.integers(1, 5), st.integers(0, 1000))
 def test_property_coloring_conflict_free(n, band, seed):
     """Paper §3.2 invariant: rows in one color class share no write target

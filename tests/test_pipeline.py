@@ -16,6 +16,7 @@ def test_bubble_fraction():
     assert bubble_fraction(4, 32) < bubble_fraction(4, 8)
 
 
+@pytest.mark.slow
 def test_pipeline_matches_sequential():
     code = """
         import numpy as np, jax, jax.numpy as jnp
@@ -46,6 +47,7 @@ def test_pipeline_matches_sequential():
     assert out.returncode == 0, out.stderr[-3000:]
 
 
+@pytest.mark.slow
 def test_pipeline_collectives_are_permutes():
     """The handoff must lower to collective-permute (point-to-point), not
     all-gather — that is the PP communication advantage."""

@@ -1,0 +1,271 @@
+"""The plan/autotune subsystem: every feasible ExecutionPlan must compute
+the same product as the dense numpy oracle, and the tuner cache must
+round-trip without re-measurement."""
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _propshim import given, settings, st
+from repro.core import csrc, solvers, tuner
+from repro.core.plan import (ExecutionPlan, DEFAULT_PLAN, feasible,
+                             kernel_window)
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# Matrix classes + edge cases (small sizes: the kernel path runs the Pallas
+# kernel in interpret mode)
+# ---------------------------------------------------------------------------
+
+def _diag_only(n):
+    i = np.arange(n)
+    return csrc.from_coo(i, i, np.arange(1.0, n + 1.0), n=n)
+
+
+def _empty_rows(n):
+    """Rows with no entries at all (zero diagonal, no off-diagonals)."""
+    i = np.arange(0, n, 2)
+    return csrc.from_coo(i, i, np.ones(i.size), n=n)
+
+
+MATRIX_CASES = [
+    ("poisson2d", lambda: csrc.poisson2d(8)),
+    ("fem_band_sym", lambda: csrc.fem_band(72, 5, seed=1,
+                                           numeric_symmetric=True)),
+    ("fem_band_asym", lambda: csrc.fem_band(72, 5, seed=2)),
+    ("random_symmetric_pattern",
+     lambda: csrc.random_symmetric_pattern(48, 3, seed=3)),
+    ("dense_matrix", lambda: csrc.dense_matrix(32, seed=4)),
+    ("rectangular_fem", lambda: csrc.rectangular_fem(48, 16, 4, seed=5)),
+    ("n1", lambda: csrc.from_dense(np.array([[3.0]]))),
+    ("diag_only_k0", lambda: _diag_only(17)),
+    ("empty_rows", lambda: _empty_rows(20)),
+]
+
+
+def _check_all_plans(M, rtol=2e-4, tms=(8,)):
+    A = csrc.to_dense(M).astype(np.float64)
+    x = np.random.default_rng(11).standard_normal(M.m).astype(np.float32)
+    y_ref = A @ x.astype(np.float64)
+    scale = max(1.0, np.abs(y_ref).max())
+    stats = tuner.stats_of(M)
+    plans = tuner.enumerate_plans(stats, tms=tms)
+    assert plans, "at least the segment plan must be feasible"
+    for plan in plans:
+        assert feasible(plan, n=M.n, m=M.m, bandwidth=stats.bandwidth)
+        op = ops.SpmvOperator.from_plan(M, plan)
+        assert op.plan.path == plan.path      # strict: no silent fallback
+        y = np.asarray(op(jnp.asarray(x)), dtype=np.float64)
+        np.testing.assert_allclose(y / scale, y_ref / scale,
+                                   rtol=rtol, atol=rtol,
+                                   err_msg=f"plan {plan.key()}")
+    return plans
+
+
+@pytest.mark.parametrize("name,make", MATRIX_CASES,
+                         ids=[n for n, _ in MATRIX_CASES])
+def test_every_feasible_plan_matches_dense_oracle(name, make):
+    M = make()
+    plans = _check_all_plans(M)
+    if not M.is_square:
+        # rectangular: only the segment path may be enumerated
+        assert all(p.path == "segment" for p in plans)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(6, 40), st.integers(1, 6), st.integers(0, 10_000),
+       st.booleans())
+def test_property_plans_agree_random_band(n, band, seed, sym):
+    M = csrc.fem_band(n, min(band, max(1, n - 1)), seed=seed,
+                      numeric_symmetric=sym)
+    _check_all_plans(M, tms=(8,))
+
+
+# ---------------------------------------------------------------------------
+# Plan dataclass mechanics
+# ---------------------------------------------------------------------------
+
+def test_plan_serialization_roundtrip():
+    p = ExecutionPlan(path="kernel", tm=64, w_cap=2048, k_step_sublanes=4,
+                      partition="count", accumulation="halo")
+    assert ExecutionPlan.from_json(p.to_json()) == p
+    assert p.k_step == 512
+    assert "tm64" in p.key()
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        ExecutionPlan(path="warp")
+    with pytest.raises(ValueError):
+        ExecutionPlan(partition="hash")
+    with pytest.raises(ValueError):
+        ExecutionPlan(accumulation="gossip")
+    assert DEFAULT_PLAN.path == "segment"
+
+
+def test_kernel_plan_infeasible_raises():
+    """from_plan is strict: a kernel plan whose window exceeds w_cap raises
+    instead of silently falling back (the old static behavior)."""
+    M = csrc.random_symmetric_pattern(300, 4, seed=0)   # bandwidth ~ n
+    band = csrc.bandwidth(M)
+    plan = ExecutionPlan(path="kernel", tm=128, w_cap=256)
+    assert kernel_window(plan.tm, band) > plan.w_cap
+    assert not feasible(plan, n=M.n, m=M.m, bandwidth=band)
+    with pytest.raises(ValueError):
+        ops.SpmvOperator.from_plan(M, plan)
+
+
+def test_square_only_plans_reject_rectangular():
+    M = csrc.rectangular_fem(32, 8, 3, seed=0)
+    with pytest.raises(ValueError):
+        ops.SpmvOperator.from_plan(M, ExecutionPlan(path="colorful"))
+    with pytest.raises(ValueError):
+        ops.SpmvOperator.from_plan(M, ExecutionPlan(path="kernel"))
+
+
+# ---------------------------------------------------------------------------
+# Tuner + cache
+# ---------------------------------------------------------------------------
+
+def _counting_measure(calls):
+    def measure(op, x):
+        calls.append(op.plan.key())
+        # deterministic fake timing: prefer the kernel path
+        return 1.0 if op.plan.path == "kernel" else 2.0
+    return measure
+
+
+def test_tune_picks_argmin_and_caches():
+    M = csrc.poisson2d(8)
+    cache = tuner.PlanCache()
+    calls = []
+    res = tuner.tune(M, cache=cache, measure=_counting_measure(calls))
+    assert not res.cached
+    assert len(calls) == len(res.timings_s) >= 2
+    assert res.plan.path == "kernel"          # fake argmin
+    # second tune: cache hit, zero measurements
+    def boom(op, x):
+        raise AssertionError("re-measured on a cache hit")
+    res2 = tuner.tune(M, cache=cache, measure=boom)
+    assert res2.cached and res2.plan == res.plan and res2.timings_s == {}
+    assert cache.hits == 1
+
+
+def test_cache_file_roundtrip(tmp_path):
+    """tune -> save -> load -> same plan, no re-measurement."""
+    path = os.path.join(tmp_path, "plans.json")
+    M = csrc.fem_band(64, 3, seed=7)
+    cache = tuner.PlanCache(path=path)
+    calls = []
+    res = tuner.tune(M, cache=cache, measure=_counting_measure(calls))
+    assert os.path.exists(path)
+    data = json.load(open(path))
+    assert data["version"] == tuner.PlanCache.VERSION
+    assert res.fingerprint in data["entries"]
+
+    cache2 = tuner.PlanCache(path=path)
+    def boom(op, x):
+        raise AssertionError("re-measured after reload")
+    res2 = tuner.tune(M, cache=cache2, measure=boom)
+    assert res2.cached and res2.plan == res.plan
+
+
+def test_fingerprint_stability_and_sensitivity():
+    a = tuner.fingerprint(csrc.poisson2d(8))
+    b = tuner.fingerprint(csrc.poisson2d(8))
+    c = tuner.fingerprint(csrc.poisson2d(9))
+    d = tuner.fingerprint(csrc.fem_band(64, 3, seed=0))
+    assert a == b
+    assert len({a, c, d}) == 3
+
+
+def test_plan_for_heuristic_is_cached_and_stable():
+    M = csrc.fem_band(96, 4, seed=0)
+    cache = tuner.PlanCache()
+    p1 = tuner.plan_for(M, cache=cache, autotune=False)
+    p2 = tuner.plan_for(M, cache=cache, autotune=False)
+    assert p1 == p2 and cache.hits == 1
+    # heuristic mirrors the static auto decision for a banded matrix
+    assert p1.path == "kernel"
+
+
+def test_plan_for_autotune_counts_one_miss():
+    """plan_for must not double-probe the cache around tune()."""
+    cache = tuner.PlanCache()
+    M = csrc.poisson2d(6)
+    tuner.plan_for(M, cache=cache, autotune=True,
+                   measure=lambda op, x: 1.0)
+    assert cache.misses == 1 and cache.hits == 0
+
+
+def test_heuristic_cache_entry_does_not_satisfy_tune():
+    """A heuristic (unmeasured) plan cached by plan_for(autotune=False)
+    must not be returned by tune() as if it were the measured argmin."""
+    cache = tuner.PlanCache()
+    M = csrc.poisson2d(6)
+    tuner.plan_for(M, cache=cache, autotune=False)   # caches heuristic
+    calls = []
+    res = tuner.tune(M, cache=cache, measure=_counting_measure(calls))
+    assert not res.cached and len(calls) >= 2        # really measured
+    # the measured result replaced the heuristic entry: now a tune hit
+    res2 = tuner.tune(M, cache=cache,
+                      measure=lambda op, x: (_ for _ in ()).throw(
+                          AssertionError("re-measured")))
+    assert res2.cached and res2.plan == res.plan
+    # and heuristic lookups still see it
+    assert tuner.plan_for(M, cache=cache, autotune=False) == res.plan
+
+
+def test_candidate_source_registration():
+    marker = ExecutionPlan(path="segment", w_cap=1234)
+    def source(stats):
+        return [marker]
+    tuner.register_candidate_source(source)
+    try:
+        plans = tuner.enumerate_plans(tuner.stats_of(csrc.poisson2d(6)))
+        assert any(p == marker for p in plans)
+    finally:
+        tuner._CANDIDATE_SOURCES.remove(source)
+
+
+# ---------------------------------------------------------------------------
+# Solver + serving integration (the tuner path end to end)
+# ---------------------------------------------------------------------------
+
+def test_cg_solve_uses_plan_subsystem():
+    M = csrc.poisson2d(12)
+    A = csrc.to_dense(M)
+    x_true = np.random.default_rng(0).standard_normal(M.n).astype(np.float32)
+    b = jnp.asarray(A @ x_true)
+    cache = tuner.PlanCache()
+    res, op = solvers.cg_solve(M, b, cache=cache, maxiter=2000)
+    assert bool(res.converged)
+    assert np.abs(np.asarray(res.x) - x_true).max() < 1e-3
+    assert isinstance(op.plan, ExecutionPlan)
+    # the decision landed in the cache: a second solve is a pure hit
+    res2, op2 = solvers.cg_solve(M, b, cache=cache, maxiter=2000)
+    assert cache.hits >= 1 and op2.plan == op.plan
+
+
+def test_spmv_serving_engine_tuned_batching():
+    from repro.serve.engine import SpmvServingEngine
+    M = csrc.fem_band(80, 4, seed=2)
+    A = csrc.to_dense(M)
+    cache = tuner.PlanCache()
+    calls = []
+    # pre-tune through the same cache the engine uses
+    tuner.tune(M, cache=cache, measure=_counting_measure(calls))
+    eng = SpmvServingEngine(cache=cache, autotune=True)
+    plan = eng.register("fem", M)
+    assert calls and cache.hits >= 1          # registration hit the cache
+    rng = np.random.default_rng(3)
+    xs = [rng.standard_normal(M.m).astype(np.float32) for _ in range(4)]
+    uids = [eng.submit("fem", x) for x in xs]
+    out = eng.run_until_drained()
+    assert set(out) == set(uids)
+    for uid, x in zip(uids, xs):
+        np.testing.assert_allclose(out[uid], A @ x, rtol=2e-4, atol=2e-4)
+    assert eng.plan("fem") == plan

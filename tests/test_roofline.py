@@ -56,6 +56,7 @@ def test_plain_matmul_flops():
     assert abs(c.flops - 2 * 32 * 48 * 16) / (2 * 32 * 48 * 16) < 0.01
 
 
+@pytest.mark.slow
 def test_collectives_counted_in_sharded_module():
     """psum inside a scan over a sharded mesh: collective bytes must be
     multiplied by the trip count (subprocess: needs 8 fake devices)."""

@@ -19,6 +19,7 @@ def small_model():
     return cfg, model, params
 
 
+@pytest.mark.slow
 def test_engine_drains_and_batches(small_model):
     cfg, model, params = small_model
     eng = ServingEngine(model, params, max_slots=3, max_len=64, eos_id=0)
@@ -31,6 +32,7 @@ def test_engine_drains_and_batches(small_model):
     assert all(1 <= len(r.out_tokens) <= 5 for r in done)
 
 
+@pytest.mark.slow
 def test_greedy_determinism(small_model):
     cfg, model, params = small_model
     outs = []
@@ -54,6 +56,7 @@ def test_ring_positions():
     assert pos[2] == 2 and pos[7] == np.iinfo(np.int32).max
 
 
+@pytest.mark.slow
 def test_ring_decode_matches_window_attention():
     """Sliding-window ring decode == full attention restricted to the
     window, for positions beyond the buffer size."""
@@ -79,6 +82,7 @@ def test_ring_decode_matches_window_attention():
             rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_int8_kv_decode_consistency():
     """§Perf cell C lever: int8 KV cache decode matches bf16 within
     quantization noise."""

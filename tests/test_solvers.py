@@ -18,6 +18,7 @@ def test_cg_poisson_segment_path():
     assert np.abs(np.asarray(res.x) - x_true).max() < 1e-3
 
 
+@pytest.mark.slow
 def test_cg_through_pallas_kernel():
     """The full paper stack: CG iterations calling the Pallas CSRC kernel."""
     M = csrc.poisson2d(16)

@@ -47,6 +47,7 @@ def test_paper_bandwidth_claim():
     assert p_s.streamed_bytes() < p_ns.streamed_bytes()
 
 
+@pytest.mark.slow
 def test_dryrun_cell_on_test_mesh():
     """The launch driver lowers+compiles a real cell on a small placeholder
     mesh (subprocess: 8 fake devices) — the same path the 512-chip run

@@ -29,6 +29,7 @@ def tiny():
     return cfg, model, opt_cfg, state, pipe
 
 
+@pytest.mark.slow
 def test_loss_decreases(tiny):
     cfg, model, opt_cfg, state, pipe = tiny
     step = jax.jit(make_train_step(model, opt_cfg, remat="none"))
@@ -41,6 +42,7 @@ def test_loss_decreases(tiny):
     assert last < first
 
 
+@pytest.mark.slow
 def test_microbatch_equivalence(tiny):
     """fp32 gradient accumulation over microbatches must equal the
     single-large-batch gradient (to bf16 backward noise).  Compared at the
@@ -65,6 +67,7 @@ def test_microbatch_equivalence(tiny):
         assert d / s < 5e-2, (d, s)
 
 
+@pytest.mark.slow
 def test_remat_grad_equivalence(tiny):
     """Remat changes memory, never gradients."""
     cfg, model, opt_cfg, state, pipe = tiny
@@ -161,6 +164,7 @@ def test_pipeline_determinism_and_sharding():
             np.asarray(b1["inputs"]))
 
 
+@pytest.mark.slow
 def test_trainer_resume_exactness(tiny):
     """Train 10 straight vs train 5 + crash + resume 5: identical params
     (checkpoint + counted data stream => sample-exact resume)."""
@@ -182,6 +186,7 @@ def test_trainer_resume_exactness(tiny):
                                           np.asarray(y, np.float32))
 
 
+@pytest.mark.slow
 def test_elastic_restart_reshard():
     """Checkpoint written in a 1-device process restores into an 8-device
     process with sharded templates (elastic restart across fleet sizes)."""
