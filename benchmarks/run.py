@@ -5,6 +5,9 @@
                       8 placeholder devices in a subprocess
   fig6_colorful       colorful vs local-buffers by band width (paper Fig. 6)
   fig89_scaling       speedup vs shard count (paper Figs. 8/9) — subprocess
+  schedule_build      schedule/pack build time vs steady-state execute per
+                      path (incl. colorful coloring quality) — also written
+                      to results/BENCH_schedule.json
   roofline_summary    single-pod roofline table from results/dryrun (§Roofline)
 
 Output: ``name,us_per_call,derived`` CSV rows.
@@ -16,19 +19,22 @@ import os
 import subprocess
 import sys
 import textwrap
+import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import csrc, tuner
-from repro.core.coloring import color_rows
+from repro.core import csrc, schedule as schedule_mod, tuner
+from repro.core.coloring import balance_stats, color_rows
+from repro.core.plan import ExecutionPlan
 from repro.kernels import ref, ops
 from benchmarks.util import time_fn, row
 from benchmarks.suite import matrices
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 PLAN_CACHE_PATH = os.path.join(ROOT, "results", "plans.json")
+BENCH_SCHEDULE_PATH = os.path.join(ROOT, "results", "BENCH_schedule.json")
 
 
 # ---------------------------------------------------------------------------
@@ -121,8 +127,9 @@ def fig6_colorful(small: bool):
         buffers = ops.SpmvOperator(M, path="segment")
         t_c = time_fn(colorful, x)
         t_b = time_fn(buffers, x)
+        bs = balance_stats(col)
         row(f"fig6/band{band}/colorful", t_c * 1e6,
-            f"colors={col.num_colors}")
+            f"colors={col.num_colors};balance={bs['imbalance']:.2f}")
         row(f"fig6/band{band}/local_buffers", t_b * 1e6,
             f"speedup_vs_colorful={t_c/t_b:.2f}")
 
@@ -163,6 +170,63 @@ def fig89_scaling(small: bool):
     if out.returncode != 0:
         raise RuntimeError(out.stderr[-2000:])
     print(out.stdout.strip())
+
+
+# ---------------------------------------------------------------------------
+# Schedule build cost vs steady-state execution (the schedule layer)
+# ---------------------------------------------------------------------------
+
+def schedule_build(small: bool):
+    """Precompute (schedule/pack/coloring build) time reported separately
+    from steady-state execute time — previously the first timed call
+    absorbed packing.  Colorful rows carry coloring quality (color count +
+    rows-per-color balance) so coloring improvements show up directly.
+    Rows are also written to results/BENCH_schedule.json."""
+    print("# schedule_build: one-time precompute vs steady-state execute")
+    rng = np.random.default_rng(0)
+    records = []
+
+    def bench_one(name, M, label, plan):
+        x = jnp.asarray(rng.standard_normal(M.m).astype(np.float32))
+        t0 = time.perf_counter()
+        try:
+            sched = schedule_mod.build_schedule(M, plan)
+        except ValueError:
+            return                      # infeasible path for this matrix
+        t_build = time.perf_counter() - t0
+        op = ops.SpmvOperator.from_plan(M, plan, schedule=sched)
+        t_exec = time_fn(op, x)
+        derived = f"build_us={t_build * 1e6:.1f}"
+        if sched.coloring is not None:
+            bs = balance_stats(sched.coloring)
+            derived += (f";colors={sched.coloring.num_colors}"
+                        f";balance={bs['imbalance']:.2f}")
+        row(f"schedule/{name}/{label}", t_exec * 1e6, derived)
+        records.append({"name": f"schedule/{name}/{label}",
+                        "execute_us": round(t_exec * 1e6, 1),
+                        "build_us": round(t_build * 1e6, 1),
+                        "plan": plan.key(),
+                        "derived": derived})
+
+    for name, make in matrices(small):
+        M = make()
+        stats = tuner.stats_of(M)
+        bench_one(name, M, "segment", ExecutionPlan(path="segment"))
+        if M.is_square:
+            bench_one(name, M, "kernel", ExecutionPlan(path="kernel"))
+            if M.n <= 2048 and stats.bandwidth <= 64 and M.k > 0:
+                bench_one(name, M, "colorful",
+                          ExecutionPlan(path="colorful"))
+    # dedicated colorful rows (paper Fig. 6 band classes): coloring quality
+    # must stay visible even when the suite matrices outgrow the gate
+    n = 1000 if small else 4000
+    for band in (1, 2, 8):
+        bench_one(f"colorful_band{band}", csrc.fem_band(n, band, seed=band),
+                  "colorful", ExecutionPlan(path="colorful"))
+    os.makedirs(os.path.dirname(BENCH_SCHEDULE_PATH), exist_ok=True)
+    with open(BENCH_SCHEDULE_PATH, "w") as f:
+        json.dump({"rows": records}, f, indent=1, sort_keys=True)
+    print(f"# schedule_build: {len(records)} rows -> {BENCH_SCHEDULE_PATH}")
 
 
 # ---------------------------------------------------------------------------
@@ -231,7 +295,8 @@ def roofline_summary(small: bool):
 
 
 BENCHES = [fig5_sequential, table2_accumulation, fig6_colorful,
-           fig89_scaling, tuned_vs_default, roofline_summary]
+           fig89_scaling, schedule_build, tuned_vs_default,
+           roofline_summary]
 
 
 def main() -> None:

@@ -1,4 +1,5 @@
-"""Distributed CSRC SpMV: the paper's partitioning strategies on a JAX mesh.
+"""Distributed CSRC SpMV/SpMM: the paper's partitioning strategies on a JAX
+mesh.
 
 The paper parallelizes over OpenMP threads on 2–4 cores; we parallelize over
 mesh shards (chips).  The race on the destination vector is identical — the
@@ -23,6 +24,13 @@ accumulation strategies maps onto one collective pattern (DESIGN.md §2):
       This is the strategy the paper found best (80–93% of matrices), and
       on TPU the gap widens: ICI halo exchange is point-to-point.
 
+All structure precomputations (row partition, shard slot layouts, halo
+geometry) come from the schedule layer (core/schedule.py) — the builders
+here contain no inline partition/pack construction and accept a cached
+:class:`~repro.core.schedule.SpmvSchedule` so repeated builds (serving,
+solver restarts) are zero-precompute.  Every strategy accepts x of shape
+(n,) or (n, B): the multi-RHS product shares one collective per block.
+
 The colorful method (paper §3.2) is a shared-memory construct (conflict-free
 concurrent writes to one y); across distributed memories every write is a
 message regardless of conflicts, so it degenerates to one of the above.  It
@@ -31,11 +39,8 @@ single-chip, as in the paper.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Callable, Optional
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
@@ -44,90 +49,72 @@ try:                                    # jax >= 0.6 top-level export
 except ImportError:                     # jax 0.4.x
     from jax.experimental.shard_map import shard_map
 
-from .csrc import CSRC, bandwidth, row_of_slot
-from .partition import partition_rows_by_nnz, RowPartition
+from .csrc import CSRC, bandwidth
+from .plan import ExecutionPlan
+from . import schedule as schedule_mod
+from .schedule import SpmvSchedule
 
 
 def _round_up(v: int, m: int) -> int:
     return (v + m - 1) // m * m
 
 
-@dataclasses.dataclass(frozen=True)
-class ShardedSlots:
-    """Slot arrays split into p nnz-balanced groups, padded to equal length
-    and stacked on a leading shard axis."""
-    row_idx: jnp.ndarray     # (p, S) global row of each slot (pad: 0)
-    ja: jnp.ndarray          # (p, S) global col             (pad: 0)
-    al: jnp.ndarray          # (p, S)                        (pad: 0.0)
-    au: jnp.ndarray          # (p, S)
-    ad_shard: jnp.ndarray    # (p, n) diagonal owned by shard (zero elsewhere)
-    part: RowPartition
+def _bc(v: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast per-slot/per-row values over RHS columns when x is (n, B)."""
+    return v[:, None] if x.ndim == 2 else v
 
 
-def shard_slots(M: CSRC, p: int) -> ShardedSlots:
-    part = partition_rows_by_nnz(M, p)
-    ros = row_of_slot(M)
-    ja = np.asarray(M.ja)
-    al = np.asarray(M.al)
-    au = np.asarray(M.au)
-    ia = np.asarray(M.ia)
-    spans = [(int(ia[part.starts[t]]), int(ia[part.starts[t + 1]]))
-             for t in range(p)]
-    smax = max(1, max(e - s for s, e in spans))
-    smax = _round_up(smax, 128)
-
-    def padded(arr, fill, dtype):
-        out = np.full((p, smax), fill, dtype=dtype)
-        for t, (s, e) in enumerate(spans):
-            out[t, :e - s] = arr[s:e]
-        return jnp.asarray(out)
-
-    ad_shard = np.zeros((p, M.n), dtype=np.float32)
-    for t in range(p):
-        r0, r1 = part.rows(t)
-        ad_shard[t, r0:r1] = np.asarray(M.ad)[r0:r1]
-
-    return ShardedSlots(
-        row_idx=padded(ros, 0, np.int32),
-        ja=padded(ja, 0, np.int32),
-        al=padded(al, 0.0, np.float32),
-        au=padded(au, 0.0, np.float32),
-        ad_shard=jnp.asarray(ad_shard),
-        part=part,
-    )
+def _schedule(M: CSRC, p: int, accumulation: str,
+              schedule: Optional[SpmvSchedule], cache) -> SpmvSchedule:
+    if schedule is not None:
+        return schedule
+    plan = ExecutionPlan(path="segment", partition="nnz",
+                         accumulation=accumulation)
+    return schedule_mod.schedule_for(M, plan, cache=cache, p=p)
 
 
 def build_spmv_allreduce(M: CSRC, mesh: Mesh, axis: str = "rows",
-                         scatter_output: bool = False) -> Callable:
+                         scatter_output: bool = False,
+                         schedule: Optional[SpmvSchedule] = None,
+                         cache=None) -> Callable:
     """'allreduce' (all-in-one) and 'reduce_scatter' (per-buffer/interval)
-    strategies.  x replicated; output replicated or row-sharded."""
+    strategies.  x replicated, shape (n,) or (n, B); output replicated or
+    row-sharded."""
     p = mesh.shape[axis]
-    ss = shard_slots(M, p)
+    acc = "reduce_scatter" if scatter_output else "allreduce"
+    sched = _schedule(M, p, acc, schedule, cache)
+    part = sched.partition
+    if part.p != p:
+        raise ValueError(
+            f"schedule partition is {part.p}-way, mesh axis {axis} has {p}")
+    ss = schedule_mod.build_sharded_slots(M, part)
     n = M.n
     n_pad = _round_up(n, p)
 
     def local(row_idx, ja, al, au, ad_shard, x):
         # shard-local partial: the paper's private y buffer
-        y = ad_shard[0] * x
-        y = y + jax.ops.segment_sum(al[0] * x[ja[0]], row_idx[0],
+        y = _bc(ad_shard[0], x) * x
+        y = y + jax.ops.segment_sum(_bc(al[0], x) * x[ja[0]], row_idx[0],
                                     num_segments=n)
-        y = y + jax.ops.segment_sum(au[0] * x[row_idx[0]], ja[0],
+        y = y + jax.ops.segment_sum(_bc(au[0], x) * x[row_idx[0]], ja[0],
                                     num_segments=n)
         if scatter_output:
-            y = jnp.pad(y, (0, n_pad - n))
+            pad = ((0, n_pad - n),) + ((0, 0),) * (x.ndim - 1)
+            y = jnp.pad(y, pad)
             return jax.lax.psum_scatter(y, axis, scatter_dimension=0,
                                         tiled=True)
         return jax.lax.psum(y, axis)
 
-    out_spec = P(axis) if scatter_output else P()
-    fn = shard_map(
-        local, mesh=mesh,
-        in_specs=(P(axis, None),) * 4 + (P(axis, None), P()),
-        out_specs=out_spec)
-
     sharded = jax.device_put(
         (ss.row_idx, ss.ja, ss.al, ss.au, ss.ad_shard),
         jax.sharding.NamedSharding(mesh, P(axis, None)))
+
+    # x is replicated (P() leaves trailing dims unsharded), so one
+    # shard_map serves both the (n,) and (n, B) forms
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None),) * 5 + (P(),),
+        out_specs=(P(axis) if scatter_output else P()))
 
     @jax.jit
     def apply(x):
@@ -136,43 +123,20 @@ def build_spmv_allreduce(M: CSRC, mesh: Mesh, axis: str = "rows",
     return apply
 
 
-def build_spmv_halo(M: CSRC, mesh: Mesh, axis: str = "rows") -> Callable:
+def build_spmv_halo(M: CSRC, mesh: Mesh, axis: str = "rows",
+                    schedule: Optional[SpmvSchedule] = None,
+                    cache=None) -> Callable:
     """'halo' (effective) strategy: x and y row-sharded; only band-width
-    windows cross shard boundaries (two collective_permutes)."""
-    p = mesh.shape[axis]
-    n = M.n
-    ns = _round_up(-(-n // p), 8)          # rows per shard
-    n_pad = ns * p
-    band = bandwidth(M)
-    h = max(8, _round_up(band, 8))
-    if h > ns:
-        raise ValueError(
-            f"band {band} exceeds shard rows {ns}; halo strategy needs "
-            "band <= n/p (fall back to allreduce/reduce_scatter)")
+    windows cross shard boundaries (two collective_permutes).
 
-    # equal-row shard slot arrays with *local* coordinates
-    ros = row_of_slot(M)
-    ja = np.asarray(M.ja)
-    al_np = np.asarray(M.al)
-    au_np = np.asarray(M.au)
-    shard_of_slot = ros // ns
-    counts = np.bincount(shard_of_slot, minlength=p)
-    smax = _round_up(max(1, int(counts.max())), 128)
-    row_loc = np.zeros((p, smax), np.int32)
-    col_rel = np.full((p, smax), ns + h - 1, np.int32)   # inert target
-    al_s = np.zeros((p, smax), np.float32)
-    au_s = np.zeros((p, smax), np.float32)
-    fill = np.zeros(p, np.int64)
-    for idx in np.argsort(shard_of_slot, kind="stable"):
-        t = int(shard_of_slot[idx])
-        q = int(fill[t]); fill[t] += 1
-        row_loc[t, q] = int(ros[idx]) - t * ns
-        col_rel[t, q] = int(ja[idx]) - (t * ns - h)      # in [0, ns+h)
-        al_s[t, q] = al_np[idx]
-        au_s[t, q] = au_np[idx]
-    ad_pad = np.zeros(n_pad, np.float32)
-    ad_pad[:n] = np.asarray(M.ad)
-    ad_sh = ad_pad.reshape(p, ns)
+    The halo geometry depends on the mesh width, not on the plan, so it is
+    not part of the ``schedule`` artifact — ``build_halo_layout`` memoizes
+    it per (matrix, p) and repeated builds are zero-precompute.  The
+    ``schedule``/``cache`` parameters exist for factory-signature
+    uniformity with the other strategies."""
+    p = mesh.shape[axis]
+    lay = schedule_mod.build_halo_layout(M, p)
+    n, ns, h, n_pad = M.n, lay.ns, lay.h, lay.n_pad
 
     def local(row_loc, col_rel, al, au, ad, x_own):
         # x halo from the LEFT neighbor: its tail h rows
@@ -181,32 +145,38 @@ def build_spmv_halo(M: CSRC, mesh: Mesh, axis: str = "rows") -> Callable:
         x_ext = jnp.concatenate([left_tail, x_own])      # rows [r0-h, r1)
         row_loc, col_rel = row_loc[0], col_rel[0]
         al, au, ad = al[0], au[0], ad[0]
-        y_ext = jnp.zeros((ns + h,), jnp.float32)
-        y_ext = y_ext.at[h + row_loc].add(al * x_ext[col_rel])
-        y_ext = y_ext.at[col_rel].add(au * x_ext[h + row_loc])
-        y_ext = y_ext.at[h:].add(ad * x_own)
+        y_ext = jnp.zeros((ns + h,) + x_own.shape[1:], jnp.float32)
+        y_ext = y_ext.at[h + row_loc].add(_bc(al, x_own) * x_ext[col_rel])
+        y_ext = y_ext.at[col_rel].add(_bc(au, x_own) * x_ext[h + row_loc])
+        y_ext = y_ext.at[h:].add(_bc(ad, x_own) * x_own)
         # y halo to the LEFT neighbor (it owns rows [r0-h, r0))
         from_right = jax.lax.ppermute(
             y_ext[:h], axis, [(i, (i - 1) % p) for i in range(p)])
         y_own = y_ext[h:].at[-h:].add(from_right)
         return y_own
 
-    fn = shard_map(
-        local, mesh=mesh,
-        in_specs=(P(axis, None),) * 5 + (P(axis),),
-        out_specs=P(axis))
-
     sharded = jax.device_put(
-        (jnp.asarray(row_loc), jnp.asarray(col_rel), jnp.asarray(al_s),
-         jnp.asarray(au_s), jnp.asarray(ad_sh)),
+        (lay.row_loc, lay.col_rel, lay.al, lay.au, lay.ad),
         jax.sharding.NamedSharding(mesh, P(axis, None)))
-    x_sharding = jax.sharding.NamedSharding(mesh, P(axis))
+
+    def make_fn(two_d: bool):
+        x_spec = P(axis, None) if two_d else P(axis)
+        return shard_map(
+            local, mesh=mesh,
+            in_specs=(P(axis, None),) * 5 + (x_spec,),
+            out_specs=x_spec)
+
+    fns = {False: make_fn(False), True: make_fn(True)}
 
     @jax.jit
     def apply(x):
-        x_pad = jnp.pad(x, (0, n_pad - n))
-        x_pad = jax.lax.with_sharding_constraint(x_pad, x_sharding)
-        y = fn(*sharded, x_pad)
+        two_d = x.ndim == 2
+        pad = ((0, n_pad - n),) + ((0, 0),) * (x.ndim - 1)
+        x_pad = jnp.pad(x, pad)
+        spec = P(axis, None) if two_d else P(axis)
+        x_pad = jax.lax.with_sharding_constraint(
+            x_pad, jax.sharding.NamedSharding(mesh, spec))
+        y = fns[two_d](*sharded, x_pad)
         return y[:n]
 
     return apply
@@ -216,29 +186,40 @@ STRATEGIES = ("allreduce", "reduce_scatter", "halo")
 
 
 def build_sharded_spmv(M: CSRC, mesh: Mesh, axis: str = "rows",
-                       strategy: str = "auto") -> Callable:
-    """Factory: y_fn(x) computing A·x across the mesh axis."""
+                       strategy: str = "auto",
+                       schedule: Optional[SpmvSchedule] = None,
+                       cache=None) -> Callable:
+    """Factory: y_fn(x) computing A·x (or A·X for (n, B) blocks) across the
+    mesh axis.  ``schedule``/``cache`` reuse the precomputed artifact; with
+    ``strategy='auto'`` a supplied schedule's plan decides."""
+    p = mesh.shape[axis]
     if strategy == "auto":
-        p = mesh.shape[axis]
-        ns = -(-M.n // p)
-        strategy = "halo" if bandwidth(M) <= max(8, ns) else "reduce_scatter"
+        if schedule is not None:
+            strategy = schedule.plan.accumulation
+        else:
+            ns = -(-M.n // p)
+            strategy = ("halo" if bandwidth(M) <= max(8, ns)
+                        else "reduce_scatter")
     if strategy == "allreduce":
-        return build_spmv_allreduce(M, mesh, axis, scatter_output=False)
+        return build_spmv_allreduce(M, mesh, axis, scatter_output=False,
+                                    schedule=schedule, cache=cache)
     if strategy == "reduce_scatter":
-        return build_spmv_allreduce(M, mesh, axis, scatter_output=True)
+        return build_spmv_allreduce(M, mesh, axis, scatter_output=True,
+                                    schedule=schedule, cache=cache)
     if strategy == "halo":
-        return build_spmv_halo(M, mesh, axis)
+        return build_spmv_halo(M, mesh, axis, schedule=schedule, cache=cache)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
-def collective_bytes_estimate(M: CSRC, p: int, strategy: str) -> int:
+def collective_bytes_estimate(M: CSRC, p: int, strategy: str,
+                              nrhs: int = 1) -> int:
     """Napkin model used by §Roofline and the benchmarks: bytes crossing
-    links per shard per product."""
+    links per shard per product (scales linearly with the RHS block)."""
     n, band = M.n, bandwidth(M)
     if strategy == "allreduce":
-        return 2 * 4 * n * (p - 1) // p          # ring all-reduce
+        return 2 * 4 * n * nrhs * (p - 1) // p       # ring all-reduce
     if strategy == "reduce_scatter":
-        return 4 * n * (p - 1) // p
+        return 4 * n * nrhs * (p - 1) // p
     if strategy == "halo":
-        return 2 * 4 * max(8, band)              # x halo + y halo
+        return 2 * 4 * max(8, band) * nrhs           # x halo + y halo
     raise ValueError(strategy)

@@ -22,6 +22,10 @@ cached, and shipped between processes instead of being hard-coded in
   accumulation       distributed accumulation strategy (core/distributed):
                      'allreduce' (all-in-one), 'reduce_scatter'
                      (per-buffer/interval), or 'halo' (effective)
+  nrhs               right-hand-side block width the plan was tuned for
+                     (1 = classic SpMV; >1 = multi-RHS SpMM, the batched
+                     serving / block-Krylov shape).  Execution accepts any
+                     width — nrhs records the tuned operating point.
 
 Plans are plain data: JSON-serializable, hashable, comparable.  The tuner
 (core/tuner.py) enumerates feasible plans from matrix statistics, measures
@@ -54,6 +58,7 @@ class ExecutionPlan:
     k_step_sublanes: int = 8
     partition: str = "nnz"
     accumulation: str = "allreduce"
+    nrhs: int = 1
 
     def __post_init__(self):
         if self.path not in PATHS:
@@ -69,6 +74,8 @@ class ExecutionPlan:
         if self.k_step_sublanes < 1:
             raise ValueError(
                 f"k_step_sublanes must be >= 1, got {self.k_step_sublanes}")
+        if self.nrhs < 1:
+            raise ValueError(f"nrhs must be >= 1, got {self.nrhs}")
 
     @property
     def k_step(self) -> int:
@@ -76,10 +83,11 @@ class ExecutionPlan:
 
     def key(self) -> str:
         """Stable short identifier (used in cache timing tables and CSV)."""
+        rhs = f":r{self.nrhs}" if self.nrhs != 1 else ""
         if self.path == "kernel":
             return (f"kernel:tm{self.tm}:ks{self.k_step_sublanes}"
-                    f":{self.partition}:{self.accumulation}")
-        return f"{self.path}:{self.partition}:{self.accumulation}"
+                    f":{self.partition}:{self.accumulation}{rhs}")
+        return f"{self.path}:{self.partition}:{self.accumulation}{rhs}"
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)

@@ -1,0 +1,466 @@
+"""The unified SpMV schedule layer: every structure-dependent precomputation
+an :class:`~repro.core.plan.ExecutionPlan` needs to execute, bundled in one
+cached, serializable artifact.
+
+The paper's two race-avoidance families — per-thread buffers with four
+accumulation variants (§3.1) and conflict-graph coloring (§3.2) — are all
+*precomputations over the matrix structure*.  Before this layer each consumer
+rebuilt its own piece ad-hoc (the operator packed block-ELL inline, the
+distributed builders re-derived partitions and halo windows, the colorful
+path re-ran the greedy colorer).  ``SpmvSchedule`` gives them one home:
+
+  partition        nnz-guided (or row-count) :class:`RowPartition` with the
+                   paper's *effective* write ranges per part
+  halo             per-part halo widths (§3.1 effective accumulation;
+                   the distributed 'halo' strategy's exchange windows)
+  pack             the block-ELL pack for the Pallas kernel path
+  coloring         balanced largest-degree-first :class:`Coloring` plus
+                   device-ready per-color slot batches (colorful path)
+
+A schedule is built **once** per (matrix fingerprint, value digest, plan,
+partition width) and stored next to the plan in the tuner's
+:class:`~repro.core.tuner.PlanCache` — a serving process that re-registers a
+known matrix performs zero pack/partition/coloring work
+(``BUILD_COUNTS`` is the probe tests assert that with).
+
+Serialization is npz + a JSON meta record (``save_npz`` / ``load_npz``);
+``SCHEDULE_VERSION`` gates the on-disk layout — bumping it (e.g. on a pack
+format change) invalidates every stored schedule, which is then silently
+rebuilt on the next request.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import blockell
+from .blockell import BlockEll
+from .coloring import Coloring, color_rows
+from .csrc import CSRC, row_of_slot
+from .partition import (RowPartition, halo_widths, partition_rows_by_count,
+                        partition_rows_by_nnz)
+from .plan import ExecutionPlan
+
+SCHEDULE_VERSION = 1
+
+# Build probe: how many times each expensive structure precomputation ran.
+# Tests (and ops dashboards) diff these counters around a cache-hit path to
+# assert that no re-pack / re-partition / re-coloring happened.
+BUILD_COUNTS = collections.Counter()
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmvSchedule:
+    """Everything structure-dependent one plan needs to execute one matrix."""
+
+    fingerprint: str            # matrix-class key (tuner.fingerprint)
+    value_digest: str           # exact structure+values digest (this matrix)
+    plan: ExecutionPlan
+    n: int
+    m: int
+    p: int                      # partition width the row partition was built for
+    partition: RowPartition
+    halo: np.ndarray            # (p,) halo width per part (effective ranges)
+    pack: Optional[BlockEll]            # kernel path only
+    coloring: Optional[Coloring]        # colorful path only
+    # device-ready color batches: slot ids grouped by color, concatenated;
+    # color c owns color_slots[color_slot_ptr[c]:color_slot_ptr[c+1]].
+    color_slots: Optional[np.ndarray]
+    color_slot_ptr: Optional[np.ndarray]
+
+    def key(self) -> str:
+        return schedule_key(self.fingerprint, self.value_digest, self.plan,
+                            self.p)
+
+    # ------------------------------------------------------------------
+    # Serialization (npz arrays + JSON meta)
+    # ------------------------------------------------------------------
+
+    def save_npz(self, path: str):
+        meta = {
+            "version": SCHEDULE_VERSION,
+            "fingerprint": self.fingerprint,
+            "value_digest": self.value_digest,
+            "plan": self.plan.to_dict(),
+            "n": self.n, "m": self.m, "p": self.p,
+        }
+        arrays = {
+            "part_starts": np.asarray(self.partition.starts),
+            "part_eff_lo": np.asarray(self.partition.eff_lo),
+            "part_eff_hi": np.asarray(self.partition.eff_hi),
+            "part_nnz": np.asarray(self.partition.nnz_per_part),
+            "halo": np.asarray(self.halo),
+        }
+        if self.pack is not None:
+            pk = self.pack
+            meta["pack"] = {"n": pk.n, "tm": pk.tm, "nt": pk.nt,
+                            "w_pad": pk.w_pad, "s": pk.s,
+                            "num_symmetric": bool(pk.num_symmetric),
+                            "pad_ratio": pk.pad_ratio}
+            arrays.update(
+                pack_vals_l=np.asarray(pk.vals_l),
+                pack_vals_u=np.asarray(pk.vals_u),
+                pack_col_local=np.asarray(pk.col_local),
+                pack_row_in_win=np.asarray(pk.row_in_win),
+                pack_ad=np.asarray(pk.ad),
+            )
+        if self.coloring is not None:
+            col = self.coloring
+            meta["num_colors"] = int(col.num_colors)
+            arrays.update(
+                color_of_row=np.asarray(col.color_of_row),
+                rows_by_color=np.asarray(col.rows_by_color),
+                color_ptr=np.asarray(col.color_ptr),
+                color_slots=np.asarray(self.color_slots),
+                color_slot_ptr=np.asarray(self.color_slot_ptr),
+            )
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        tmp = path + ".tmp.npz"
+        with open(tmp, "wb") as f:
+            np.savez_compressed(f, __meta__=np.frombuffer(
+                json.dumps(meta, sort_keys=True).encode(), dtype=np.uint8),
+                **arrays)
+        os.replace(tmp, path)
+
+    @classmethod
+    def load_npz(cls, path: str) -> "SpmvSchedule":
+        with np.load(path) as z:
+            meta = json.loads(bytes(z["__meta__"]).decode())
+            if meta.get("version") != SCHEDULE_VERSION:
+                raise ValueError(
+                    f"schedule {path}: version {meta.get('version')!r} "
+                    f"!= {SCHEDULE_VERSION}")
+            plan = ExecutionPlan.from_dict(meta["plan"])
+            part = RowPartition(starts=z["part_starts"],
+                                eff_lo=z["part_eff_lo"],
+                                eff_hi=z["part_eff_hi"],
+                                nnz_per_part=z["part_nnz"])
+            pack = None
+            if "pack" in meta:
+                pm = meta["pack"]
+                pack = BlockEll(
+                    n=pm["n"], tm=pm["tm"], nt=pm["nt"], w_pad=pm["w_pad"],
+                    s=pm["s"],
+                    vals_l=jnp.asarray(z["pack_vals_l"]),
+                    vals_u=jnp.asarray(z["pack_vals_u"]),
+                    col_local=jnp.asarray(z["pack_col_local"]),
+                    row_in_win=jnp.asarray(z["pack_row_in_win"]),
+                    ad=jnp.asarray(z["pack_ad"]),
+                    num_symmetric=bool(pm["num_symmetric"]),
+                    pad_ratio=float(pm["pad_ratio"]),
+                )
+            coloring = color_slots = color_slot_ptr = None
+            if "num_colors" in meta:
+                coloring = Coloring(
+                    color_of_row=z["color_of_row"],
+                    num_colors=int(meta["num_colors"]),
+                    rows_by_color=z["rows_by_color"],
+                    color_ptr=z["color_ptr"])
+                color_slots = z["color_slots"]
+                color_slot_ptr = z["color_slot_ptr"]
+            return cls(fingerprint=meta["fingerprint"],
+                       value_digest=meta["value_digest"], plan=plan,
+                       n=meta["n"], m=meta["m"], p=meta["p"],
+                       partition=part, halo=z["halo"], pack=pack,
+                       coloring=coloring, color_slots=color_slots,
+                       color_slot_ptr=color_slot_ptr)
+
+
+def value_digest(M: CSRC) -> str:
+    """Digest of the exact matrix content (structure AND values).
+
+    The tuner's ``fingerprint`` identifies a matrix *class* (two matrices of
+    the same generator share it, so plans transfer).  A schedule embeds the
+    matrix values (pack value streams, per-slot al/au), so its cache key
+    additionally pins the exact matrix — a same-class matrix with different
+    values rebuilds instead of silently reusing another matrix's values.
+    """
+    h = hashlib.sha1()
+    for a in (M.ia, M.ja, M.ad, M.al, M.au, M.iar, M.jar, M.ar):
+        arr = np.ascontiguousarray(np.asarray(a))
+        h.update(arr.tobytes())
+    return h.hexdigest()[:16]
+
+
+def plan_artifact_fields(plan: ExecutionPlan) -> tuple:
+    """The plan fields the schedule artifact actually depends on.  Two plans
+    differing only in accumulation strategy or tuned RHS width (nrhs) share
+    one artifact — the pack/partition/coloring are identical."""
+    fields = [plan.path, plan.partition]
+    if plan.path == "kernel":
+        fields += [plan.tm, plan.w_cap, plan.k_step_sublanes]
+    return tuple(fields)
+
+
+def schedule_key(fingerprint: str, digest: str, plan: ExecutionPlan,
+                 p: int) -> str:
+    ph = hashlib.sha1(json.dumps(plan_artifact_fields(plan)).encode()
+                      ).hexdigest()[:10]
+    return f"{fingerprint}.{digest}.p{p}.{ph}"
+
+
+def color_slot_batches(M: CSRC, coloring: Coloring):
+    """Device-ready colorful batches: lower-triangle slot ids grouped by the
+    color of their owning row (the per-color gather/scatter index sets the
+    colorful path replays serially).  Returns (slots, ptr)."""
+    ia = np.asarray(M.ia)
+    slots = []
+    ptr = np.zeros(coloring.num_colors + 1, dtype=np.int64)
+    for c in range(coloring.num_colors):
+        rows = coloring.rows(c)
+        sl = (np.concatenate([np.arange(ia[r], ia[r + 1]) for r in rows])
+              if len(rows) else np.zeros(0, np.int64))
+        slots.append(sl.astype(np.int32))
+        ptr[c + 1] = ptr[c] + sl.shape[0]
+    slots = (np.concatenate(slots).astype(np.int32) if slots
+             else np.zeros(0, np.int32))
+    return slots, ptr
+
+
+def build_schedule(M: CSRC, plan: ExecutionPlan, p: int = 8,
+                   coloring: Optional[Coloring] = None) -> SpmvSchedule:
+    """Build the full schedule artifact for (matrix, plan).
+
+    Raises ValueError exactly where strict plan execution must fail:
+    a 'kernel' plan whose window exceeds ``plan.w_cap`` (bandwidth gate)
+    and 'kernel'/'colorful' plans on rectangular matrices.
+    """
+    from .tuner import fingerprint as _fingerprint   # local: avoid cycle
+
+    if plan.path == "kernel" and not M.is_square:
+        raise ValueError(
+            "kernel path packs the square CSRC part only; "
+            "use 'segment' for rectangular matrices")
+    if plan.path == "colorful" and not M.is_square:
+        raise ValueError(
+            "colorful path covers the square CSRC part only; "
+            "use 'segment' for rectangular matrices")
+
+    BUILD_COUNTS["schedule"] += 1
+    BUILD_COUNTS["partition"] += 1
+    p = max(1, min(p, M.n))
+    if plan.partition == "count":
+        part = partition_rows_by_count(M, p)
+    else:
+        part = partition_rows_by_nnz(M, p)
+    halo = np.asarray(halo_widths(part), dtype=np.int64)
+
+    pack = None
+    if plan.path == "kernel":
+        BUILD_COUNTS["pack"] += 1
+        pack = blockell.pack(M, tm=plan.tm, k_step=plan.k_step,
+                             w_cap=plan.w_cap)
+
+    col = color_slots = color_slot_ptr = None
+    if plan.path == "colorful":
+        if coloring is None:
+            BUILD_COUNTS["coloring"] += 1
+            col = color_rows(M)
+        else:
+            col = coloring
+        color_slots, color_slot_ptr = color_slot_batches(M, col)
+
+    return SpmvSchedule(
+        fingerprint=_fingerprint(M), value_digest=value_digest(M),
+        plan=plan, n=M.n, m=M.m, p=p, partition=part, halo=halo,
+        pack=pack, coloring=col, color_slots=color_slots,
+        color_slot_ptr=color_slot_ptr)
+
+
+def schedule_for(M: CSRC, plan: ExecutionPlan, cache=None, p: int = 8,
+                 coloring: Optional[Coloring] = None) -> SpmvSchedule:
+    """The schedule to execute (M, plan) with — cache hit wins.
+
+    ``cache`` is a :class:`~repro.core.tuner.PlanCache`; a hit performs zero
+    pack/partition/coloring work.  An explicit ``coloring`` override bypasses
+    the cache (custom colorings are caller-owned, not shared artifacts).
+    """
+    from .tuner import fingerprint as _fingerprint
+
+    if coloring is not None or cache is None:
+        return build_schedule(M, plan, p=p, coloring=coloring)
+    fp = _fingerprint(M)
+    vd = value_digest(M)
+    hit = cache.get_schedule(fp, vd, plan, p)
+    if hit is not None:
+        return hit
+    sched = build_schedule(M, plan, p=p)
+    cache.put_schedule(sched)
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Distributed slot layouts (the shard-level structure precomputations the
+# core/distributed.py strategies execute with)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedSlots:
+    """Slot arrays split into p nnz-balanced groups, padded to equal length
+    and stacked on a leading shard axis (allreduce/reduce_scatter)."""
+    row_idx: jnp.ndarray     # (p, S) global row of each slot (pad: 0)
+    ja: jnp.ndarray          # (p, S) global col             (pad: 0)
+    al: jnp.ndarray          # (p, S)                        (pad: 0.0)
+    au: jnp.ndarray          # (p, S)
+    ad_shard: jnp.ndarray    # (p, n) diagonal owned by shard (zero elsewhere)
+    part: RowPartition
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+# Memo for the device-ready distributed layouts: repeated builder calls for
+# the same matrix (serving restarts, solver re-instantiation) are
+# zero-precompute, matching the schedule-cache contract.  Keys pin the exact
+# matrix (value digest) and the layout geometry; entries are small (device
+# array handles) and matrices served per process are few, so no eviction.
+_SHARDED_SLOTS_MEMO: dict = {}
+_HALO_LAYOUT_MEMO: dict = {}
+
+
+def build_sharded_slots(M: CSRC, part: RowPartition) -> ShardedSlots:
+    """Shard-stacked slot arrays over the schedule's row partition
+    (memoized per exact matrix + partition boundaries)."""
+    memo_key = (value_digest(M), np.asarray(part.starts).tobytes())
+    hit = _SHARDED_SLOTS_MEMO.get(memo_key)
+    if hit is not None:
+        return hit
+    BUILD_COUNTS["sharded_slots"] += 1
+    p = part.p
+    ros = row_of_slot(M)
+    ja = np.asarray(M.ja)
+    al = np.asarray(M.al)
+    au = np.asarray(M.au)
+    ia = np.asarray(M.ia)
+    spans = [(int(ia[part.starts[t]]), int(ia[part.starts[t + 1]]))
+             for t in range(p)]
+    smax = max(1, max(e - s for s, e in spans))
+    smax = _round_up(smax, 128)
+
+    def padded(arr, fill, dtype):
+        out = np.full((p, smax), fill, dtype=dtype)
+        for t, (s, e) in enumerate(spans):
+            out[t, :e - s] = arr[s:e]
+        return jnp.asarray(out)
+
+    ad_shard = np.zeros((p, M.n), dtype=np.float32)
+    for t in range(p):
+        r0, r1 = part.rows(t)
+        ad_shard[t, r0:r1] = np.asarray(M.ad)[r0:r1]
+
+    out = ShardedSlots(
+        row_idx=padded(ros, 0, np.int32),
+        ja=padded(ja, 0, np.int32),
+        al=padded(al, 0.0, np.float32),
+        au=padded(au, 0.0, np.float32),
+        ad_shard=jnp.asarray(ad_shard),
+        part=part,
+    )
+    _SHARDED_SLOTS_MEMO[memo_key] = out
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloLayout:
+    """Equal-row shard slot arrays in *local* coordinates for the paper's
+    effective-accumulation ('halo') strategy: each shard owns ns rows and
+    writes at most h rows below its range (the halo exchanged with the left
+    neighbor)."""
+    p: int
+    ns: int                  # rows per shard (8-aligned)
+    h: int                   # halo width (8-aligned bandwidth)
+    n_pad: int
+    row_loc: jnp.ndarray     # (p, S) local row of each slot
+    col_rel: jnp.ndarray     # (p, S) column relative to [r0-h, r1)
+    al: jnp.ndarray          # (p, S)
+    au: jnp.ndarray          # (p, S)
+    ad: jnp.ndarray          # (p, ns)
+
+
+def build_halo_layout(M: CSRC, p: int) -> HaloLayout:
+    """Memoized per exact matrix + shard count.  Raises ValueError when the
+    band does not fit inside one shard (the strategy's feasibility gate —
+    callers fall back to allreduce/reduce_scatter)."""
+    from .csrc import bandwidth as csrc_bandwidth
+
+    memo_key = (value_digest(M), p)
+    hit = _HALO_LAYOUT_MEMO.get(memo_key)
+    if hit is not None:
+        return hit
+    BUILD_COUNTS["halo_layout"] += 1
+    n = M.n
+    ns = _round_up(-(-n // p), 8)          # rows per shard
+    n_pad = ns * p
+    band = csrc_bandwidth(M)
+    h = max(8, _round_up(band, 8))
+    if h > ns:
+        raise ValueError(
+            f"band {band} exceeds shard rows {ns}; halo strategy needs "
+            "band <= n/p (fall back to allreduce/reduce_scatter)")
+
+    ros = row_of_slot(M)
+    ja = np.asarray(M.ja)
+    al_np = np.asarray(M.al)
+    au_np = np.asarray(M.au)
+    shard_of_slot = ros // ns
+    counts = np.bincount(shard_of_slot, minlength=p)
+    smax = _round_up(max(1, int(counts.max())), 128)
+    row_loc = np.zeros((p, smax), np.int32)
+    col_rel = np.full((p, smax), ns + h - 1, np.int32)   # inert target
+    al_s = np.zeros((p, smax), np.float32)
+    au_s = np.zeros((p, smax), np.float32)
+    fill = np.zeros(p, np.int64)
+    for idx in np.argsort(shard_of_slot, kind="stable"):
+        t = int(shard_of_slot[idx])
+        q = int(fill[t]); fill[t] += 1
+        row_loc[t, q] = int(ros[idx]) - t * ns
+        col_rel[t, q] = int(ja[idx]) - (t * ns - h)      # in [0, ns+h)
+        al_s[t, q] = al_np[idx]
+        au_s[t, q] = au_np[idx]
+    ad_pad = np.zeros(n_pad, np.float32)
+    ad_pad[:n] = np.asarray(M.ad)
+    out = HaloLayout(p=p, ns=ns, h=h, n_pad=n_pad,
+                     row_loc=jnp.asarray(row_loc),
+                     col_rel=jnp.asarray(col_rel),
+                     al=jnp.asarray(al_s), au=jnp.asarray(au_s),
+                     ad=jnp.asarray(ad_pad.reshape(p, ns)))
+    _HALO_LAYOUT_MEMO[memo_key] = out
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Colorful execution over the precomputed batches (single- and multi-RHS)
+# ---------------------------------------------------------------------------
+
+def colorful_apply(M: CSRC, x, color_slots: np.ndarray,
+                   color_slot_ptr: np.ndarray):
+    """y = A·x color by color, using the schedule's precomputed slot batches.
+
+    ``x`` may be (n,) or (n, r): inside one color every write target is
+    unique, so ``.at[].add`` is a permutation write for any RHS width.
+    """
+    two_d = x.ndim == 2
+    row_idx = jnp.asarray(row_of_slot(M))
+
+    def bc(v):                  # broadcast slot values over RHS columns
+        return v[:, None] if two_d else v
+
+    y = (M.ad[:, None] if two_d else M.ad) * x[:M.n]
+    ptr = np.asarray(color_slot_ptr)
+    for c in range(len(ptr) - 1):
+        sl = jnp.asarray(color_slots[ptr[c]:ptr[c + 1]])
+        if sl.shape[0] == 0:
+            continue
+        r = row_idx[sl]
+        j = M.ja[sl]
+        y = y.at[r].add(bc(M.al[sl]) * x[j])
+        y = y.at[j].add(bc(M.au[sl]) * x[r])
+    return y

@@ -135,13 +135,18 @@ def enumerate_plans(stats: MatrixStats,
                     k_steps_sublanes=(8,),
                     w_cap: int = 4096,
                     colorful_max_n: int = 2048,
-                    p_hint: int = 8) -> List[ExecutionPlan]:
+                    p_hint: int = 8,
+                    nrhs_options=(1,)) -> List[ExecutionPlan]:
     """All feasible candidate plans for a matrix with these statistics.
 
     The segment path is always a candidate.  Kernel plans are emitted per
     (tm, k_step) whose window fits under ``w_cap``.  Colorful is emitted
     for square matrices small enough that the O(n·deg²) greedy coloring is
     worth attempting (the paper benchmarks it on narrow-band matrices).
+    ``nrhs_options`` replicates every candidate per RHS block width, so a
+    serving deployment can tune the batched SpMM operating point directly
+    (the winning path may differ between nrhs=1 and nrhs=8: arithmetic
+    intensity rises with the block).
     """
     partition, acc = _distributed_fields(stats, p_hint)
     plans = [ExecutionPlan(path="segment", w_cap=w_cap,
@@ -163,6 +168,9 @@ def enumerate_plans(stats: MatrixStats,
         for p in source(stats):
             if feasible(p, n=stats.n, m=stats.m, bandwidth=stats.bandwidth):
                 plans.append(p)
+    if tuple(nrhs_options) != (1,):
+        plans = [dataclasses.replace(p, nrhs=r)
+                 for p in plans for r in nrhs_options]
     # dedup on the full plan (frozen dataclass), preserving order — key()
     # elides execution-irrelevant fields and must not drop distinct plans
     seen, out = set(), []
@@ -206,6 +214,15 @@ class PlanCache:
     ``plan_for(autotune=False)`` are visible to heuristic lookups but do
     NOT satisfy ``tune()``, which would otherwise report a never-measured
     plan as the argmin.
+
+    Next to each plan the cache stores the **schedule artifact**
+    (core/schedule.py): the block-ELL pack, row partition/halo ranges, and
+    coloring the plan executes with.  Schedules live in memory plus — when
+    the cache has a file path — as npz files under ``<stem>_schedules/``
+    beside the JSON, keyed by (fingerprint, value digest, plan, partition
+    width).  ``get_schedule`` hits mean zero pack/partition/coloring work;
+    a schedule whose ``SCHEDULE_VERSION`` no longer matches is ignored and
+    rebuilt (format-change invalidation).
     """
 
     VERSION = 1
@@ -215,6 +232,9 @@ class PlanCache:
         self.entries: Dict[str, Dict] = {}
         self.hits = 0
         self.misses = 0
+        self.schedules: Dict[str, object] = {}
+        self.schedule_hits = 0
+        self.schedule_misses = 0
         if path is not None and os.path.exists(path):
             self._read(path)
 
@@ -257,6 +277,51 @@ class PlanCache:
                                    for k, v in timings_s.items()}
             entry["best_us"] = round(min(timings_s.values()) * 1e6, 3)
         self.entries[fp] = entry
+
+    # ---- schedule artifacts (stored next to the plans) ----
+
+    def _schedule_dir(self) -> Optional[str]:
+        if self.path is None:
+            return None
+        stem, _ = os.path.splitext(os.path.abspath(self.path))
+        return stem + "_schedules"
+
+    def get_schedule(self, fp: str, digest: str, plan: ExecutionPlan,
+                     p: int = 8):
+        """The cached schedule for (matrix, plan), or None.  Memory first,
+        then the npz file beside the cache; version/plan mismatches count
+        as misses (the caller rebuilds)."""
+        from .schedule import (SpmvSchedule, plan_artifact_fields,
+                               schedule_key)
+        key = schedule_key(fp, digest, plan, p)
+        sched = self.schedules.get(key)
+        if sched is None:
+            d = self._schedule_dir()
+            f = None if d is None else os.path.join(d, key + ".npz")
+            if f is not None and os.path.exists(f):
+                try:
+                    sched = SpmvSchedule.load_npz(f)
+                except Exception:         # stale version, truncated or
+                    sched = None          # foreign file: rebuild, not crash
+                if sched is not None and (
+                        plan_artifact_fields(sched.plan)
+                        != plan_artifact_fields(plan)
+                        or sched.value_digest != digest):
+                    sched = None
+                if sched is not None:
+                    self.schedules[key] = sched
+        if sched is None:
+            self.schedule_misses += 1
+            return None
+        self.schedule_hits += 1
+        return sched
+
+    def put_schedule(self, sched):
+        key = sched.key()
+        self.schedules[key] = sched
+        d = self._schedule_dir()
+        if d is not None:
+            sched.save_npz(os.path.join(d, key + ".npz"))
 
     def __len__(self) -> int:
         return len(self.entries)
@@ -309,9 +374,19 @@ def tune(M: CSRC,
         x = np.random.default_rng(0).standard_normal(M.m).astype(np.float32)
     import jax.numpy as jnp
     xj = jnp.asarray(x)
+    # multi-RHS candidates are measured at their tuned block width
+    _x_by_width = {1: xj} if xj.ndim == 1 else {xj.shape[1]: xj,
+                                               1: xj[:, 0]}
+
+    def _x_for(nrhs: int):
+        if nrhs not in _x_by_width:
+            _x_by_width[nrhs] = jnp.asarray(
+                np.random.default_rng(nrhs).standard_normal(
+                    (M.m, nrhs)).astype(np.float32))
+        return _x_by_width[nrhs]
 
     timings: Dict[str, float] = {}
-    best_plan, best_t = None, float("inf")
+    best_plan, best_t, best_op = None, float("inf"), None
     for p in cands:
         if not feasible(p, n=M.n, m=M.m, bandwidth=stats.bandwidth):
             continue
@@ -319,15 +394,23 @@ def tune(M: CSRC,
             op = SpmvOperator.from_plan(M, p, interpret=interpret)
         except ValueError:
             continue              # pack-time infeasibility (bandwidth gate)
-        t = float(measure(op, xj))
+        t = float(measure(op, _x_for(p.nrhs)))
         timings[p.key()] = t
-        if t < best_t:
-            best_plan, best_t = p, t
+        # argmin on per-RHS-column time: an nrhs=8 candidate does 8x the
+        # work of a single product, so raw runtimes are not comparable
+        # across block widths
+        t_norm = t / p.nrhs
+        if t_norm < best_t:
+            best_plan, best_t, best_op = p, t_norm, op
     if best_plan is None:
         raise ValueError("no feasible execution plan for this matrix")
 
     if cache is not None:
         cache.put(fp, best_plan, timings)
+        # store the winner's schedule next to the plan: serving processes
+        # constructing this (matrix, plan) never re-pack or re-color
+        if best_op is not None and getattr(best_op, "schedule", None) is not None:
+            cache.put_schedule(best_op.schedule)
         if save and cache.path is not None:
             cache.save()
     return TuneResult(plan=best_plan, fingerprint=fp, timings_s=timings,

@@ -131,7 +131,9 @@ def blockell_spmv_windows(pack: BlockEll, x: jnp.ndarray,
 
 
 def blockell_spmv(pack: BlockEll, x: jnp.ndarray,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: bool = True,
+                  k_step_sublanes: int = 8) -> jnp.ndarray:
     """Full product: kernel windows + effective accumulation."""
-    wins = blockell_spmv_windows(pack, x, interpret=interpret)
+    wins = blockell_spmv_windows(pack, x, k_step_sublanes=k_step_sublanes,
+                                 interpret=interpret)
     return overlap_add(pack, wins)

@@ -1,20 +1,31 @@
-"""Public jit'd entry points for the CSRC SpMV kernels.
+"""Public jit'd entry points for the CSRC SpMV/SpMM kernels.
 
-``SpmvOperator`` executes an :class:`repro.core.plan.ExecutionPlan`:
+``SpmvOperator`` executes an :class:`repro.core.plan.ExecutionPlan` through
+an :class:`repro.core.schedule.SpmvSchedule` — the precomputed artifact
+bundling the block-ELL pack, row partition/halo ranges, and coloring the
+plan needs (core/schedule.py).  The operator never packs, partitions, or
+colors inline: it asks the schedule layer (and, given ``cache=``, reuses
+the artifact stored next to the plan in the tuner's PlanCache).
+
+Paths:
 
   * 'kernel'   block-ELL Pallas kernel when the matrix is banded enough to
     window (interpret-mode on CPU, compiled on TPU);
   * 'segment'  segment-sum jnp path (any matrix, incl. the rectangular tail);
-  * 'colorful' the paper's §3.2 color-by-color permutation writes.
+  * 'colorful' the paper's §3.2 color-by-color permutation writes, over the
+    schedule's precomputed per-color slot batches.
 
-Construction accepts either a fully-resolved plan (``from_plan``, the
-tuner path) or the legacy keyword form where ``path='auto'`` resolves to
-kernel-if-packable-else-segment (the paper's static fallback).  Either
-way the operator *emits* the concrete plan it runs as ``op.plan``, so
-callers can cache, log, or replay the decision.
+Every path accepts ``x`` of shape (m,) — classic SpMV — or (m, r) —
+multi-RHS SpMM (batched serving, block-Krylov solvers).  Construction
+accepts either a fully-resolved plan (``from_plan``, the tuner path) or the
+legacy keyword form where ``path='auto'`` resolves to
+kernel-if-packable-else-segment (the paper's static fallback).  Either way
+the operator *emits* the concrete plan it runs as ``op.plan`` and the
+artifact as ``op.schedule``, so callers can cache, log, or replay both.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -22,83 +33,103 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.csrc import CSRC
-from repro.core import blockell
+from repro.core import schedule as schedule_mod
 from repro.core.plan import ExecutionPlan
 from . import ref
 from . import csrc_spmv as kernel_mod
+from . import csrc_spmm as kernel_mm_mod
 
 
 class SpmvOperator:
-    """A prepared SpMV y = A·x for repeated application (iterative solvers).
+    """A prepared y = A·x / Y = A·X for repeated application.
 
-    Packs once, jits once; call like a function.  ``path`` is one of
-    'auto' | 'kernel' | 'segment' | 'colorful'; or pass ``plan=`` /
+    Builds (or fetches from ``cache``) the schedule once, jits once per RHS
+    rank; call like a function with x of shape (m,) or (m, r).  ``path`` is
+    one of 'auto' | 'kernel' | 'segment' | 'colorful'; or pass ``plan=`` /
     use :meth:`from_plan` to pin every degree of freedom.
     """
 
     def __init__(self, M: CSRC, path: str = "auto", tm: int = 128,
                  w_cap: int = 4096, interpret: bool = True,
                  coloring=None, k_step: int = 1024,
-                 plan: Optional[ExecutionPlan] = None):
-        if plan is not None:
-            path, tm, w_cap = plan.path, plan.tm, plan.w_cap
-            k_step = plan.k_step
+                 plan: Optional[ExecutionPlan] = None,
+                 schedule: Optional["schedule_mod.SpmvSchedule"] = None,
+                 cache=None):
         self.M = M
         self.n, self.m = M.n, M.m
-        self.pack = None
-        self.coloring = coloring
-        self.path = path
-        if path in ("auto", "kernel") and M.is_square:
-            try:
-                self.pack = blockell.pack(M, tm=tm, k_step=k_step,
-                                          w_cap=w_cap)
-                self.path = "kernel"
-            except ValueError:
-                if path == "kernel":
-                    raise
-                self.path = "segment"
-        elif path == "kernel":
+        ks_sub = max(1, k_step // 128)
+
+        if plan is None and schedule is not None:
+            plan = schedule.plan
+        if plan is None:
+            if path == "auto":
+                base = ExecutionPlan(path="kernel", tm=tm, w_cap=w_cap,
+                                     k_step_sublanes=ks_sub)
+                if M.is_square:
+                    try:
+                        schedule = schedule_mod.schedule_for(
+                            M, base, cache=cache)
+                        plan = base
+                    except ValueError:      # bandwidth gate: static fallback
+                        plan = dataclasses.replace(base, path="segment")
+                else:
+                    plan = dataclasses.replace(base, path="segment")
+            else:
+                plan = ExecutionPlan(path=path, tm=tm, w_cap=w_cap,
+                                     k_step_sublanes=ks_sub)
+
+        if schedule is None:
+            # strict: an infeasible kernel plan or a square-only plan on a
+            # rectangular matrix raises here (no silent fallback)
+            schedule = schedule_mod.schedule_for(M, plan, cache=cache,
+                                                 coloring=coloring)
+        elif (schedule_mod.plan_artifact_fields(schedule.plan)
+              != schedule_mod.plan_artifact_fields(plan)):
             raise ValueError(
-                "kernel path packs the square CSRC part only; "
-                "use 'segment' for rectangular matrices")
-        elif path == "colorful":
-            if not M.is_square:
-                raise ValueError(
-                    "colorful path covers the square CSRC part only; "
-                    "use 'segment' for rectangular matrices")
-            from repro.core.coloring import color_rows
-            self.coloring = coloring or color_rows(M)
-        else:
-            self.path = "segment" if path == "auto" else path
+                f"schedule was built for {schedule.plan.key()} and cannot "
+                f"execute plan {plan.key()}")
+        self.plan = plan
+        self.schedule = schedule
+        self.path = plan.path
+        self.pack = schedule.pack
+        self.coloring = schedule.coloring if coloring is None else coloring
+        self.interpret = interpret
 
         if self.path == "kernel":
             p = self.pack
             self._fn = jax.jit(functools.partial(
-                kernel_mod.blockell_spmv, p, interpret=interpret))
+                kernel_mod.blockell_spmv, p, interpret=interpret,
+                k_step_sublanes=plan.k_step_sublanes))
+            self._fn_mm = jax.jit(functools.partial(
+                kernel_mm_mod.blockell_spmm, p, interpret=interpret,
+                k_step_sublanes=plan.k_step_sublanes))
         elif self.path == "segment":
             self._fn = jax.jit(lambda x: ref.csrc_spmv(M, x))
+            self._fn_mm = jax.jit(lambda X: ref.csrc_spmm(M, X))
         elif self.path == "colorful":
-            col = self.coloring
-            self._fn = jax.jit(lambda x: ref.colorful_spmv(M, x, col))
+            slots, ptr = schedule.color_slots, schedule.color_slot_ptr
+            if slots is None:       # explicit coloring override
+                slots, ptr = schedule_mod.color_slot_batches(M, self.coloring)
+            apply = functools.partial(schedule_mod.colorful_apply, M,
+                                      color_slots=slots, color_slot_ptr=ptr)
+            self._fn = jax.jit(apply)
+            self._fn_mm = jax.jit(apply)
         else:
-            raise ValueError(f"unknown path {path}")
-
-        # the concrete plan this operator executes (legacy 'auto' resolved)
-        if plan is not None and plan.path == self.path:
-            self.plan = plan
-        else:
-            self.plan = ExecutionPlan(
-                path=self.path, tm=tm, w_cap=w_cap,
-                k_step_sublanes=max(1, k_step // 128))
+            raise ValueError(f"unknown path {self.path}")
 
     @classmethod
     def from_plan(cls, M: CSRC, plan: ExecutionPlan,
-                  interpret: bool = True, coloring=None) -> "SpmvOperator":
+                  interpret: bool = True, coloring=None, cache=None,
+                  schedule=None) -> "SpmvOperator":
         """Strict construction: the plan's path is executed as given (a
-        'kernel' plan whose window does not fit raises ValueError)."""
-        return cls(M, interpret=interpret, coloring=coloring, plan=plan)
+        'kernel' plan whose window does not fit raises ValueError).  Pass
+        ``cache=`` (a PlanCache) to reuse the stored schedule artifact."""
+        return cls(M, interpret=interpret, coloring=coloring, plan=plan,
+                   cache=cache, schedule=schedule)
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        if x.ndim == 2:
+            return self._fn_mm(x)
         return self._fn(x)
 
     @property

@@ -115,26 +115,14 @@ def colorful_spmv(M: CSRC, x, coloring):
     scatter is a permutation write (`.at[].add` with unique indices — no
     accumulation ordering needed).
 
-    This mirrors the *algorithmic* structure (serial colors × parallel rows).
-    It is not the fast path on TPU — the benchmark reproduces the paper's
-    locality finding.
+    This mirrors the *algorithmic* structure (serial colors × parallel rows)
+    and handles x of shape (n,) or (n, r).  The per-color slot batches are
+    normally precomputed once in the schedule artifact (core/schedule.py);
+    this wrapper derives them from ``coloring`` for ad-hoc use.
     """
-    n = M.n
-    row_idx = jnp.asarray(row_of_slot(M))
-    ia = np.asarray(M.ia)
-    y = M.ad * x[:n]
-    for c in range(coloring.num_colors):
-        rows = coloring.rows(c)
-        slots = np.concatenate([np.arange(ia[r], ia[r + 1]) for r in rows]
-                               ) if len(rows) else np.zeros(0, np.int64)
-        slots = jnp.asarray(slots.astype(np.int32))
-        if slots.shape[0] == 0:
-            continue
-        r = row_idx[slots]
-        j = M.ja[slots]
-        y = y.at[r].add(M.al[slots] * x[j])
-        y = y.at[j].add(M.au[slots] * x[r])
-    return y
+    from repro.core.schedule import color_slot_batches, colorful_apply
+    slots, ptr = color_slot_batches(M, coloring)
+    return colorful_apply(M, x, slots, ptr)
 
 
 def blockell_spmv(pack, x):

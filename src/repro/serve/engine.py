@@ -21,7 +21,7 @@ launch layer lowers for the 256-chip serve dry-run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -129,9 +129,11 @@ class SpmvServingEngine:
     ``register`` resolves the matrix's plan through the shared plan cache
     (``autotune=True`` measures candidates on a miss; a hit — e.g. a second
     matrix of an already-served class — constructs the operator with zero
-    measurements).  ``step`` groups the queue by matrix and answers each
-    group with one batched product: a single pending request runs the
-    operator's tuned single-vector path, several run the multi-RHS spmm.
+    measurements) and reuses the schedule artifact stored next to the plan
+    (core/schedule.py): re-registering a known matrix performs zero
+    pack/partition/coloring work.  ``step`` groups the queue by matrix and
+    answers each group with **one batched multi-RHS SpMM** through the
+    operator's tuned path — never a loop of single products.
     """
 
     def __init__(self, cache=None, autotune: bool = False,
@@ -154,7 +156,7 @@ class SpmvServingEngine:
                                interpret=self.interpret)
         self._matrices[matrix_id] = M
         self._ops[matrix_id] = SpmvOperator.from_plan(
-            M, plan, interpret=self.interpret)
+            M, plan, interpret=self.interpret, cache=self.cache)
         return plan
 
     def plan(self, matrix_id: str):
@@ -175,8 +177,9 @@ class SpmvServingEngine:
         return uid
 
     def step(self) -> Dict[int, np.ndarray]:
-        """One tick: answer up to max_batch requests per matrix."""
-        from repro.kernels import ops as _ops
+        """One tick: answer up to max_batch requests per matrix, each group
+        coalesced into a single batched SpMM through the tuned operator
+        (kernel, segment, and colorful paths all execute blocks natively)."""
         by_matrix: Dict[str, List[SpmvRequest]] = {}
         rest: List[SpmvRequest] = []
         for r in self.queue:
@@ -193,13 +196,7 @@ class SpmvServingEngine:
                 out[group[0].uid] = np.asarray(op(jnp.asarray(group[0].x)))
             else:
                 X = jnp.asarray(np.stack([r.x for r in group], axis=1))
-                if op.path == "kernel":
-                    # the tuned plan's block-ELL pack serves batches too
-                    from repro.kernels.csrc_spmm import blockell_spmm
-                    Y = np.asarray(blockell_spmm(op.pack, X,
-                                                 interpret=self.interpret))
-                else:
-                    Y = np.asarray(_ops.spmm(self._matrices[mid], X))
+                Y = np.asarray(op(X))
                 for i, r in enumerate(group):
                     out[r.uid] = Y[:, i]
         return out

@@ -1,0 +1,337 @@
+"""The unified schedule layer (core/schedule.py): cache round-trips with
+zero re-pack/re-color, bit-identical execution from deserialized artifacts,
+balanced largest-degree-first coloring invariants, and multi-RHS SpMM vs
+the dense oracle across all three paths."""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _propshim import given, settings, st
+from repro.core import csrc, schedule as S, tuner
+from repro.core.coloring import balance_stats, color_rows, verify_coloring
+from repro.core.plan import ExecutionPlan
+from repro.kernels import ops
+
+
+def _build_delta(fn):
+    """Run fn and return (result, builds-that-happened) from the probe."""
+    before = dict(S.BUILD_COUNTS)
+    out = fn()
+    after = dict(S.BUILD_COUNTS)
+    delta = {k: after.get(k, 0) - before.get(k, 0)
+             for k in set(after) | set(before)}
+    return out, {k: v for k, v in delta.items() if v}
+
+
+# ---------------------------------------------------------------------------
+# Schedule build + cache behavior
+# ---------------------------------------------------------------------------
+
+def test_schedule_bundles_everything_per_path():
+    M = csrc.fem_band(72, 5, seed=1)
+    kernel = S.build_schedule(M, ExecutionPlan(path="kernel", tm=8))
+    assert kernel.pack is not None and kernel.coloring is None
+    colorful = S.build_schedule(M, ExecutionPlan(path="colorful"))
+    assert colorful.pack is None and colorful.coloring is not None
+    assert colorful.color_slots.shape[0] == M.k
+    segment = S.build_schedule(M, ExecutionPlan(path="segment"))
+    assert segment.pack is None and segment.coloring is None
+    for sched in (kernel, colorful, segment):
+        assert sched.partition.starts[-1] == M.n
+        assert sched.halo.shape == (sched.partition.p,)
+
+
+def test_schedule_strictness_matches_plan_gates():
+    Mr = csrc.rectangular_fem(32, 8, 3, seed=0)
+    with pytest.raises(ValueError):
+        S.build_schedule(Mr, ExecutionPlan(path="kernel"))
+    with pytest.raises(ValueError):
+        S.build_schedule(Mr, ExecutionPlan(path="colorful"))
+    Mu = csrc.random_symmetric_pattern(300, 4, seed=0)   # bandwidth ~ n
+    with pytest.raises(ValueError):
+        S.build_schedule(Mu, ExecutionPlan(path="kernel", w_cap=256))
+
+
+def test_cache_hit_skips_all_precompute():
+    """The acceptance probe: a second operator construction for the same
+    (matrix, plan) through the cache performs zero pack/partition/coloring
+    work, and produces bit-identical results."""
+    M = csrc.fem_band(48, 4, seed=3)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(M.m)
+                    .astype(np.float32))
+    cache = tuner.PlanCache()
+    plan = ExecutionPlan(path="kernel", tm=8)
+    op1, d1 = _build_delta(
+        lambda: ops.SpmvOperator.from_plan(M, plan, cache=cache))
+    assert d1.get("pack") == 1 and d1.get("schedule") == 1
+    op2, d2 = _build_delta(
+        lambda: ops.SpmvOperator.from_plan(M, plan, cache=cache))
+    assert d2 == {}, f"cache hit rebuilt: {d2}"
+    assert cache.schedule_hits == 1
+    np.testing.assert_array_equal(np.asarray(op1(x)), np.asarray(op2(x)))
+
+
+def test_same_class_different_values_does_not_share_schedule():
+    """fingerprint() keys a matrix *class*; the schedule embeds values, so
+    a same-class matrix with different values must rebuild, not reuse."""
+    M1 = csrc.fem_band(64, 3, seed=7)
+    M2 = csrc.from_dense(2.0 * csrc.to_dense(M1))       # same structure
+    assert tuner.fingerprint(M1) == tuner.fingerprint(M2)
+    assert S.value_digest(M1) != S.value_digest(M2)
+    cache = tuner.PlanCache()
+    plan = ExecutionPlan(path="kernel", tm=8)
+    op1 = ops.SpmvOperator.from_plan(M1, plan, cache=cache)
+    _, d = _build_delta(
+        lambda: ops.SpmvOperator.from_plan(M2, plan, cache=cache))
+    assert d.get("pack") == 1        # rebuilt — no silent value reuse
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(M1.m)
+                    .astype(np.float32))
+    del op1
+
+
+def test_schedule_npz_roundtrip_through_disk_cache(tmp_path):
+    """Round-trip the artifact through a disk-backed PlanCache: a fresh
+    process (new cache object) loads the npz and re-packs nothing; SpMV and
+    SpMM results are bit-identical to the originally-built operator."""
+    path = os.path.join(tmp_path, "plans.json")
+    M = csrc.fem_band(48, 3, seed=1)
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(M.m)
+                    .astype(np.float32))
+    X = jnp.asarray(np.random.default_rng(3).standard_normal((M.m, 2))
+                    .astype(np.float32))
+    for plan in (ExecutionPlan(path="kernel", tm=8),
+                 ExecutionPlan(path="colorful"),
+                 ExecutionPlan(path="segment")):
+        cache = tuner.PlanCache(path=path)
+        op1 = ops.SpmvOperator.from_plan(M, plan, cache=cache)
+        cache2 = tuner.PlanCache(path=path)          # "new process"
+        op2, d = _build_delta(
+            lambda: ops.SpmvOperator.from_plan(M, plan, cache=cache2))
+        assert d == {}, f"{plan.path}: disk hit rebuilt {d}"
+        np.testing.assert_array_equal(np.asarray(op1(X)),
+                                      np.asarray(op2(X)))
+        if plan.path == "kernel":       # 1-D path bit-identical too
+            np.testing.assert_array_equal(np.asarray(op1(x)),
+                                          np.asarray(op2(x)))
+
+
+def test_schedule_version_mismatch_invalidates(tmp_path, monkeypatch):
+    """Bumping SCHEDULE_VERSION (a format change) silently invalidates
+    stored schedules: the next request rebuilds instead of crashing."""
+    path = os.path.join(tmp_path, "plans.json")
+    M = csrc.fem_band(48, 3, seed=9)
+    plan = ExecutionPlan(path="kernel", tm=8)
+    cache = tuner.PlanCache(path=path)
+    ops.SpmvOperator.from_plan(M, plan, cache=cache)
+    monkeypatch.setattr(S, "SCHEDULE_VERSION", S.SCHEDULE_VERSION + 1)
+    cache2 = tuner.PlanCache(path=path)
+    _, d = _build_delta(
+        lambda: ops.SpmvOperator.from_plan(M, plan, cache=cache2))
+    assert d.get("pack") == 1        # rebuilt under the new version
+
+
+def test_tune_stores_winning_schedule():
+    M = csrc.poisson2d(8)
+    cache = tuner.PlanCache()
+    res = tuner.tune(M, cache=cache,
+                     measure=lambda op, x: 1.0 if op.plan.path == "kernel"
+                     else 2.0)
+    assert len(cache.schedules) == 1
+    _, d = _build_delta(
+        lambda: ops.SpmvOperator.from_plan(M, res.plan, cache=cache))
+    assert d == {} and cache.schedule_hits == 1
+
+
+# ---------------------------------------------------------------------------
+# Coloring quality: largest-degree-first + RACE-style balancing
+# ---------------------------------------------------------------------------
+
+# Small-scale analogs of every benchmark-suite matrix class
+# (benchmarks/suite.py) — the invariant set for coloring quality.
+COLORING_SET = [
+    ("poisson", lambda: csrc.poisson2d(8)),
+    ("narrow_band1", lambda: csrc.fem_band(120, 1, seed=1)),
+    ("fem_band_w4", lambda: csrc.fem_band(120, 4, seed=2)),
+    ("fem_band_w8", lambda: csrc.fem_band(80, 8, seed=3)),
+    ("fem_band_w8_sym", lambda: csrc.fem_band(80, 8, seed=3,
+                                              numeric_symmetric=True)),
+    ("random_nnz4", lambda: csrc.random_symmetric_pattern(80, 4, seed=4)),
+    ("dense", lambda: csrc.dense_matrix(24, seed=5)),
+]
+
+
+@pytest.mark.parametrize("name,make", COLORING_SET,
+                         ids=[n for n, _ in COLORING_SET])
+def test_degree_ordering_never_beaten_by_unordered(name, make):
+    """Satellite invariant: the default (largest-degree-first) colorer never
+    uses more colors than the legacy unordered greedy, on every benchmark
+    matrix class."""
+    M = make()
+    legacy = color_rows(M, order="natural", balance=False)
+    tuned = color_rows(M)
+    assert tuned.num_colors <= legacy.num_colors
+    assert verify_coloring(M, tuned)
+
+
+@pytest.mark.parametrize("name,make", COLORING_SET[:5],
+                         ids=[n for n, _ in COLORING_SET[:5]])
+def test_balancing_reduces_dispersion_preserves_colors(name, make):
+    M = make()
+    raw = color_rows(M, balance=False)
+    bal = color_rows(M, balance=True)
+    assert bal.num_colors <= raw.num_colors
+    assert verify_coloring(M, bal)
+    assert balance_stats(bal)["std"] <= balance_stats(raw)["std"] + 1e-9
+
+
+def test_balanced_color_classes_keep_row_locality():
+    """Rows inside one color class are emitted in ascending row order (the
+    §3.2 locality criticism: iteration inside a color should stride
+    monotonically through y)."""
+    M = csrc.fem_band(120, 4, seed=6)
+    col = color_rows(M)
+    for c in range(col.num_colors):
+        rows = col.rows(c)
+        assert (np.diff(rows) > 0).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(8, 48), st.integers(1, 5), st.integers(0, 1000))
+def test_property_balanced_coloring_conflict_free(n, band, seed):
+    M = csrc.fem_band(n, min(band, n - 1), seed=seed)
+    col = color_rows(M)
+    assert verify_coloring(M, col)
+    covered = sorted(np.concatenate(
+        [col.rows(c) for c in range(col.num_colors)]).tolist())
+    assert covered == list(range(n))
+
+
+# ---------------------------------------------------------------------------
+# Multi-RHS SpMM vs the dense oracle (all paths, edge-case matrices)
+# ---------------------------------------------------------------------------
+
+def _empty_rows(n):
+    i = np.arange(0, n, 2)
+    return csrc.from_coo(i, i, np.ones(i.size), n=n)
+
+
+SPMM_CASES = [
+    ("fem_band", lambda: csrc.fem_band(48, 4, seed=1)),
+    ("poisson", lambda: csrc.poisson2d(7)),
+    ("rect_tail", lambda: csrc.rectangular_fem(40, 12, 3, seed=5)),
+    ("empty_rows", lambda: _empty_rows(20)),
+]
+
+
+@pytest.mark.parametrize("nrhs", [1, 3, 8])
+@pytest.mark.parametrize("name,make", SPMM_CASES,
+                         ids=[n for n, _ in SPMM_CASES])
+def test_spmm_matches_dense_oracle_all_plans(name, make, nrhs):
+    """Acceptance: batched SpMM results match the dense oracle for
+    nrhs in {1, 3, 8} on every feasible path (kernel, segment, colorful),
+    including the rectangular tail and empty-row matrices."""
+    M = make()
+    A = csrc.to_dense(M).astype(np.float64)
+    X = np.random.default_rng(nrhs).standard_normal(
+        (M.m, nrhs)).astype(np.float32)
+    Y_ref = A @ X.astype(np.float64)
+    scale = max(1.0, np.abs(Y_ref).max())
+    plans = tuner.enumerate_plans(tuner.stats_of(M), tms=(8,),
+                                  nrhs_options=(nrhs,))
+    assert plans
+    for plan in plans:
+        op = ops.SpmvOperator.from_plan(M, plan)
+        Y = np.asarray(op(jnp.asarray(X)), dtype=np.float64)
+        np.testing.assert_allclose(Y / scale, Y_ref / scale,
+                                   rtol=2e-4, atol=2e-4,
+                                   err_msg=f"plan {plan.key()}")
+        if nrhs == 1 and name == "fem_band":
+            y1 = np.asarray(op(jnp.asarray(X[:, 0])), dtype=np.float64)
+            np.testing.assert_allclose(y1, Y[:, 0], rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(10, 32), st.integers(1, 4), st.integers(0, 10_000),
+       st.sampled_from([1, 3, 8]))
+def test_property_spmm_random_band(n, band, seed, nrhs):
+    M = csrc.fem_band(n, min(band, max(1, n - 1)), seed=seed)
+    A = csrc.to_dense(M).astype(np.float64)
+    X = np.random.default_rng(seed).standard_normal(
+        (M.m, nrhs)).astype(np.float32)
+    Y_ref = A @ X.astype(np.float64)
+    scale = max(1.0, np.abs(Y_ref).max())
+    for plan in tuner.enumerate_plans(tuner.stats_of(M), tms=(8,)):
+        Y = np.asarray(ops.SpmvOperator.from_plan(M, plan)(jnp.asarray(X)),
+                       dtype=np.float64)
+        np.testing.assert_allclose(Y / scale, Y_ref / scale,
+                                   rtol=2e-4, atol=2e-4,
+                                   err_msg=f"plan {plan.key()}")
+
+
+def test_plan_nrhs_field_and_key():
+    p = ExecutionPlan(path="segment", nrhs=8)
+    assert p.key().endswith(":r8")
+    assert ExecutionPlan.from_json(p.to_json()) == p
+    with pytest.raises(ValueError):
+        ExecutionPlan(nrhs=0)
+    # old cache entries (no nrhs key) deserialize to nrhs=1
+    d = p.to_dict()
+    del d["nrhs"]
+    assert ExecutionPlan.from_dict(d).nrhs == 1
+
+
+def test_enumerate_plans_nrhs_options():
+    stats = tuner.stats_of(csrc.poisson2d(6))
+    plans = tuner.enumerate_plans(stats, nrhs_options=(1, 4))
+    widths = {p.nrhs for p in plans}
+    assert widths == {1, 4}
+    base = tuner.enumerate_plans(stats)
+    assert len(plans) == 2 * len(base)
+
+
+# ---------------------------------------------------------------------------
+# Serving engine: coalesced SpMM + zero-build registration
+# ---------------------------------------------------------------------------
+
+def test_serving_register_cache_hit_zero_builds():
+    from repro.serve.engine import SpmvServingEngine
+    M = csrc.fem_band(80, 4, seed=2)
+    cache = tuner.PlanCache()
+    tuner.tune(M, cache=cache,
+               measure=lambda op, x: 1.0 if op.plan.path == "kernel" else 2.0)
+    eng = SpmvServingEngine(cache=cache, autotune=True)
+    _, d = _build_delta(lambda: eng.register("fem", M))
+    assert d == {}, f"cache-hit register did precompute work: {d}"
+
+
+def test_serving_step_coalesces_into_one_spmm():
+    """All pending requests for one matrix are answered by a single batched
+    operator call (probe: count operator invocations)."""
+    from repro.serve.engine import SpmvServingEngine
+    M = csrc.fem_band(64, 3, seed=4)
+    A = csrc.to_dense(M)
+    eng = SpmvServingEngine()
+    eng.register("m", M)
+    op = eng._ops["m"]
+    calls = []
+    orig = op.__call__
+
+    class CountingOp:
+        plan = op.plan
+        path = op.path
+
+        def __call__(self, x):
+            calls.append(getattr(x, "ndim", 1))
+            return orig(x)
+
+    eng._ops["m"] = CountingOp()
+    rng = np.random.default_rng(5)
+    xs = [rng.standard_normal(M.m).astype(np.float32) for _ in range(5)]
+    uids = [eng.submit("m", x) for x in xs]
+    out = eng.step()
+    assert set(out) == set(uids)
+    assert calls == [2], f"expected one batched SpMM call, got {calls}"
+    for uid, x in zip(uids, xs):
+        np.testing.assert_allclose(out[uid], A @ x, rtol=2e-4, atol=2e-4)
