@@ -8,6 +8,10 @@
   schedule_build      schedule/pack build time vs steady-state execute per
                       path (incl. colorful coloring quality) — also written
                       to results/BENCH_schedule.json
+  flat_vs_rect        flat-grid vs rectangular-grid kernel on skewed and
+                      uniform band matrices: pad_ratio, streamed_bytes,
+                      SpMV/SpMM time — written to results/BENCH_flat.json
+                      (the CI bench-smoke job asserts the skewed rows)
   roofline_summary    single-pod roofline table from results/dryrun (§Roofline)
 
 Output: ``name,us_per_call,derived`` CSV rows.
@@ -25,7 +29,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import csrc, schedule as schedule_mod, tuner
+from repro.core import csrc, paths, schedule as schedule_mod, tuner
 from repro.core.coloring import balance_stats, color_rows
 from repro.core.plan import ExecutionPlan
 from repro.kernels import ref, ops
@@ -35,6 +39,7 @@ from benchmarks.suite import matrices
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 PLAN_CACHE_PATH = os.path.join(ROOT, "results", "plans.json")
 BENCH_SCHEDULE_PATH = os.path.join(ROOT, "results", "BENCH_schedule.json")
+BENCH_FLAT_PATH = os.path.join(ROOT, "results", "BENCH_flat.json")
 
 
 # ---------------------------------------------------------------------------
@@ -214,6 +219,9 @@ def schedule_build(small: bool):
         bench_one(name, M, "segment", ExecutionPlan(path="segment"))
         if M.is_square:
             bench_one(name, M, "kernel", ExecutionPlan(path="kernel"))
+            if paths.flat_worth_measuring(stats):
+                # same skew gate the tuner's flat enumerator uses
+                bench_one(name, M, "flat", ExecutionPlan(path="flat"))
             if M.n <= 2048 and stats.bandwidth <= 64 and M.k > 0:
                 bench_one(name, M, "colorful",
                           ExecutionPlan(path="colorful"))
@@ -227,6 +235,64 @@ def schedule_build(small: bool):
     with open(BENCH_SCHEDULE_PATH, "w") as f:
         json.dump({"rows": records}, f, indent=1, sort_keys=True)
     print(f"# schedule_build: {len(records)} rows -> {BENCH_SCHEDULE_PATH}")
+
+
+# ---------------------------------------------------------------------------
+# Flat-grid vs rectangular-grid kernel (the paper's padding-waste argument,
+# measured: skewed row lengths defeat uniform ELL padding)
+# ---------------------------------------------------------------------------
+
+def flat_vs_rect(small: bool):
+    """Rect block-ELL grid vs flat grid per matrix: pad_ratio and
+    streamed_bytes (the bandwidth-bound cost the padding inflates) plus
+    SpMV and nrhs=8 SpMM times.  On the skewed FEM class the flat grid
+    must be strictly below on both pack metrics — the CI bench-smoke job
+    asserts exactly that from results/BENCH_flat.json."""
+    print("# flat_vs_rect: rectangular vs flat grid "
+          "(pad_ratio / streamed_bytes / time)")
+    rng = np.random.default_rng(0)
+    n = 1024 if small else 4096
+    cases = [
+        ("skew_fem", csrc.skewed_band(n, 48, 3, wide_frac=0.06, seed=1)),
+        ("uniform_band", csrc.fem_band(n, 8, seed=2, fill=1.0)),
+    ]
+    records = []
+    for name, M in cases:
+        x = jnp.asarray(rng.standard_normal(M.m).astype(np.float32))
+        X = jnp.asarray(rng.standard_normal((M.m, 8)).astype(np.float32))
+        per_path = {}
+        for path in ("kernel", "flat"):
+            plan = ExecutionPlan(path=path, tm=64)
+            try:
+                op = ops.SpmvOperator.from_plan(M, plan)
+            except ValueError:
+                continue                    # window over cap: skip matrix
+            t = time_fn(op, x)
+            t_mm = time_fn(op, X)
+            per_path[path] = {
+                "pad_ratio": round(float(op.pack.pad_ratio), 3),
+                "streamed_bytes": int(op.pack.streamed_bytes()),
+                "spmv_us": round(t * 1e6, 1),
+                "spmm8_us": round(t_mm * 1e6, 1),
+            }
+            row(f"flat/{name}/{path}", t * 1e6,
+                f"pad_ratio={op.pack.pad_ratio:.2f};"
+                f"streamed_bytes={op.pack.streamed_bytes()};"
+                f"spmm8_us={t_mm * 1e6:.1f}")
+        if {"kernel", "flat"} <= set(per_path):
+            rect, flat = per_path["kernel"], per_path["flat"]
+            records.append({
+                "matrix": name, "n": M.n, "nnz": M.nnz,
+                "rect": rect, "flat": flat,
+                "flat_wins_padding":
+                    bool(flat["pad_ratio"] < rect["pad_ratio"]
+                         and flat["streamed_bytes"]
+                         < rect["streamed_bytes"]),
+            })
+    os.makedirs(os.path.dirname(BENCH_FLAT_PATH), exist_ok=True)
+    with open(BENCH_FLAT_PATH, "w") as f:
+        json.dump({"rows": records}, f, indent=1, sort_keys=True)
+    print(f"# flat_vs_rect: {len(records)} rows -> {BENCH_FLAT_PATH}")
 
 
 # ---------------------------------------------------------------------------
@@ -295,7 +361,7 @@ def roofline_summary(small: bool):
 
 
 BENCHES = [fig5_sequential, table2_accumulation, fig6_colorful,
-           fig89_scaling, schedule_build, tuned_vs_default,
+           fig89_scaling, schedule_build, flat_vs_rect, tuned_vs_default,
            roofline_summary]
 
 

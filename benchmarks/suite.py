@@ -4,6 +4,9 @@ classes (the UF collection is not available offline):
   * FEM band matrices (the paper's angical/tracer/cube2m class);
   * 2-D Poisson (narrow-band quasi-diagonal, tmt_sym class);
   * extremely narrow band (torsion1/minsurfo/dixmaanl class);
+  * skewed band (wide-band boundary rows over a narrow bulk — the
+    row-length-skew class where the flat-grid kernel beats the
+    rectangular ELL padding, see benchmarks.run flat_vs_rect);
   * unstructured random pattern (cage15/F1 class — no band);
   * dense control (dense_1000).
 """
@@ -19,6 +22,8 @@ def matrices(small: bool = False):
         ("fem_band_w64", lambda: csrc.fem_band(8000 // scale, 64, seed=3)),
         ("fem_band_w64_sym", lambda: csrc.fem_band(
             8000 // scale, 64, seed=3, numeric_symmetric=True)),
+        ("skew_band_w48", lambda: csrc.skewed_band(
+            8000 // scale, 48, 3, seed=6)),
         ("random_nnz6", lambda: csrc.random_symmetric_pattern(
             8000 // scale, 6, seed=4)),
         ("dense_1000", lambda: csrc.dense_matrix(1000 // scale, seed=5)),

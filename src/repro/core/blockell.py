@@ -1,6 +1,6 @@
 """Block-ELL packing of a CSRC matrix for the Pallas TPU kernel.
 
-This is the hardware-adaptation layer (DESIGN.md §2).  The paper's per-thread
+This is the hardware-adaptation layer (docs/DESIGN.md §4).  The paper's per-thread
 row ranges become per-*tile* row ranges; the paper's "effective range" of a
 thread becomes the tile's **window** — a contiguous slice of x/y that covers
 every column the tile touches.  Windows are uniform-width and end-aligned to
@@ -176,4 +176,27 @@ def overlap_add(pack_: BlockEll, wins: jnp.ndarray) -> jnp.ndarray:
         start = (g + 1) * tm
         y = jax.lax.dynamic_update_slice(
             y, jax.lax.dynamic_slice(y, (start,), (ng * w,)) + flat, (start,))
+    return y[pack_.w_pad:pack_.w_pad + pack_.n]
+
+
+def overlap_add_mm(pack_, wins: jnp.ndarray) -> jnp.ndarray:
+    """Multi-RHS overlap-add: windows (NT, W, B) -> y (n, B).  Same group
+    decomposition as :func:`overlap_add`, per RHS column.  Works for any
+    pack exposing ``tm``/``w_pad``/``n_pad``/``n`` (rectangular BlockEll
+    and the flat-grid FlatBlockEll share it)."""
+    nt, w, nrhs = wins.shape
+    tm = pack_.tm
+    r = w // tm
+    assert w % tm == 0, "w_pad must be a multiple of tm for overlap-add"
+    y = jnp.zeros((pack_.w_pad + pack_.n_pad + w, nrhs), wins.dtype)
+    for g in range(r):
+        group = wins[g::r]
+        ng = group.shape[0]
+        if ng == 0:
+            continue
+        flat = group.reshape(ng * w, nrhs)
+        start = (g + 1) * tm
+        y = jax.lax.dynamic_update_slice(
+            y, jax.lax.dynamic_slice(y, (start, 0), (ng * w, nrhs)) + flat,
+            (start, 0))
     return y[pack_.w_pad:pack_.w_pad + pack_.n]

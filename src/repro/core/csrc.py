@@ -299,6 +299,33 @@ def fem_band(n: int, half_band: int, seed: int = 0, fill: float = 0.6,
                     pad_pattern=False)
 
 
+def skewed_band(n: int, wide_band: int, narrow_band: int = 3,
+                wide_frac: float = 0.06, seed: int = 0,
+                numeric_symmetric: bool = False, dtype=np.float32) -> CSRC:
+    """Band matrix with a *skewed* row-length distribution: the first
+    ``wide_frac·n`` rows carry a dense band of half-width ``wide_band``,
+    the rest a narrow band of ``narrow_band`` — the skewed-FEM shape where
+    a rectangular block-ELL grid pads every tile to the densest one and
+    the flat-grid kernel does not (docs/DESIGN.md §4)."""
+    rng = np.random.default_rng(seed)
+    n_wide = max(1, int(round(wide_frac * n)))
+    rows, cols, vals = [], [], []
+    for i in range(n):
+        width = wide_band if i < n_wide else narrow_band
+        for j in range(max(0, i - width), i):
+            vl = rng.standard_normal()
+            vu = vl if numeric_symmetric else rng.standard_normal()
+            rows += [i, j]
+            cols += [j, i]
+            vals += [vl, vu]
+    rows += list(range(n))
+    cols += list(range(n))
+    vals += list(2.0 * wide_band * np.ones(n))
+    return from_coo(np.asarray(rows), np.asarray(cols),
+                    np.asarray(vals, dtype=np.float64), n=n, dtype=dtype,
+                    pad_pattern=False)
+
+
 def random_symmetric_pattern(n: int, avg_nnz_per_row: int, seed: int = 0,
                              dtype=np.float32) -> CSRC:
     """Unstructured pattern (cage15/F1-like: no band structure)."""

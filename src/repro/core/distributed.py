@@ -4,7 +4,7 @@ mesh.
 The paper parallelizes over OpenMP threads on 2–4 cores; we parallelize over
 mesh shards (chips).  The race on the destination vector is identical — the
 scatter term writes rows owned by other shards — and each of the paper's
-accumulation strategies maps onto one collective pattern (DESIGN.md §2):
+accumulation strategies maps onto one collective pattern (docs/DESIGN.md §2):
 
   strategy='allreduce'       paper: local buffers + *all-in-one* accumulation.
       Every shard owns an nnz-balanced contiguous slot range, computes a
@@ -31,6 +31,14 @@ here contain no inline partition/pack construction and accept a cached
 solver restarts) are zero-precompute.  Every strategy accepts x of shape
 (n,) or (n, B): the multi-RHS product shares one collective per block.
 
+Shard-local compute is itself plan-driven: with a plan (or schedule) whose
+``path == 'flat'``, every strategy runs the flat-grid Pallas kernel per
+shard — allreduce/reduce_scatter over per-shard global-coordinate flat
+sub-packs (``schedule.build_flat_shards``), halo over local-coordinate
+per-shard packs (``schedule.build_flat_halo_layout``) — instead of the
+default segment-sum.  Skewed shards stop paying rectangular ELL padding
+inside the distributed product too.
+
 The colorful method (paper §3.2) is a shared-memory construct (conflict-free
 concurrent writes to one y); across distributed memories every write is a
 message regardless of conflicts, so it degenerates to one of the above.  It
@@ -39,6 +47,7 @@ single-chip, as in the paper.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Optional
 
 import jax
@@ -65,56 +74,124 @@ def _bc(v: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
 
 
 def _schedule(M: CSRC, p: int, accumulation: str,
-              schedule: Optional[SpmvSchedule], cache) -> SpmvSchedule:
+              schedule: Optional[SpmvSchedule], cache,
+              plan: Optional[ExecutionPlan] = None) -> SpmvSchedule:
     if schedule is not None:
         return schedule
-    plan = ExecutionPlan(path="segment", partition="nnz",
-                         accumulation=accumulation)
+    if plan is None:
+        plan = ExecutionPlan(path="segment", partition="nnz",
+                             accumulation=accumulation)
     return schedule_mod.schedule_for(M, plan, cache=cache, p=p)
+
+
+def _flat_local_fn(fs, n_local: int, interpret: bool):
+    """Shard-local flat-grid product: rebuild the shard's FlatBlockEll from
+    the shard_map-sliced stacked arrays and run the Pallas kernel (SpMV or
+    SpMM by x rank).  ``fs`` is a FlatShards or FlatHalo layout."""
+    from repro.kernels.csrc_spmv_flat import (FlatBlockEll, flat_spmm,
+                                              flat_spmv)
+
+    def local_y(tile, first, vals_l, vals_u, col, row, ad, x):
+        pk = FlatBlockEll(
+            n=n_local, tm=fs.tm, nt=fs.nt, w_pad=fs.w_pad,
+            total_steps=fs.steps, ks=fs.ks,
+            vals_l=vals_l[0], vals_u=vals_u[0], col_local=col[0],
+            row_in_win=row[0], ad=ad[0], tile_of_step=tile[0],
+            first_of_tile=first[0],
+            num_symmetric=fs.num_symmetric, pad_ratio=1.0)
+        if x.ndim == 2:
+            return flat_spmm(pk, x, interpret=interpret)
+        return flat_spmv(pk, x, interpret=interpret)
+
+    return local_y
+
+
+def _flat_shard_arrays(fs):
+    return (fs.tile_of_step, fs.first_of_tile, fs.vals_l, fs.vals_u,
+            fs.col_local, fs.row_in_win, fs.ad)
+
+
+def _flat_specs(axis: str):
+    """in_specs for the stacked flat arrays: leading shard axis only."""
+    return (P(axis, None), P(axis, None),
+            P(axis, None, None, None), P(axis, None, None, None),
+            P(axis, None, None, None), P(axis, None, None, None),
+            P(axis, None, None))
 
 
 def build_spmv_allreduce(M: CSRC, mesh: Mesh, axis: str = "rows",
                          scatter_output: bool = False,
                          schedule: Optional[SpmvSchedule] = None,
-                         cache=None) -> Callable:
+                         cache=None,
+                         plan: Optional[ExecutionPlan] = None,
+                         interpret: bool = True) -> Callable:
     """'allreduce' (all-in-one) and 'reduce_scatter' (per-buffer/interval)
     strategies.  x replicated, shape (n,) or (n, B); output replicated or
-    row-sharded."""
+    row-sharded.  With a 'flat' plan/schedule the shard-local partial runs
+    the flat-grid kernel over the shard's sub-pack instead of segment-sum."""
     p = mesh.shape[axis]
     acc = "reduce_scatter" if scatter_output else "allreduce"
-    sched = _schedule(M, p, acc, schedule, cache)
+    # the requested plan decides shard-local compute; the *schedule* only
+    # supplies the row partition here, so a flat plan builds its
+    # path-specific artifact per shard (build_flat_shards), never the
+    # unused full-matrix pack — schedule_for gets the path-free variant
+    req_plan = plan if plan is not None else (
+        schedule.plan if schedule is not None else None)
+    if plan is not None and schedule is None and plan.path != "segment":
+        plan = dataclasses.replace(plan, path="segment")
+    sched = _schedule(M, p, acc, schedule, cache, plan=plan)
     part = sched.partition
     if part.p != p:
         raise ValueError(
             f"schedule partition is {part.p}-way, mesh axis {axis} has {p}")
-    ss = schedule_mod.build_sharded_slots(M, part)
     n = M.n
     n_pad = _round_up(n, p)
+    flat = req_plan is not None and req_plan.path == "flat"
 
-    def local(row_idx, ja, al, au, ad_shard, x):
-        # shard-local partial: the paper's private y buffer
-        y = _bc(ad_shard[0], x) * x
-        y = y + jax.ops.segment_sum(_bc(al[0], x) * x[ja[0]], row_idx[0],
-                                    num_segments=n)
-        y = y + jax.ops.segment_sum(_bc(au[0], x) * x[row_idx[0]], ja[0],
-                                    num_segments=n)
+    def reduce_y(y, x_ndim):
         if scatter_output:
-            pad = ((0, n_pad - n),) + ((0, 0),) * (x.ndim - 1)
+            pad = ((0, n_pad - n),) + ((0, 0),) * (x_ndim - 1)
             y = jnp.pad(y, pad)
             return jax.lax.psum_scatter(y, axis, scatter_dimension=0,
                                         tiled=True)
         return jax.lax.psum(y, axis)
 
-    sharded = jax.device_put(
-        (ss.row_idx, ss.ja, ss.al, ss.au, ss.ad_shard),
-        jax.sharding.NamedSharding(mesh, P(axis, None)))
+    if flat:
+        fs = schedule_mod.build_flat_shards(M, part, req_plan)
+        local_y = _flat_local_fn(fs, M.n, interpret)
+
+        def local(tile, first, vals_l, vals_u, col, row, ad, x):
+            return reduce_y(local_y(tile, first, vals_l, vals_u, col,
+                                    row, ad, x), x.ndim)
+
+        sharded = jax.device_put(
+            _flat_shard_arrays(fs),
+            jax.sharding.NamedSharding(mesh, P(axis)))
+        in_specs = _flat_specs(axis) + (P(),)
+    else:
+        ss = schedule_mod.build_sharded_slots(M, part)
+
+        def local(row_idx, ja, al, au, ad_shard, x):
+            # shard-local partial: the paper's private y buffer
+            y = _bc(ad_shard[0], x) * x
+            y = y + jax.ops.segment_sum(_bc(al[0], x) * x[ja[0]],
+                                        row_idx[0], num_segments=n)
+            y = y + jax.ops.segment_sum(_bc(au[0], x) * x[row_idx[0]],
+                                        ja[0], num_segments=n)
+            return reduce_y(y, x.ndim)
+
+        sharded = jax.device_put(
+            (ss.row_idx, ss.ja, ss.al, ss.au, ss.ad_shard),
+            jax.sharding.NamedSharding(mesh, P(axis, None)))
+        in_specs = (P(axis, None),) * 5 + (P(),)
 
     # x is replicated (P() leaves trailing dims unsharded), so one
-    # shard_map serves both the (n,) and (n, B) forms
+    # shard_map serves both the (n,) and (n, B) forms.  check_rep is off
+    # on the flat path: shard_map has no replication rule for pallas_call.
     fn = shard_map(
-        local, mesh=mesh,
-        in_specs=(P(axis, None),) * 5 + (P(),),
-        out_specs=(P(axis) if scatter_output else P()))
+        local, mesh=mesh, in_specs=in_specs,
+        out_specs=(P(axis) if scatter_output else P()),
+        check_rep=not flat)
 
     @jax.jit
     def apply(x):
@@ -125,46 +202,80 @@ def build_spmv_allreduce(M: CSRC, mesh: Mesh, axis: str = "rows",
 
 def build_spmv_halo(M: CSRC, mesh: Mesh, axis: str = "rows",
                     schedule: Optional[SpmvSchedule] = None,
-                    cache=None) -> Callable:
+                    cache=None,
+                    plan: Optional[ExecutionPlan] = None,
+                    interpret: bool = True) -> Callable:
     """'halo' (effective) strategy: x and y row-sharded; only band-width
     windows cross shard boundaries (two collective_permutes).
 
-    The halo geometry depends on the mesh width, not on the plan, so it is
-    not part of the ``schedule`` artifact — ``build_halo_layout`` memoizes
-    it per (matrix, p) and repeated builds are zero-precompute.  The
-    ``schedule``/``cache`` parameters exist for factory-signature
-    uniformity with the other strategies."""
+    The halo geometry depends on the mesh width, not on the plan's
+    partition, so it is not part of the ``schedule`` artifact —
+    ``build_halo_layout`` / ``build_flat_halo_layout`` memoize it per
+    (matrix, p[, pack geometry]) and repeated builds are zero-precompute.
+    With a 'flat' plan/schedule each shard runs the flat-grid kernel over
+    its local-coordinate pack instead of the scatter-add form."""
     p = mesh.shape[axis]
-    lay = schedule_mod.build_halo_layout(M, p)
-    n, ns, h, n_pad = M.n, lay.ns, lay.h, lay.n_pad
+    plan = plan if plan is not None else (
+        schedule.plan if schedule is not None else None)
+    flat = plan is not None and plan.path == "flat"
 
-    def local(row_loc, col_rel, al, au, ad, x_own):
-        # x halo from the LEFT neighbor: its tail h rows
-        left_tail = jax.lax.ppermute(
-            x_own[-h:], axis, [(i, (i + 1) % p) for i in range(p)])
-        x_ext = jnp.concatenate([left_tail, x_own])      # rows [r0-h, r1)
-        row_loc, col_rel = row_loc[0], col_rel[0]
-        al, au, ad = al[0], au[0], ad[0]
-        y_ext = jnp.zeros((ns + h,) + x_own.shape[1:], jnp.float32)
-        y_ext = y_ext.at[h + row_loc].add(_bc(al, x_own) * x_ext[col_rel])
-        y_ext = y_ext.at[col_rel].add(_bc(au, x_own) * x_ext[h + row_loc])
-        y_ext = y_ext.at[h:].add(_bc(ad, x_own) * x_own)
-        # y halo to the LEFT neighbor (it owns rows [r0-h, r0))
-        from_right = jax.lax.ppermute(
-            y_ext[:h], axis, [(i, (i - 1) % p) for i in range(p)])
-        y_own = y_ext[h:].at[-h:].add(from_right)
-        return y_own
+    if flat:
+        lay = schedule_mod.build_flat_halo_layout(M, p, plan)
+        n, ns, h = M.n, lay.ns, lay.h
+        n_pad = ns * p
+        local_y = _flat_local_fn(lay, lay.n_local, interpret)
 
-    sharded = jax.device_put(
-        (lay.row_loc, lay.col_rel, lay.al, lay.au, lay.ad),
-        jax.sharding.NamedSharding(mesh, P(axis, None)))
+        def local(tile, first, vals_l, vals_u, col, row, ad, x_own):
+            # x halo from the LEFT neighbor: its tail h rows
+            left_tail = jax.lax.ppermute(
+                x_own[-h:], axis, [(i, (i + 1) % p) for i in range(p)])
+            x_ext = jnp.concatenate([left_tail, x_own])  # rows [r0-h, r1)
+            y_ext = local_y(tile, first, vals_l, vals_u, col, row, ad,
+                            x_ext)
+            # y halo to the LEFT neighbor (it owns rows [r0-h, r0))
+            from_right = jax.lax.ppermute(
+                y_ext[:h], axis, [(i, (i - 1) % p) for i in range(p)])
+            return y_ext[h:].at[-h:].add(from_right)
+
+        sharded = jax.device_put(
+            _flat_shard_arrays(lay),
+            jax.sharding.NamedSharding(mesh, P(axis)))
+        slot_specs = _flat_specs(axis)
+    else:
+        lay = schedule_mod.build_halo_layout(M, p)
+        n, ns, h, n_pad = M.n, lay.ns, lay.h, lay.n_pad
+
+        def local(row_loc, col_rel, al, au, ad, x_own):
+            # x halo from the LEFT neighbor: its tail h rows
+            left_tail = jax.lax.ppermute(
+                x_own[-h:], axis, [(i, (i + 1) % p) for i in range(p)])
+            x_ext = jnp.concatenate([left_tail, x_own])  # rows [r0-h, r1)
+            row_loc, col_rel = row_loc[0], col_rel[0]
+            al, au, ad = al[0], au[0], ad[0]
+            y_ext = jnp.zeros((ns + h,) + x_own.shape[1:], jnp.float32)
+            y_ext = y_ext.at[h + row_loc].add(
+                _bc(al, x_own) * x_ext[col_rel])
+            y_ext = y_ext.at[col_rel].add(
+                _bc(au, x_own) * x_ext[h + row_loc])
+            y_ext = y_ext.at[h:].add(_bc(ad, x_own) * x_own)
+            # y halo to the LEFT neighbor (it owns rows [r0-h, r0))
+            from_right = jax.lax.ppermute(
+                y_ext[:h], axis, [(i, (i - 1) % p) for i in range(p)])
+            return y_ext[h:].at[-h:].add(from_right)
+
+        sharded = jax.device_put(
+            (lay.row_loc, lay.col_rel, lay.al, lay.au, lay.ad),
+            jax.sharding.NamedSharding(mesh, P(axis, None)))
+        slot_specs = (P(axis, None),) * 5
 
     def make_fn(two_d: bool):
         x_spec = P(axis, None) if two_d else P(axis)
+        # check_rep off on the flat path: shard_map has no replication
+        # rule for pallas_call
         return shard_map(
             local, mesh=mesh,
-            in_specs=(P(axis, None),) * 5 + (x_spec,),
-            out_specs=x_spec)
+            in_specs=slot_specs + (x_spec,),
+            out_specs=x_spec, check_rep=not flat)
 
     fns = {False: make_fn(False), True: make_fn(True)}
 
@@ -188,26 +299,35 @@ STRATEGIES = ("allreduce", "reduce_scatter", "halo")
 def build_sharded_spmv(M: CSRC, mesh: Mesh, axis: str = "rows",
                        strategy: str = "auto",
                        schedule: Optional[SpmvSchedule] = None,
-                       cache=None) -> Callable:
+                       cache=None,
+                       plan: Optional[ExecutionPlan] = None,
+                       interpret: bool = True) -> Callable:
     """Factory: y_fn(x) computing A·x (or A·X for (n, B) blocks) across the
     mesh axis.  ``schedule``/``cache`` reuse the precomputed artifact; with
-    ``strategy='auto'`` a supplied schedule's plan decides."""
+    ``strategy='auto'`` a supplied schedule's (or ``plan``'s) accumulation
+    decides.  A plan/schedule with ``path='flat'`` makes every strategy run
+    the flat-grid kernel shard-locally."""
     p = mesh.shape[axis]
     if strategy == "auto":
         if schedule is not None:
             strategy = schedule.plan.accumulation
+        elif plan is not None:
+            strategy = plan.accumulation
         else:
             ns = -(-M.n // p)
             strategy = ("halo" if bandwidth(M) <= max(8, ns)
                         else "reduce_scatter")
     if strategy == "allreduce":
         return build_spmv_allreduce(M, mesh, axis, scatter_output=False,
-                                    schedule=schedule, cache=cache)
+                                    schedule=schedule, cache=cache,
+                                    plan=plan, interpret=interpret)
     if strategy == "reduce_scatter":
         return build_spmv_allreduce(M, mesh, axis, scatter_output=True,
-                                    schedule=schedule, cache=cache)
+                                    schedule=schedule, cache=cache,
+                                    plan=plan, interpret=interpret)
     if strategy == "halo":
-        return build_spmv_halo(M, mesh, axis, schedule=schedule, cache=cache)
+        return build_spmv_halo(M, mesh, axis, schedule=schedule,
+                               cache=cache, plan=plan, interpret=interpret)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 

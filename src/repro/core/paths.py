@@ -1,0 +1,439 @@
+"""The KernelPath registry: one registration per execution path.
+
+Before this layer, adding a kernel path meant editing five places in
+lock-step: the ``if path == ...`` chain in ``kernels/ops.py``, the
+validation tuple and feasibility function in ``core/plan.py``, the
+candidate enumeration in ``core/tuner.py``, and the artifact
+build/serialize branches in ``core/schedule.py``.  The registry collapses
+those into one record per path (docs/DESIGN.md §3):
+
+  name              the ``ExecutionPlan.path`` value
+  feasible          can this path execute a matrix with these shape stats
+                    at all (the tuner filters candidates through this —
+                    an infeasible plan is rejected up front, never
+                    mid-tune)
+  candidates        tuner candidate enumerator: the plans worth measuring
+                    for a matrix with the given statistics
+  artifact_fields   the plan fields the schedule artifact depends on
+                    (plans differing only elsewhere share one artifact)
+  build_artifact    packer / coloring builder -> SpmvSchedule field dict
+  save_artifact     npz serialization of those fields (meta, arrays)
+  load_artifact     the inverse; versioned via schedule.SCHEDULE_VERSION
+  make_spmv         executor factory, x of shape (m,)
+  make_spmm         executor factory, X of shape (m, r)
+
+``register_path`` wires the name into ``plan.PATHS`` (so ``ExecutionPlan``
+validation accepts it) and makes the path visible to the operator, the
+schedule layer, the tuner, and — through schedule's shard-layout builders —
+the distributed strategies.  Adding a path is one registration, not five
+edits; the built-in registrations below double as the template.
+
+Executors live in ``repro.kernels`` — imported lazily inside the factory
+functions so the core package keeps its import order (kernels imports
+core, never the reverse at module load).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Callable, Dict, Tuple
+
+from .plan import ExecutionPlan, kernel_window, register_path_name
+
+# Build probe: how many times each expensive structure precomputation ran.
+# Tests (and ops dashboards) diff these counters around a cache-hit path to
+# assert that no re-pack / re-partition / re-coloring happened.  (Re-exported
+# as ``schedule.BUILD_COUNTS`` — same Counter object.)
+BUILD_COUNTS = collections.Counter()
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateSpace:
+    """The degrees of freedom ``tuner.enumerate_plans`` sweeps, plus the
+    analytically-chosen distributed fields every candidate inherits."""
+    tms: Tuple[int, ...] = (32, 128)
+    k_steps_sublanes: Tuple[int, ...] = (8,)
+    w_cap: int = 4096
+    colorful_max_n: int = 2048
+    partition: str = "nnz"
+    accumulation: str = "allreduce"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPath:
+    """Everything the plan/schedule/tuner/operator stack needs to know
+    about one execution path."""
+    name: str
+    feasible: Callable[..., bool]
+    candidates: Callable[..., list]
+    artifact_fields: Callable[[ExecutionPlan], tuple]
+    build_artifact: Callable[..., dict]
+    save_artifact: Callable[..., Tuple[dict, dict]]
+    load_artifact: Callable[..., dict]
+    make_spmv: Callable[..., Callable]
+    make_spmm: Callable[..., Callable]
+
+
+_REGISTRY: Dict[str, KernelPath] = {}
+
+
+def register_path(entry: KernelPath) -> KernelPath:
+    """Register a path.  The name becomes a valid ``ExecutionPlan.path``,
+    the candidates join every tuner enumeration, the artifact builder is
+    called by ``schedule.build_schedule``, and the executors by
+    ``SpmvOperator``."""
+    _REGISTRY[entry.name] = entry
+    register_path_name(entry.name)
+    return entry
+
+
+def get_path(name: str) -> KernelPath:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"no kernel path {name!r} registered "
+                       f"(known: {sorted(_REGISTRY)})") from None
+
+
+def registered_paths() -> Tuple[KernelPath, ...]:
+    return tuple(_REGISTRY.values())
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+def _always_feasible(plan, *, n, m, bandwidth) -> bool:
+    return True
+
+
+def _square_feasible(plan, *, n, m, bandwidth) -> bool:
+    return n == m
+
+
+def _windowed_feasible(plan, *, n, m, bandwidth) -> bool:
+    """Square matrix whose padded window fits under the plan's cap — the
+    bandwidth gate shared by the rectangular-grid and flat-grid kernels."""
+    return n == m and kernel_window(plan.tm, bandwidth) <= plan.w_cap
+
+
+def _no_artifact(M, plan, coloring=None) -> dict:
+    return {}
+
+
+def _save_nothing(sched):
+    return {}, {}
+
+
+def _load_nothing(meta, z) -> dict:
+    return {}
+
+
+def _empty_fields(plan) -> tuple:
+    return ()
+
+
+def _windowed_fields(plan) -> tuple:
+    return (plan.tm, plan.w_cap, plan.k_step_sublanes)
+
+
+def _windowed_candidates(path, stats, space):
+    out = []
+    if stats.n != stats.m:
+        return out
+    for tm in space.tms:
+        if kernel_window(tm, stats.bandwidth) > space.w_cap:
+            continue
+        for ks in space.k_steps_sublanes:
+            out.append(ExecutionPlan(
+                path=path, tm=tm, w_cap=space.w_cap, k_step_sublanes=ks,
+                partition=space.partition, accumulation=space.accumulation))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 'segment' — segment-sum jnp path (any matrix, incl. the rectangular tail)
+# ---------------------------------------------------------------------------
+
+def _segment_candidates(stats, space):
+    return [ExecutionPlan(path="segment", w_cap=space.w_cap,
+                          partition=space.partition,
+                          accumulation=space.accumulation)]
+
+
+def _segment_make_spmv(M, schedule, plan, *, interpret=True, coloring=None):
+    from repro.kernels import ref
+    return lambda x: ref.csrc_spmv(M, x)
+
+
+def _segment_make_spmm(M, schedule, plan, *, interpret=True, coloring=None):
+    from repro.kernels import ref
+    return lambda X: ref.csrc_spmm(M, X)
+
+
+register_path(KernelPath(
+    name="segment",
+    feasible=_always_feasible,
+    candidates=_segment_candidates,
+    artifact_fields=_empty_fields,
+    build_artifact=_no_artifact,
+    save_artifact=_save_nothing,
+    load_artifact=_load_nothing,
+    make_spmv=_segment_make_spmv,
+    make_spmm=_segment_make_spmm,
+))
+
+
+# ---------------------------------------------------------------------------
+# 'kernel' — rectangular-grid block-ELL Pallas kernel (banded matrices)
+# ---------------------------------------------------------------------------
+
+def _kernel_build(M, plan, coloring=None) -> dict:
+    from . import blockell
+    if not M.is_square:
+        raise ValueError(
+            "kernel path packs the square CSRC part only; "
+            "use 'segment' for rectangular matrices")
+    BUILD_COUNTS["pack"] += 1
+    return {"pack": blockell.pack(M, tm=plan.tm, k_step=plan.k_step,
+                                  w_cap=plan.w_cap)}
+
+
+def _kernel_save(sched):
+    import numpy as np
+    pk = sched.pack
+    meta = {"pack": {"n": pk.n, "tm": pk.tm, "nt": pk.nt,
+                     "w_pad": pk.w_pad, "s": pk.s,
+                     "num_symmetric": bool(pk.num_symmetric),
+                     "pad_ratio": pk.pad_ratio}}
+    arrays = dict(
+        pack_vals_l=np.asarray(pk.vals_l),
+        pack_vals_u=np.asarray(pk.vals_u),
+        pack_col_local=np.asarray(pk.col_local),
+        pack_row_in_win=np.asarray(pk.row_in_win),
+        pack_ad=np.asarray(pk.ad),
+    )
+    return meta, arrays
+
+
+def _kernel_load(meta, z) -> dict:
+    import jax.numpy as jnp
+    from .blockell import BlockEll
+    pm = meta["pack"]
+    return {"pack": BlockEll(
+        n=pm["n"], tm=pm["tm"], nt=pm["nt"], w_pad=pm["w_pad"], s=pm["s"],
+        vals_l=jnp.asarray(z["pack_vals_l"]),
+        vals_u=jnp.asarray(z["pack_vals_u"]),
+        col_local=jnp.asarray(z["pack_col_local"]),
+        row_in_win=jnp.asarray(z["pack_row_in_win"]),
+        ad=jnp.asarray(z["pack_ad"]),
+        num_symmetric=bool(pm["num_symmetric"]),
+        pad_ratio=float(pm["pad_ratio"]),
+    )}
+
+
+def _kernel_make_spmv(M, schedule, plan, *, interpret=True, coloring=None):
+    from repro.kernels import csrc_spmv as kernel_mod
+    return functools.partial(kernel_mod.blockell_spmv, schedule.pack,
+                             interpret=interpret,
+                             k_step_sublanes=plan.k_step_sublanes)
+
+
+def _kernel_make_spmm(M, schedule, plan, *, interpret=True, coloring=None):
+    from repro.kernels import csrc_spmm as kernel_mm_mod
+    return functools.partial(kernel_mm_mod.blockell_spmm, schedule.pack,
+                             interpret=interpret,
+                             k_step_sublanes=plan.k_step_sublanes)
+
+
+register_path(KernelPath(
+    name="kernel",
+    feasible=_windowed_feasible,
+    candidates=functools.partial(_windowed_candidates, "kernel"),
+    artifact_fields=_windowed_fields,
+    build_artifact=_kernel_build,
+    save_artifact=_kernel_save,
+    load_artifact=_kernel_load,
+    make_spmv=_kernel_make_spmv,
+    make_spmm=_kernel_make_spmm,
+))
+
+
+# ---------------------------------------------------------------------------
+# 'colorful' — the paper's §3.2 color-by-color permutation writes
+# ---------------------------------------------------------------------------
+
+def _colorful_candidates(stats, space):
+    if (stats.n != stats.m or stats.n > space.colorful_max_n
+            or stats.k == 0):
+        return []
+    return [ExecutionPlan(path="colorful", w_cap=space.w_cap,
+                          partition=space.partition,
+                          accumulation=space.accumulation)]
+
+
+def _colorful_build(M, plan, coloring=None) -> dict:
+    from .coloring import color_rows
+    from . import schedule as schedule_mod
+    if not M.is_square:
+        raise ValueError(
+            "colorful path covers the square CSRC part only; "
+            "use 'segment' for rectangular matrices")
+    if coloring is None:
+        BUILD_COUNTS["coloring"] += 1
+        col = color_rows(M)
+    else:
+        col = coloring
+    slots, ptr = schedule_mod.color_slot_batches(M, col)
+    return {"coloring": col, "color_slots": slots, "color_slot_ptr": ptr}
+
+
+def _colorful_save(sched):
+    import numpy as np
+    col = sched.coloring
+    meta = {"num_colors": int(col.num_colors)}
+    arrays = dict(
+        color_of_row=np.asarray(col.color_of_row),
+        rows_by_color=np.asarray(col.rows_by_color),
+        color_ptr=np.asarray(col.color_ptr),
+        color_slots=np.asarray(sched.color_slots),
+        color_slot_ptr=np.asarray(sched.color_slot_ptr),
+    )
+    return meta, arrays
+
+
+def _colorful_load(meta, z) -> dict:
+    from .coloring import Coloring
+    return {
+        "coloring": Coloring(color_of_row=z["color_of_row"],
+                             num_colors=int(meta["num_colors"]),
+                             rows_by_color=z["rows_by_color"],
+                             color_ptr=z["color_ptr"]),
+        "color_slots": z["color_slots"],
+        "color_slot_ptr": z["color_slot_ptr"],
+    }
+
+
+def _colorful_make(M, schedule, plan, *, interpret=True, coloring=None):
+    from . import schedule as schedule_mod
+    slots, ptr = schedule.color_slots, schedule.color_slot_ptr
+    if coloring is not None and coloring is not schedule.coloring:
+        slots, ptr = schedule_mod.color_slot_batches(M, coloring)
+    elif slots is None:
+        slots, ptr = schedule_mod.color_slot_batches(M, schedule.coloring)
+    return functools.partial(schedule_mod.colorful_apply, M,
+                             color_slots=slots, color_slot_ptr=ptr)
+
+
+register_path(KernelPath(
+    name="colorful",
+    feasible=_square_feasible,
+    candidates=_colorful_candidates,
+    artifact_fields=_empty_fields,
+    build_artifact=_colorful_build,
+    save_artifact=_colorful_save,
+    load_artifact=_colorful_load,
+    make_spmv=_colorful_make,
+    make_spmm=_colorful_make,       # colorful_apply handles (m,) and (m, r)
+))
+
+
+# ---------------------------------------------------------------------------
+# 'flat' — flat-grid block-ELL Pallas kernel (skewed row-length matrices)
+# ---------------------------------------------------------------------------
+
+# Candidate gate: coefficient of variation of nnz-per-row above which the
+# rectangular grid's per-tile padding is expected to waste bandwidth and
+# the flat grid becomes worth measuring.  (Feasibility — can the matrix be
+# tiled at all — is _windowed_feasible, identical to the rectangular
+# kernel; the skew statistic only gates *enumeration*.)
+FLAT_SKEW_MIN = 0.25
+
+
+def flat_worth_measuring(stats) -> bool:
+    """The flat enumerator's skew gate, shared with benchmarks: is the
+    nnz-per-row spread large enough that per-tile-exact packing could
+    beat the rectangular grid?"""
+    return stats.nnz_row_dev > FLAT_SKEW_MIN * max(stats.nnz_row_mean, 1.0)
+
+
+def _flat_candidates(stats, space):
+    if not flat_worth_measuring(stats):
+        return []
+    return _windowed_candidates("flat", stats, space)
+
+
+def _flat_build(M, plan, coloring=None) -> dict:
+    from repro.kernels import csrc_spmv_flat as flat_mod
+    if not M.is_square:
+        raise ValueError(
+            "flat path packs the square CSRC part only; "
+            "use 'segment' for rectangular matrices")
+    BUILD_COUNTS["flat_pack"] += 1
+    return {"flat_pack": flat_mod.pack_flat(
+        M, tm=plan.tm, ks=plan.k_step_sublanes, w_cap=plan.w_cap)}
+
+
+def _flat_save(sched):
+    import numpy as np
+    pk = sched.flat_pack
+    meta = {"flat_pack": {"n": pk.n, "tm": pk.tm, "nt": pk.nt,
+                          "w_pad": pk.w_pad,
+                          "total_steps": pk.total_steps, "ks": pk.ks,
+                          "num_symmetric": bool(pk.num_symmetric),
+                          "pad_ratio": pk.pad_ratio}}
+    arrays = dict(
+        flat_vals_l=np.asarray(pk.vals_l),
+        flat_vals_u=np.asarray(pk.vals_u),
+        flat_col_local=np.asarray(pk.col_local),
+        flat_row_in_win=np.asarray(pk.row_in_win),
+        flat_ad=np.asarray(pk.ad),
+        flat_tile_of_step=np.asarray(pk.tile_of_step),
+        flat_first_of_tile=np.asarray(pk.first_of_tile),
+    )
+    return meta, arrays
+
+
+def _flat_load(meta, z) -> dict:
+    import jax.numpy as jnp
+    from repro.kernels.csrc_spmv_flat import FlatBlockEll
+    pm = meta["flat_pack"]
+    return {"flat_pack": FlatBlockEll(
+        n=pm["n"], tm=pm["tm"], nt=pm["nt"], w_pad=pm["w_pad"],
+        total_steps=pm["total_steps"], ks=pm["ks"],
+        vals_l=jnp.asarray(z["flat_vals_l"]),
+        vals_u=jnp.asarray(z["flat_vals_u"]),
+        col_local=jnp.asarray(z["flat_col_local"]),
+        row_in_win=jnp.asarray(z["flat_row_in_win"]),
+        ad=jnp.asarray(z["flat_ad"]),
+        tile_of_step=jnp.asarray(z["flat_tile_of_step"]),
+        first_of_tile=jnp.asarray(z["flat_first_of_tile"]),
+        num_symmetric=bool(pm["num_symmetric"]),
+        pad_ratio=float(pm["pad_ratio"]),
+    )}
+
+
+def _flat_make_spmv(M, schedule, plan, *, interpret=True, coloring=None):
+    from repro.kernels import csrc_spmv_flat as flat_mod
+    return functools.partial(flat_mod.flat_spmv, schedule.flat_pack,
+                             interpret=interpret)
+
+
+def _flat_make_spmm(M, schedule, plan, *, interpret=True, coloring=None):
+    from repro.kernels import csrc_spmv_flat as flat_mod
+    return functools.partial(flat_mod.flat_spmm, schedule.flat_pack,
+                             interpret=interpret)
+
+
+register_path(KernelPath(
+    name="flat",
+    feasible=_windowed_feasible,
+    candidates=_flat_candidates,
+    artifact_fields=_windowed_fields,
+    build_artifact=_flat_build,
+    save_artifact=_flat_save,
+    load_artifact=_flat_load,
+    make_spmv=_flat_make_spmv,
+    make_spmm=_flat_make_spmm,
+))

@@ -8,10 +8,17 @@ structure, and numeric symmetry decide it per input (§4, Figs. 5–9).
 cached, and shipped between processes instead of being hard-coded in
 ``SpmvOperator``:
 
-  path               single-device compute strategy
-                       'kernel'   block-ELL Pallas kernel (banded matrices)
+  path               single-device compute strategy, one of the names in
+                     the KernelPath registry (core/paths.py):
+                       'kernel'   rectangular-grid block-ELL Pallas kernel
+                                  (banded matrices)
+                       'flat'     flat-grid block-ELL Pallas kernel (banded
+                                  matrices with skewed row lengths — no
+                                  cross-tile ELL padding)
                        'segment'  segment-sum jnp path (any matrix)
                        'colorful' color-by-color permutation writes (§3.2)
+                     New kernels add a name by registering a KernelPath —
+                     not by editing this module.
   tm                 block-ELL row-tile height (kernel path)
   w_cap              max window width the kernel will accept before the
                      pack is declared infeasible (bandwidth gate)
@@ -37,7 +44,18 @@ import dataclasses
 import json
 from typing import Dict
 
-PATHS = ("kernel", "segment", "colorful")
+# Valid ExecutionPlan.path values.  Seeded with the names every install
+# ships; paths.register_path() appends new ones at registration time, so a
+# new kernel path never edits this module.
+PATHS = ["kernel", "segment", "colorful"]
+
+
+def register_path_name(name: str) -> None:
+    """Called by paths.register_path: makes ``name`` a valid plan path."""
+    if name not in PATHS:
+        PATHS.append(name)
+
+
 PARTITIONS = ("nnz", "count")
 ACCUMULATIONS = ("allreduce", "reduce_scatter", "halo")
 
@@ -62,7 +80,13 @@ class ExecutionPlan:
 
     def __post_init__(self):
         if self.path not in PATHS:
-            raise ValueError(f"path {self.path!r} not in {PATHS}")
+            # a registered-but-not-yet-imported path (e.g. 'flat' before
+            # anything touched the registry): loading core.paths runs the
+            # built-in registrations, which extend PATHS
+            from . import paths as _paths  # noqa: F401
+            if self.path not in PATHS:
+                raise ValueError(
+                    f"path {self.path!r} not in {tuple(PATHS)}")
         if self.partition not in PARTITIONS:
             raise ValueError(
                 f"partition {self.partition!r} not in {PARTITIONS}")
@@ -84,8 +108,8 @@ class ExecutionPlan:
     def key(self) -> str:
         """Stable short identifier (used in cache timing tables and CSV)."""
         rhs = f":r{self.nrhs}" if self.nrhs != 1 else ""
-        if self.path == "kernel":
-            return (f"kernel:tm{self.tm}:ks{self.k_step_sublanes}"
+        if self.path in ("kernel", "flat"):
+            return (f"{self.path}:tm{self.tm}:ks{self.k_step_sublanes}"
                     f":{self.partition}:{self.accumulation}{rhs}")
         return f"{self.path}:{self.partition}:{self.accumulation}{rhs}"
 
@@ -114,18 +138,17 @@ def kernel_window(tm: int, bandwidth: int) -> int:
 def feasible(plan: ExecutionPlan, *, n: int, m: int, bandwidth: int) -> bool:
     """Can this plan execute the matrix at all?
 
+    Delegates to the plan path's registry entry (core/paths.py):
+
     * 'segment' handles everything, including the rectangular tail;
-    * 'kernel' needs a square matrix whose window fits under w_cap;
+    * 'kernel' / 'flat' need a square matrix whose window fits under w_cap
+      (the bandwidth gate — the packer cannot tile anything wider);
     * 'colorful' needs a square matrix (the color loop covers only the
       structurally-symmetric part).
     """
-    if plan.path == "segment":
-        return True
-    if n != m:
-        return False
-    if plan.path == "kernel":
-        return kernel_window(plan.tm, bandwidth) <= plan.w_cap
-    return True                  # colorful
+    from . import paths as paths_mod
+    return paths_mod.get_path(plan.path).feasible(
+        plan, n=n, m=m, bandwidth=bandwidth)
 
 
 DEFAULT_PLAN = ExecutionPlan()

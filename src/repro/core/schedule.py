@@ -23,6 +23,13 @@ partition width) and stored next to the plan in the tuner's
 known matrix performs zero pack/partition/coloring work
 (``BUILD_COUNTS`` is the probe tests assert that with).
 
+Path-specific artifact contents (the block-ELL pack, the flat-grid pack,
+the coloring batches) are built and serialized by the path's
+:class:`~repro.core.paths.KernelPath` registry entry — this module owns
+the common pieces (partition, halo, fingerprinting, cache plumbing) and
+delegates the rest, so a newly registered path is schedule-cached with
+zero edits here.
+
 Serialization is npz + a JSON meta record (``save_npz`` / ``load_npz``);
 ``SCHEDULE_VERSION`` gates the on-disk layout — bumping it (e.g. on a pack
 format change) invalidates every stored schedule, which is then silently
@@ -30,7 +37,6 @@ rebuilt on the next request.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import hashlib
 import json
@@ -40,20 +46,22 @@ from typing import Optional
 import numpy as np
 import jax.numpy as jnp
 
-from . import blockell
+from . import paths as paths_mod
 from .blockell import BlockEll
-from .coloring import Coloring, color_rows
+from .coloring import Coloring
 from .csrc import CSRC, row_of_slot
 from .partition import (RowPartition, halo_widths, partition_rows_by_count,
                         partition_rows_by_nnz)
+# the build probe lives with the registry (path builders count into it);
+# re-exported here because consumers/tests address it as
+# ``schedule.BUILD_COUNTS`` — same Counter object.
+from .paths import BUILD_COUNTS
 from .plan import ExecutionPlan
 
-SCHEDULE_VERSION = 1
-
-# Build probe: how many times each expensive structure precomputation ran.
-# Tests (and ops dashboards) diff these counters around a cache-hit path to
-# assert that no re-pack / re-partition / re-coloring happened.
-BUILD_COUNTS = collections.Counter()
+# version 2: path-specific artifact sections are registry-serialized; adds
+# the flat-grid pack ('flat' path).  Version-1 files load as misses and
+# are rebuilt transparently.
+SCHEDULE_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,19 +76,24 @@ class SpmvSchedule:
     p: int                      # partition width the row partition was built for
     partition: RowPartition
     halo: np.ndarray            # (p,) halo width per part (effective ranges)
-    pack: Optional[BlockEll]            # kernel path only
-    coloring: Optional[Coloring]        # colorful path only
+    # --- path-specific artifact fields (built/serialized by the path's
+    # KernelPath registry entry; exactly the fields its build_artifact
+    # returns are non-None) ---
+    pack: Optional[BlockEll] = None          # 'kernel' path
+    coloring: Optional[Coloring] = None      # 'colorful' path
     # device-ready color batches: slot ids grouped by color, concatenated;
     # color c owns color_slots[color_slot_ptr[c]:color_slot_ptr[c+1]].
-    color_slots: Optional[np.ndarray]
-    color_slot_ptr: Optional[np.ndarray]
+    color_slots: Optional[np.ndarray] = None
+    color_slot_ptr: Optional[np.ndarray] = None
+    flat_pack: Optional[object] = None       # 'flat' path (FlatBlockEll)
 
     def key(self) -> str:
         return schedule_key(self.fingerprint, self.value_digest, self.plan,
                             self.p)
 
     # ------------------------------------------------------------------
-    # Serialization (npz arrays + JSON meta)
+    # Serialization (npz arrays + JSON meta); the path-specific section is
+    # delegated to the registry entry's save_artifact/load_artifact
     # ------------------------------------------------------------------
 
     def save_npz(self, path: str):
@@ -98,29 +111,10 @@ class SpmvSchedule:
             "part_nnz": np.asarray(self.partition.nnz_per_part),
             "halo": np.asarray(self.halo),
         }
-        if self.pack is not None:
-            pk = self.pack
-            meta["pack"] = {"n": pk.n, "tm": pk.tm, "nt": pk.nt,
-                            "w_pad": pk.w_pad, "s": pk.s,
-                            "num_symmetric": bool(pk.num_symmetric),
-                            "pad_ratio": pk.pad_ratio}
-            arrays.update(
-                pack_vals_l=np.asarray(pk.vals_l),
-                pack_vals_u=np.asarray(pk.vals_u),
-                pack_col_local=np.asarray(pk.col_local),
-                pack_row_in_win=np.asarray(pk.row_in_win),
-                pack_ad=np.asarray(pk.ad),
-            )
-        if self.coloring is not None:
-            col = self.coloring
-            meta["num_colors"] = int(col.num_colors)
-            arrays.update(
-                color_of_row=np.asarray(col.color_of_row),
-                rows_by_color=np.asarray(col.rows_by_color),
-                color_ptr=np.asarray(col.color_ptr),
-                color_slots=np.asarray(self.color_slots),
-                color_slot_ptr=np.asarray(self.color_slot_ptr),
-            )
+        entry = paths_mod.get_path(self.plan.path)
+        path_meta, path_arrays = entry.save_artifact(self)
+        meta.update(path_meta)
+        arrays.update(path_arrays)
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         tmp = path + ".tmp.npz"
         with open(tmp, "wb") as f:
@@ -142,35 +136,12 @@ class SpmvSchedule:
                                 eff_lo=z["part_eff_lo"],
                                 eff_hi=z["part_eff_hi"],
                                 nnz_per_part=z["part_nnz"])
-            pack = None
-            if "pack" in meta:
-                pm = meta["pack"]
-                pack = BlockEll(
-                    n=pm["n"], tm=pm["tm"], nt=pm["nt"], w_pad=pm["w_pad"],
-                    s=pm["s"],
-                    vals_l=jnp.asarray(z["pack_vals_l"]),
-                    vals_u=jnp.asarray(z["pack_vals_u"]),
-                    col_local=jnp.asarray(z["pack_col_local"]),
-                    row_in_win=jnp.asarray(z["pack_row_in_win"]),
-                    ad=jnp.asarray(z["pack_ad"]),
-                    num_symmetric=bool(pm["num_symmetric"]),
-                    pad_ratio=float(pm["pad_ratio"]),
-                )
-            coloring = color_slots = color_slot_ptr = None
-            if "num_colors" in meta:
-                coloring = Coloring(
-                    color_of_row=z["color_of_row"],
-                    num_colors=int(meta["num_colors"]),
-                    rows_by_color=z["rows_by_color"],
-                    color_ptr=z["color_ptr"])
-                color_slots = z["color_slots"]
-                color_slot_ptr = z["color_slot_ptr"]
+            entry = paths_mod.get_path(plan.path)
+            fields = entry.load_artifact(meta, z)
             return cls(fingerprint=meta["fingerprint"],
                        value_digest=meta["value_digest"], plan=plan,
                        n=meta["n"], m=meta["m"], p=meta["p"],
-                       partition=part, halo=z["halo"], pack=pack,
-                       coloring=coloring, color_slots=color_slots,
-                       color_slot_ptr=color_slot_ptr)
+                       partition=part, halo=z["halo"], **fields)
 
 
 def value_digest(M: CSRC) -> str:
@@ -192,11 +163,11 @@ def value_digest(M: CSRC) -> str:
 def plan_artifact_fields(plan: ExecutionPlan) -> tuple:
     """The plan fields the schedule artifact actually depends on.  Two plans
     differing only in accumulation strategy or tuned RHS width (nrhs) share
-    one artifact — the pack/partition/coloring are identical."""
-    fields = [plan.path, plan.partition]
-    if plan.path == "kernel":
-        fields += [plan.tm, plan.w_cap, plan.k_step_sublanes]
-    return tuple(fields)
+    one artifact — the pack/partition/coloring are identical.  The
+    path-specific tail comes from the registry entry ('kernel'/'flat' pin
+    their tile/window geometry; 'segment'/'colorful' add nothing)."""
+    entry = paths_mod.get_path(plan.path)
+    return (plan.path, plan.partition) + tuple(entry.artifact_fields(plan))
 
 
 def schedule_key(fingerprint: str, digest: str, plan: ExecutionPlan,
@@ -228,20 +199,18 @@ def build_schedule(M: CSRC, plan: ExecutionPlan, p: int = 8,
                    coloring: Optional[Coloring] = None) -> SpmvSchedule:
     """Build the full schedule artifact for (matrix, plan).
 
-    Raises ValueError exactly where strict plan execution must fail:
-    a 'kernel' plan whose window exceeds ``plan.w_cap`` (bandwidth gate)
-    and 'kernel'/'colorful' plans on rectangular matrices.
+    The path-specific artifact (pack / flat pack / coloring batches) comes
+    from the plan path's registry entry; it raises ValueError exactly where
+    strict plan execution must fail: a windowed ('kernel'/'flat') plan
+    whose window exceeds ``plan.w_cap`` (bandwidth gate) and square-only
+    plans on rectangular matrices.
     """
     from .tuner import fingerprint as _fingerprint   # local: avoid cycle
 
-    if plan.path == "kernel" and not M.is_square:
-        raise ValueError(
-            "kernel path packs the square CSRC part only; "
-            "use 'segment' for rectangular matrices")
-    if plan.path == "colorful" and not M.is_square:
-        raise ValueError(
-            "colorful path covers the square CSRC part only; "
-            "use 'segment' for rectangular matrices")
+    entry = paths_mod.get_path(plan.path)
+    # build the path artifact first: infeasible plans raise before any
+    # build counter moves
+    fields = entry.build_artifact(M, plan, coloring=coloring)
 
     BUILD_COUNTS["schedule"] += 1
     BUILD_COUNTS["partition"] += 1
@@ -252,26 +221,9 @@ def build_schedule(M: CSRC, plan: ExecutionPlan, p: int = 8,
         part = partition_rows_by_nnz(M, p)
     halo = np.asarray(halo_widths(part), dtype=np.int64)
 
-    pack = None
-    if plan.path == "kernel":
-        BUILD_COUNTS["pack"] += 1
-        pack = blockell.pack(M, tm=plan.tm, k_step=plan.k_step,
-                             w_cap=plan.w_cap)
-
-    col = color_slots = color_slot_ptr = None
-    if plan.path == "colorful":
-        if coloring is None:
-            BUILD_COUNTS["coloring"] += 1
-            col = color_rows(M)
-        else:
-            col = coloring
-        color_slots, color_slot_ptr = color_slot_batches(M, col)
-
     return SpmvSchedule(
         fingerprint=_fingerprint(M), value_digest=value_digest(M),
-        plan=plan, n=M.n, m=M.m, p=p, partition=part, halo=halo,
-        pack=pack, coloring=col, color_slots=color_slots,
-        color_slot_ptr=color_slot_ptr)
+        plan=plan, n=M.n, m=M.m, p=p, partition=part, halo=halo, **fields)
 
 
 def schedule_for(M: CSRC, plan: ExecutionPlan, cache=None, p: int = 8,
@@ -433,6 +385,48 @@ def build_halo_layout(M: CSRC, p: int) -> HaloLayout:
                      al=jnp.asarray(al_s), au=jnp.asarray(au_s),
                      ad=jnp.asarray(ad_pad.reshape(p, ns)))
     _HALO_LAYOUT_MEMO[memo_key] = out
+    return out
+
+
+# Shard-local flat-grid layouts (plan.path == 'flat' under a distributed
+# strategy): per-shard flat packs, memoized like the other layouts so
+# repeated builder calls are zero-precompute.
+_FLAT_SHARDS_MEMO: dict = {}
+_FLAT_HALO_MEMO: dict = {}
+
+
+def build_flat_shards(M: CSRC, part: RowPartition, plan: ExecutionPlan):
+    """Per-shard flat sub-packs over the schedule's row partition (global
+    coordinates; allreduce / reduce_scatter strategies).  Memoized per
+    exact matrix + partition boundaries + pack geometry."""
+    from repro.kernels.csrc_spmv_flat import pack_flat_shards
+    memo_key = (value_digest(M), np.asarray(part.starts).tobytes(),
+                plan.tm, plan.k_step_sublanes, plan.w_cap)
+    hit = _FLAT_SHARDS_MEMO.get(memo_key)
+    if hit is not None:
+        return hit
+    BUILD_COUNTS["flat_shards"] += 1
+    out = pack_flat_shards(M, part.starts, tm=plan.tm,
+                           ks=plan.k_step_sublanes, w_cap=plan.w_cap)
+    _FLAT_SHARDS_MEMO[memo_key] = out
+    return out
+
+
+def build_flat_halo_layout(M: CSRC, p: int, plan: ExecutionPlan):
+    """Per-shard local-coordinate flat packs for the halo strategy.
+    Raises ValueError when the band does not fit inside one shard (same
+    gate as :func:`build_halo_layout`).  Memoized per exact matrix +
+    shard count + pack geometry."""
+    from repro.kernels.csrc_spmv_flat import pack_flat_halo
+    memo_key = (value_digest(M), p, plan.tm, plan.k_step_sublanes,
+                plan.w_cap)
+    hit = _FLAT_HALO_MEMO.get(memo_key)
+    if hit is not None:
+        return hit
+    BUILD_COUNTS["flat_halo"] += 1
+    out = pack_flat_halo(M, p, tm=plan.tm, ks=plan.k_step_sublanes,
+                         w_cap=plan.w_cap)
+    _FLAT_HALO_MEMO[memo_key] = out
     return out
 
 

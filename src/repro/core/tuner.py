@@ -13,9 +13,11 @@ Pieces:
                              numeric symmetry)
   fingerprint                stable string key of a matrix *class*
                              (n, m, k, bandwidth, nnz-histogram digest)
-  enumerate_plans            feasible candidates from stats; extensible —
-                             new kernels register a candidate source with
-                             @register_candidate_source
+  enumerate_plans            feasible candidates from stats, one
+                             enumerator per registered KernelPath
+                             (core/paths.py) — a new kernel path joins
+                             every tuning run by registering; the legacy
+                             @register_candidate_source hook also works
   heuristic_plan             measurement-free default (mirrors the old
                              static auto path, plus distributed strategy
                              selection from the collective-bytes model)
@@ -39,6 +41,7 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from . import paths as paths_mod
 from .csrc import CSRC, bandwidth as csrc_bandwidth, nnz_per_row
 from .plan import ExecutionPlan, feasible, kernel_window
 
@@ -139,35 +142,37 @@ def enumerate_plans(stats: MatrixStats,
                     nrhs_options=(1,)) -> List[ExecutionPlan]:
     """All feasible candidate plans for a matrix with these statistics.
 
-    The segment path is always a candidate.  Kernel plans are emitted per
-    (tm, k_step) whose window fits under ``w_cap``.  Colorful is emitted
-    for square matrices small enough that the O(n·deg²) greedy coloring is
-    worth attempting (the paper benchmarks it on narrow-band matrices).
+    Candidates come from the KernelPath registry (core/paths.py): every
+    registered path contributes its own enumerator over the sweep space —
+    segment is always a candidate; windowed kernel plans ('kernel', and
+    'flat' when the nnz-per-row skew makes per-tile-exact packing worth
+    measuring) are emitted per (tm, k_step) whose window fits under
+    ``w_cap``; colorful for square matrices small enough that the
+    O(n·deg²) greedy coloring is worth attempting.  Legacy
+    ``@register_candidate_source`` hooks still join the pool.
+
+    Every candidate — registry or hook — is filtered through the path's
+    feasibility predicate, so a plan the packer cannot tile (window over
+    ``w_cap``, square-only path on a rectangular matrix) is rejected here
+    instead of erroring mid-tune.
+
     ``nrhs_options`` replicates every candidate per RHS block width, so a
     serving deployment can tune the batched SpMM operating point directly
     (the winning path may differ between nrhs=1 and nrhs=8: arithmetic
     intensity rises with the block).
     """
     partition, acc = _distributed_fields(stats, p_hint)
-    plans = [ExecutionPlan(path="segment", w_cap=w_cap,
-                           partition=partition, accumulation=acc)]
-    square = stats.n == stats.m
-    if square:
-        for tm in tms:
-            if kernel_window(tm, stats.bandwidth) > w_cap:
-                continue
-            for ks in k_steps_sublanes:
-                plans.append(ExecutionPlan(
-                    path="kernel", tm=tm, w_cap=w_cap, k_step_sublanes=ks,
-                    partition=partition, accumulation=acc))
-        if stats.n <= colorful_max_n and stats.k > 0:
-            plans.append(ExecutionPlan(path="colorful", w_cap=w_cap,
-                                       partition=partition,
-                                       accumulation=acc))
+    space = paths_mod.CandidateSpace(
+        tms=tuple(tms), k_steps_sublanes=tuple(k_steps_sublanes),
+        w_cap=w_cap, colorful_max_n=colorful_max_n,
+        partition=partition, accumulation=acc)
+    raw: List[ExecutionPlan] = []
+    for entry in paths_mod.registered_paths():
+        raw.extend(entry.candidates(stats, space))
     for source in _CANDIDATE_SOURCES:
-        for p in source(stats):
-            if feasible(p, n=stats.n, m=stats.m, bandwidth=stats.bandwidth):
-                plans.append(p)
+        raw.extend(source(stats))
+    plans = [p for p in raw
+             if feasible(p, n=stats.n, m=stats.m, bandwidth=stats.bandwidth)]
     if tuple(nrhs_options) != (1,):
         plans = [dataclasses.replace(p, nrhs=r)
                  for p in plans for r in nrhs_options]

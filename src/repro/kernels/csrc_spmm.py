@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.blockell import BlockEll
+from repro.core.blockell import BlockEll, overlap_add_mm
 
 
 def _kernel(vals_l_ref, vals_u_ref, col_ref, row_ref, ad_ref, x_ref,
@@ -103,17 +103,4 @@ def blockell_spmm(pack: BlockEll, X: jnp.ndarray,
       pack.ad, x_full)
 
     # overlap-add per RHS column (windows are (NT, W, B))
-    tm, w = pack.tm, pack.w_pad
-    r = w // tm
-    y = jnp.zeros((pack.w_pad + pack.n_pad + w, nrhs), jnp.float32)
-    for g in range(r):
-        group = wins[g::r]
-        ng = group.shape[0]
-        if ng == 0:
-            continue
-        flat = group.reshape(ng * w, nrhs)
-        startg = (g + 1) * tm
-        y = jax.lax.dynamic_update_slice(
-            y, jax.lax.dynamic_slice(y, (startg, 0), (ng * w, nrhs))
-            + flat, (startg, 0))
-    return y[pack.w_pad:pack.w_pad + pack.n]
+    return overlap_add_mm(pack, wins)

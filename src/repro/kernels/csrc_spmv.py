@@ -1,6 +1,6 @@
 """Pallas TPU kernel for the block-ELL CSRC sparse matrix-vector product.
 
-TPU adaptation of the paper's parallel CSRC SpMV (DESIGN.md §2):
+TPU adaptation of the paper's parallel CSRC SpMV (docs/DESIGN.md §4):
 
   * a grid program = one (row-tile b, k-step kt) pair — the paper's "thread
     processing a row range" at VMEM-tile granularity;

@@ -1,4 +1,4 @@
-"""Flattened-grid variant of the block-ELL CSRC SpMV kernel.
+"""Flattened-grid variant of the block-ELL CSRC SpMV/SpMM kernels.
 
 The rectangular (NT, NK) grid of csrc_spmv.py pads every row tile to the
 slot count of the densest tile — skewed matrices waste bandwidth on ELL
@@ -14,12 +14,21 @@ padding (pad_ratio).  Here each row tile gets only the k-steps it needs:
 
 Cross-tile padding drops from (max_b nk_b)·NT to Σ_b nk_b k-steps — on a
 skewed FEM matrix this is the difference between pad_ratio ~3 and ~1.1
-(see tests and EXPERIMENTS.md §Perf kernel table).
+(see tests/test_flat_path.py and docs/DESIGN.md §4; `benchmarks.run
+--only flat` records the rect-vs-flat gap in results/BENCH_flat.json).
+
+The flat path is a first-class registered KernelPath (core/paths.py):
+tuner-enumerable on skewed matrices, schedule-cached (`FlatBlockEll` is
+the npz-serialized artifact), and executable shard-locally inside every
+distributed accumulation strategy via the stacked per-shard layouts at
+the bottom of this module (``FlatShards`` for allreduce/reduce_scatter,
+``FlatHalo`` for the effective/halo strategy).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Optional
 
 import numpy as np
 import jax
@@ -28,7 +37,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.csrc import CSRC, bandwidth, row_of_slot
-from repro.core.blockell import _round_up, pad_x, overlap_add
+from repro.core.blockell import _round_up, overlap_add, overlap_add_mm
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,32 +74,33 @@ class FlatBlockEll:
         return b
 
 
-def pack_flat(M: CSRC, tm: int = 128, ks: int = 8, w_cap: int = 4096,
-              index_dtype=jnp.int32) -> FlatBlockEll:
-    """Per-tile-exact packing (no cross-tile ELL padding)."""
-    assert M.is_square
-    n = M.n
-    band = bandwidth(M)
-    w_pad = _round_up(tm + band, max(128, tm))
-    if w_pad > w_cap:
-        raise ValueError(f"window {w_pad} > cap {w_cap}")
-    nt = max(1, -(-n // tm))
-    step = ks * 128
-    ros = row_of_slot(M)
-    ja = np.asarray(M.ja)
-    al = np.asarray(M.al)
-    au = np.asarray(M.au)
+def _flat_arrays(ros, ja, al, au, *, nt: int, tm: int, w_pad: int,
+                 step: int, pad_steps_to: Optional[int] = None):
+    """Fill the flat step arrays for one slot set (rows/cols may be global
+    or shard-local coordinates — the packer only assumes every slot's
+    column lies inside its tile's window).
+
+    Every tile gets at least one k-step so its output window is always
+    initialized (the kernel's first-of-tile write).  ``pad_steps_to``
+    appends inert trailing steps (zero values, sentinel indices, assigned
+    to the last tile so tile programs stay consecutive) — used to equalize
+    per-shard step counts for the stacked distributed layouts.
+    """
     tile_of_slot = ros // tm
     counts = np.bincount(tile_of_slot, minlength=nt)
     nk = np.maximum(1, -(-counts // step))          # k-steps per tile
     total = int(nk.sum())
+    steps = total if pad_steps_to is None else int(pad_steps_to)
+    if steps < total:
+        raise ValueError(f"pad_steps_to {steps} < required steps {total}")
 
-    vals_l = np.zeros((total, step), np.float32)
-    vals_u = np.zeros((total, step), np.float32)
-    col_local = np.full((total, step), w_pad, np.int32)
-    row_in_win = np.full((total, step), w_pad - 1, np.int32)
-    tile_of_step = np.repeat(np.arange(nt, dtype=np.int32), nk)
-    first = np.zeros(total, np.int32)
+    vals_l = np.zeros((steps, step), np.float32)
+    vals_u = np.zeros((steps, step), np.float32)
+    col_local = np.full((steps, step), w_pad, np.int32)
+    row_in_win = np.full((steps, step), w_pad - 1, np.int32)
+    tile_of_step = np.full(steps, nt - 1, np.int32)
+    tile_of_step[:total] = np.repeat(np.arange(nt, dtype=np.int32), nk)
+    first = np.zeros(steps, np.int32)
     starts = np.concatenate([[0], np.cumsum(nk)])[:-1]
     first[starts] = 1
 
@@ -105,10 +115,28 @@ def pack_flat(M: CSRC, tm: int = 128, ks: int = 8, w_cap: int = 4096,
         vals_u[j, pos] = au[idx]
         col_local[j, pos] = int(ja[idx]) - int(win_lo[t])
         row_in_win[j, pos] = int(ros[idx]) - int(win_lo[t])
+    return vals_l, vals_u, col_local, row_in_win, tile_of_step, first, total
+
+
+def pack_flat(M: CSRC, tm: int = 128, ks: int = 8, w_cap: int = 4096,
+              index_dtype=jnp.int32) -> FlatBlockEll:
+    """Per-tile-exact packing (no cross-tile ELL padding)."""
+    assert M.is_square
+    n = M.n
+    band = bandwidth(M)
+    w_pad = _round_up(tm + band, max(128, tm))
+    if w_pad > w_cap:
+        raise ValueError(f"window {w_pad} > cap {w_cap}")
+    nt = max(1, -(-n // tm))
+    step = ks * 128
+    (vals_l, vals_u, col_local, row_in_win, tile_of_step, first,
+     total) = _flat_arrays(row_of_slot(M), np.asarray(M.ja),
+                           np.asarray(M.al), np.asarray(M.au),
+                           nt=nt, tm=tm, w_pad=w_pad, step=step)
 
     ad = np.zeros((nt, tm), np.float32)
     ad.reshape(-1)[:n] = np.asarray(M.ad)
-    k = max(1, int(ja.shape[0]))
+    k = max(1, int(np.asarray(M.ja).shape[0]))
     return FlatBlockEll(
         n=n, tm=tm, nt=nt, w_pad=w_pad, total_steps=total, ks=ks,
         vals_l=jnp.asarray(vals_l.reshape(total, ks, 128)),
@@ -196,3 +224,279 @@ def flat_spmv(pack: FlatBlockEll, x: jnp.ndarray,
       pack.vals_l, pack.vals_u, pack.col_local, pack.row_in_win,
       pack.ad, x_full)
     return overlap_add(pack, wins)
+
+
+def _kernel_mm(tile_ref, first_ref, vals_l_ref, vals_u_ref, col_ref,
+               row_ref, ad_ref, x_ref, out_ref, *, tm: int, w_pad: int,
+               nrhs: int, num_symmetric: bool):
+    j = pl.program_id(0)
+    b = tile_ref[j]
+    start = (b + 1) * tm
+    xw = jax.lax.dynamic_slice(x_ref[...], (start, 0), (w_pad, nrhs))
+
+    cols = col_ref[0].astype(jnp.int32)
+    rows = row_ref[0].astype(jnp.int32)
+    vl = vals_l_ref[0]
+    vu = vl if num_symmetric else vals_u_ref[0]
+    ks = cols.shape[0]
+    s = ks * 128
+    iota_w = jax.lax.broadcasted_iota(jnp.int32, (ks, 128, w_pad), 2)
+    oh_cols = (cols[..., None] == iota_w).astype(vl.dtype).reshape(s, w_pad)
+    oh_rows = (rows[..., None] == iota_w).astype(vl.dtype).reshape(s, w_pad)
+
+    xg = jax.lax.dot_general(oh_cols, xw, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (S, B)
+    xi = jax.lax.dot_general(oh_rows, xw, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    c_rows = vl.reshape(s, 1) * xg
+    c_cols = vu.reshape(s, 1) * xi
+    win = jax.lax.dot_general(oh_rows, c_rows, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    win = win + jax.lax.dot_general(oh_cols, c_cols,
+                                    (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+
+    @pl.when(first_ref[j] == 1)
+    def _init():
+        diag = ad_ref[0][:, None] * jax.lax.dynamic_slice(
+            xw, (w_pad - tm, 0), (tm, nrhs))
+        base = jnp.zeros((w_pad, nrhs), jnp.float32)
+        base = jax.lax.dynamic_update_slice(base, diag, (w_pad - tm, 0))
+        out_ref[0] = base + win
+
+    @pl.when(first_ref[j] != 1)
+    def _acc():
+        out_ref[0] = out_ref[0] + win
+
+
+def flat_spmm(pack: FlatBlockEll, X: jnp.ndarray,
+              interpret: bool = True) -> jnp.ndarray:
+    """Y = A @ X for X (n, B) — the multi-RHS flat-grid product (batched
+    serving / block-Krylov shape) with the same per-tile-exact step layout
+    as flat_spmv."""
+    n, nrhs = X.shape
+    assert n == pack.n
+    x_full = jnp.pad(X.astype(jnp.float32),
+                     ((pack.w_pad, pack.n_pad - pack.n), (0, 0)))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(pack.total_steps,),
+        in_specs=[
+            pl.BlockSpec((1, pack.ks, 128), lambda j, tile, first: (j, 0, 0)),
+            pl.BlockSpec((1, pack.ks, 128), lambda j, tile, first: (j, 0, 0)),
+            pl.BlockSpec((1, pack.ks, 128), lambda j, tile, first: (j, 0, 0)),
+            pl.BlockSpec((1, pack.ks, 128), lambda j, tile, first: (j, 0, 0)),
+            pl.BlockSpec((1, pack.tm), lambda j, tile, first: (tile[j], 0)),
+            pl.BlockSpec(x_full.shape, lambda j, tile, first: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, pack.w_pad, nrhs),
+                               lambda j, tile, first: (tile[j], 0, 0)),
+    )
+    wins = pl.pallas_call(
+        functools.partial(_kernel_mm, tm=pack.tm, w_pad=pack.w_pad,
+                          nrhs=nrhs, num_symmetric=pack.num_symmetric),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((pack.nt, pack.w_pad, nrhs),
+                                       jnp.float32),
+        interpret=interpret,
+    )(pack.tile_of_step, pack.first_of_tile,
+      pack.vals_l, pack.vals_u, pack.col_local, pack.row_in_win,
+      pack.ad, x_full)
+    return overlap_add_mm(pack, wins)
+
+
+# ---------------------------------------------------------------------------
+# Shard-local flat layouts for the distributed strategies
+# (consumed through core/schedule.py's memoized builders)
+# ---------------------------------------------------------------------------
+
+def _stack_shard_packs(slot_sets, *, nt, tm, w_pad, step, num_symmetric):
+    """Build one flat pack per shard and stack on a leading shard axis.
+
+    ``slot_sets`` yields (ros, ja, al, au) per shard.  Step counts are
+    equalized across shards (shard_map needs uniform shapes) by padding to
+    the widest shard with inert steps.
+    """
+    per_tile = []
+    for ros, ja, al, au in slot_sets:
+        counts = np.bincount(ros // tm, minlength=nt)
+        per_tile.append(int(np.maximum(1, -(-counts // step)).sum()))
+    steps = max(per_tile)
+    ks = step // 128
+    out = {k: [] for k in ("vals_l", "vals_u", "col_local", "row_in_win",
+                           "tile_of_step", "first_of_tile")}
+    for ros, ja, al, au in slot_sets:
+        (vl, vu, cl, rw, tos, first, _total) = _flat_arrays(
+            ros, ja, al, au, nt=nt, tm=tm, w_pad=w_pad, step=step,
+            pad_steps_to=steps)
+        out["vals_l"].append(vl.reshape(steps, ks, 128))
+        out["vals_u"].append((vl if num_symmetric else vu
+                              ).reshape(steps, ks, 128))
+        out["col_local"].append(cl.reshape(steps, ks, 128))
+        out["row_in_win"].append(rw.reshape(steps, ks, 128))
+        out["tile_of_step"].append(tos)
+        out["first_of_tile"].append(first)
+    return steps, {k: jnp.asarray(np.stack(v)) for k, v in out.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatShards:
+    """Per-shard flat sub-packs of one matrix in *global* coordinates
+    (allreduce / reduce_scatter strategies): shard t's pack holds only the
+    slots of its partition rows, plus its slice of the diagonal; running
+    the flat kernel over it yields the shard's full-length partial y."""
+    p: int
+    n: int
+    tm: int
+    nt: int
+    w_pad: int
+    steps: int                  # uniform k-steps per shard (padded)
+    ks: int
+    vals_l: jnp.ndarray         # (p, steps, KS, 128)
+    vals_u: jnp.ndarray
+    col_local: jnp.ndarray
+    row_in_win: jnp.ndarray
+    ad: jnp.ndarray             # (p, NT, TM) — shard-owned diagonal
+    tile_of_step: jnp.ndarray   # (p, steps)
+    first_of_tile: jnp.ndarray  # (p, steps)
+    num_symmetric: bool
+
+    def shard_pack(self, t: int) -> FlatBlockEll:
+        """Shard t's pack as a standalone FlatBlockEll (also the shape the
+        shard_map local function rebuilds from its slices)."""
+        return FlatBlockEll(
+            n=self.n, tm=self.tm, nt=self.nt, w_pad=self.w_pad,
+            total_steps=self.steps, ks=self.ks,
+            vals_l=self.vals_l[t], vals_u=self.vals_u[t],
+            col_local=self.col_local[t], row_in_win=self.row_in_win[t],
+            ad=self.ad[t], tile_of_step=self.tile_of_step[t],
+            first_of_tile=self.first_of_tile[t],
+            num_symmetric=self.num_symmetric, pad_ratio=1.0)
+
+
+def pack_flat_shards(M: CSRC, starts, tm: int = 128, ks: int = 8,
+                     w_cap: int = 4096) -> FlatShards:
+    """Split a square CSRC matrix into per-shard flat packs along the row
+    partition ``starts`` ((p+1,) boundaries from the schedule layer)."""
+    assert M.is_square
+    n = M.n
+    band = bandwidth(M)
+    w_pad = _round_up(tm + band, max(128, tm))
+    if w_pad > w_cap:
+        raise ValueError(f"window {w_pad} > cap {w_cap}")
+    nt = max(1, -(-n // tm))
+    step = ks * 128
+    starts = np.asarray(starts, dtype=np.int64)
+    p = starts.shape[0] - 1
+    ros = row_of_slot(M)
+    ja = np.asarray(M.ja)
+    al = np.asarray(M.al)
+    au = np.asarray(M.au)
+
+    def slot_sets():
+        for t in range(p):
+            sel = (ros >= starts[t]) & (ros < starts[t + 1])
+            yield ros[sel], ja[sel], al[sel], au[sel]
+
+    steps, arrays = _stack_shard_packs(
+        list(slot_sets()), nt=nt, tm=tm, w_pad=w_pad, step=step,
+        num_symmetric=M.numerically_symmetric)
+
+    ad = np.zeros((p, nt * tm), np.float32)
+    ad_full = np.asarray(M.ad)
+    for t in range(p):
+        r0, r1 = int(starts[t]), int(starts[t + 1])
+        ad[t, r0:r1] = ad_full[r0:r1]
+    return FlatShards(
+        p=p, n=n, tm=tm, nt=nt, w_pad=w_pad, steps=steps, ks=ks,
+        ad=jnp.asarray(ad.reshape(p, nt, tm)),
+        num_symmetric=bool(M.numerically_symmetric), **arrays)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatHalo:
+    """Per-shard flat packs in *local* halo coordinates (the paper's
+    effective-accumulation strategy): shard t owns ns rows; its local
+    matrix covers rows [r0-h, r1) of y, i.e. n_local = ns + h rows with
+    the halo rows first — exactly the y_ext/x_ext layout of
+    schedule.build_halo_layout, but executed by the flat kernel."""
+    p: int
+    ns: int                     # rows per shard (8-aligned)
+    h: int                      # halo width (8-aligned bandwidth)
+    n_local: int                # ns + h
+    tm: int
+    nt: int                     # local row tiles: ceil(n_local / tm)
+    w_pad: int
+    steps: int
+    ks: int
+    vals_l: jnp.ndarray         # (p, steps, KS, 128)
+    vals_u: jnp.ndarray
+    col_local: jnp.ndarray
+    row_in_win: jnp.ndarray
+    ad: jnp.ndarray             # (p, NT, TM) local-coordinate diagonal
+    tile_of_step: jnp.ndarray
+    first_of_tile: jnp.ndarray
+    num_symmetric: bool
+
+    def shard_pack(self, t: int) -> FlatBlockEll:
+        return FlatBlockEll(
+            n=self.n_local, tm=self.tm, nt=self.nt, w_pad=self.w_pad,
+            total_steps=self.steps, ks=self.ks,
+            vals_l=self.vals_l[t], vals_u=self.vals_u[t],
+            col_local=self.col_local[t], row_in_win=self.row_in_win[t],
+            ad=self.ad[t], tile_of_step=self.tile_of_step[t],
+            first_of_tile=self.first_of_tile[t],
+            num_symmetric=self.num_symmetric, pad_ratio=1.0)
+
+
+def pack_flat_halo(M: CSRC, p: int, tm: int = 128, ks: int = 8,
+                   w_cap: int = 4096) -> FlatHalo:
+    """Per-shard local flat packs for the halo strategy.  Raises ValueError
+    when the band does not fit inside one shard (same feasibility gate as
+    schedule.build_halo_layout) or the local window exceeds ``w_cap``."""
+    assert M.is_square
+    n = M.n
+    ns = _round_up(-(-n // p), 8)
+    band = bandwidth(M)
+    h = max(8, _round_up(band, 8))
+    if h > ns:
+        raise ValueError(
+            f"band {band} exceeds shard rows {ns}; halo strategy needs "
+            "band <= n/p (fall back to allreduce/reduce_scatter)")
+    n_local = ns + h
+    # every local row i stores columns in [i-h, i]: bandwidth_local <= h
+    w_pad = _round_up(tm + h, max(128, tm))
+    if w_pad > w_cap:
+        raise ValueError(f"window {w_pad} > cap {w_cap}")
+    nt = max(1, -(-n_local // tm))
+    step = ks * 128
+
+    ros = row_of_slot(M)
+    ja = np.asarray(M.ja)
+    al = np.asarray(M.al)
+    au = np.asarray(M.au)
+    shard_of_slot = ros // ns
+
+    def slot_sets():
+        for t in range(p):
+            sel = shard_of_slot == t
+            # local row r0+i -> h+i; column j -> j - (r0 - h)
+            yield (ros[sel] - t * ns + h, ja[sel] - (t * ns - h),
+                   al[sel], au[sel])
+
+    steps, arrays = _stack_shard_packs(
+        list(slot_sets()), nt=nt, tm=tm, w_pad=w_pad, step=step,
+        num_symmetric=M.numerically_symmetric)
+
+    ad = np.zeros((p, nt * tm), np.float32)
+    ad_full = np.asarray(M.ad)
+    for t in range(p):
+        r0 = t * ns
+        r1 = min(n, r0 + ns)
+        if r1 > r0:
+            ad[t, h:h + (r1 - r0)] = ad_full[r0:r1]
+    return FlatHalo(
+        p=p, ns=ns, h=h, n_local=n_local, tm=tm, nt=nt, w_pad=w_pad,
+        steps=steps, ks=ks,
+        ad=jnp.asarray(ad.reshape(p, nt, tm)),
+        num_symmetric=bool(M.numerically_symmetric), **arrays)

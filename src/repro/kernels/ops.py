@@ -2,15 +2,22 @@
 
 ``SpmvOperator`` executes an :class:`repro.core.plan.ExecutionPlan` through
 an :class:`repro.core.schedule.SpmvSchedule` — the precomputed artifact
-bundling the block-ELL pack, row partition/halo ranges, and coloring the
-plan needs (core/schedule.py).  The operator never packs, partitions, or
-colors inline: it asks the schedule layer (and, given ``cache=``, reuses
-the artifact stored next to the plan in the tuner's PlanCache).
+bundling the pack, row partition/halo ranges, and coloring the plan needs
+(core/schedule.py).  The operator never packs, partitions, or colors
+inline: it asks the schedule layer (and, given ``cache=``, reuses the
+artifact stored next to the plan in the tuner's PlanCache).
 
-Paths:
+Dispatch is registry-driven: the plan's path resolves to its
+:class:`~repro.core.paths.KernelPath` entry, whose executor factories
+produce the SpMV and SpMM callables — this module contains no per-path
+``if`` chain, so a newly registered path executes here with zero edits.
 
-  * 'kernel'   block-ELL Pallas kernel when the matrix is banded enough to
-    window (interpret-mode on CPU, compiled on TPU);
+Registered paths (core/paths.py):
+
+  * 'kernel'   rectangular-grid block-ELL Pallas kernel when the matrix is
+    banded enough to window (interpret-mode on CPU, compiled on TPU);
+  * 'flat'     flat-grid block-ELL Pallas kernel — per-tile-exact k-steps,
+    no cross-tile ELL padding (skewed row-length matrices);
   * 'segment'  segment-sum jnp path (any matrix, incl. the rectangular tail);
   * 'colorful' the paper's §3.2 color-by-color permutation writes, over the
     schedule's precomputed per-color slot batches.
@@ -26,18 +33,16 @@ artifact as ``op.schedule``, so callers can cache, log, or replay both.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.csrc import CSRC
+from repro.core import paths as paths_mod
 from repro.core import schedule as schedule_mod
 from repro.core.plan import ExecutionPlan
 from . import ref
-from . import csrc_spmv as kernel_mod
-from . import csrc_spmm as kernel_mm_mod
 
 
 class SpmvOperator:
@@ -91,31 +96,28 @@ class SpmvOperator:
         self.plan = plan
         self.schedule = schedule
         self.path = plan.path
-        self.pack = schedule.pack
+        self.pack = (schedule.pack if schedule.pack is not None
+                     else schedule.flat_pack)
         self.coloring = schedule.coloring if coloring is None else coloring
         self.interpret = interpret
 
-        if self.path == "kernel":
-            p = self.pack
-            self._fn = jax.jit(functools.partial(
-                kernel_mod.blockell_spmv, p, interpret=interpret,
-                k_step_sublanes=plan.k_step_sublanes))
-            self._fn_mm = jax.jit(functools.partial(
-                kernel_mm_mod.blockell_spmm, p, interpret=interpret,
-                k_step_sublanes=plan.k_step_sublanes))
-        elif self.path == "segment":
-            self._fn = jax.jit(lambda x: ref.csrc_spmv(M, x))
-            self._fn_mm = jax.jit(lambda X: ref.csrc_spmm(M, X))
-        elif self.path == "colorful":
-            slots, ptr = schedule.color_slots, schedule.color_slot_ptr
-            if slots is None:       # explicit coloring override
-                slots, ptr = schedule_mod.color_slot_batches(M, self.coloring)
-            apply = functools.partial(schedule_mod.colorful_apply, M,
-                                      color_slots=slots, color_slot_ptr=ptr)
-            self._fn = jax.jit(apply)
-            self._fn_mm = jax.jit(apply)
+        # registry dispatch: the path's KernelPath entry builds both
+        # executors from the schedule artifact (no per-path if chain here)
+        try:
+            entry = paths_mod.get_path(self.path)
+        except KeyError as e:
+            raise ValueError(str(e)) from None
+        spmv_fn = entry.make_spmv(
+            M, schedule, plan, interpret=interpret, coloring=coloring)
+        if entry.make_spmm is entry.make_spmv:
+            # one factory registered for both shapes (e.g. colorful):
+            # construct once, share the executor
+            spmm_fn = spmv_fn
         else:
-            raise ValueError(f"unknown path {self.path}")
+            spmm_fn = entry.make_spmm(
+                M, schedule, plan, interpret=interpret, coloring=coloring)
+        self._fn = jax.jit(spmv_fn)
+        self._fn_mm = jax.jit(spmm_fn)
 
     @classmethod
     def from_plan(cls, M: CSRC, plan: ExecutionPlan,

@@ -131,9 +131,12 @@ class SpmvServingEngine:
     matrix of an already-served class — constructs the operator with zero
     measurements) and reuses the schedule artifact stored next to the plan
     (core/schedule.py): re-registering a known matrix performs zero
-    pack/partition/coloring work.  ``step`` groups the queue by matrix and
-    answers each group with **one batched multi-RHS SpMM** through the
-    operator's tuned path — never a loop of single products.
+    pack/partition/coloring work.  Plans resolve through the KernelPath
+    registry, so every registered path — including 'flat' for skewed
+    matrices — is servable with no engine changes.  ``step`` groups the
+    queue by matrix and answers each group with **one batched multi-RHS
+    SpMM** through the operator's tuned path — never a loop of single
+    products.
     """
 
     def __init__(self, cache=None, autotune: bool = False,
