@@ -12,6 +12,11 @@
                       uniform band matrices: pad_ratio, streamed_bytes,
                       SpMV/SpMM time — written to results/BENCH_flat.json
                       (the CI bench-smoke job asserts the skewed rows)
+  assembly            FEM assembly (repro.assembly): colored vs
+                      private-buffer vs serial-oracle scatter per mesh
+                      generator + the assemble→tune→solve pipeline —
+                      written to results/BENCH_assembly.json (CI asserts
+                      the strategies match the oracle bit-for-bit)
   roofline_summary    single-pod roofline table from results/dryrun (§Roofline)
 
 Output: ``name,us_per_call,derived`` CSV rows.
@@ -40,6 +45,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 PLAN_CACHE_PATH = os.path.join(ROOT, "results", "plans.json")
 BENCH_SCHEDULE_PATH = os.path.join(ROOT, "results", "BENCH_schedule.json")
 BENCH_FLAT_PATH = os.path.join(ROOT, "results", "BENCH_flat.json")
+BENCH_ASSEMBLY_PATH = os.path.join(ROOT, "results", "BENCH_assembly.json")
 
 
 # ---------------------------------------------------------------------------
@@ -296,6 +302,91 @@ def flat_vs_rect(small: bool):
 
 
 # ---------------------------------------------------------------------------
+# FEM assembly: colored vs private-buffer vs serial oracle
+# ---------------------------------------------------------------------------
+
+def assembly(small: bool):
+    """Conflict-free CSRC assembly (repro.assembly): per mesh generator,
+    the one-time AssemblySchedule build vs the per-step value scatter of
+    each accumulation strategy (colored permutation writes, private
+    buffers + reduce, serial numpy oracle).  The colored and private
+    results must equal the oracle bit-for-bit (dyadic stiffness) — the CI
+    assembly smoke asserts it from results/BENCH_assembly.json.  Ends
+    with the assemble→tune→solve pipeline on the tri mesh."""
+    from repro.assembly import (assembly_schedule_for, mesh as amesh,
+                                scatter_colored, scatter_private,
+                                scatter_serial, values_to_csrc)
+    from repro.core.solvers import cg_solve
+
+    print("# assembly: colored vs private-buffer vs serial oracle "
+          "(build split from per-step scatter)")
+    s = 12 if small else 40
+    meshes = [(name, gen(s)) for name, gen in amesh.MESH_GENERATORS]
+    records = []
+    cache = tuner.PlanCache()
+    for name, mesh in meshes:
+        ke = amesh.poisson_stiffness(mesh, mass=1.0)
+        t0 = time.perf_counter()
+        sched = assembly_schedule_for(mesh, cache=cache)
+        t_build = time.perf_counter() - t0
+        ref = scatter_serial(sched, ke)
+        times, match = {}, {}
+        kej = jnp.asarray(ke)
+        for label, fn in (("colored", jax.jit(
+                              lambda k: scatter_colored(sched, k))),
+                          ("private", jax.jit(
+                              lambda k: scatter_private(sched, k)))):
+            t = time_fn(fn, kej)
+            vals = np.asarray(fn(kej))
+            times[label] = t
+            match[label] = bool(np.array_equal(vals, ref))
+        t1 = time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            scatter_serial(sched, ke)
+        times["serial"] = (time.perf_counter() - t1) / reps
+        col = sched.coloring
+        for label in ("colored", "private", "serial"):
+            extra = ("" if label == "serial"
+                     else f";matches_serial={match[label]}")
+            row(f"assembly/{name}/{label}", times[label] * 1e6,
+                f"build_us={t_build*1e6:.1f};ne={sched.ne};"
+                f"colors={col.num_colors}{extra}")
+        records.append({
+            "mesh": name, "ne": sched.ne, "n": sched.n, "k": sched.k,
+            "colors": int(col.num_colors),
+            "build_us": round(t_build * 1e6, 1),
+            "colored_us": round(times["colored"] * 1e6, 1),
+            "private_us": round(times["private"] * 1e6, 1),
+            "serial_us": round(times["serial"] * 1e6, 1),
+            "colored_matches_serial": match["colored"],
+            "private_matches_serial": match["private"],
+        })
+    # assemble -> tune -> solve (the end-to-end acceptance demo)
+    mesh = meshes[0][1]
+    sched = assembly_schedule_for(mesh, cache=cache)
+    M = values_to_csrc(sched, scatter_colored(
+        sched, amesh.poisson_stiffness(mesh, mass=1.0)))
+    res = tuner.tune(M, cache=cache)
+    b = jnp.asarray(np.random.default_rng(0).standard_normal(M.n)
+                    .astype(np.float32))
+    t0 = time.perf_counter()
+    sol, op = cg_solve(M, b, cache=cache, tol=1e-6, maxiter=2000)
+    t_solve = time.perf_counter() - t0
+    row("assembly/tri/assemble_tune_solve", t_solve * 1e6,
+        f"plan={op.plan.key()};iters={int(sol.iters)};"
+        f"converged={bool(sol.converged)}")
+    records.append({"mesh": "tri", "pipeline": "assemble_tune_solve",
+                    "plan": op.plan.key(), "iters": int(sol.iters),
+                    "converged": bool(sol.converged),
+                    "solve_us": round(t_solve * 1e6, 1)})
+    os.makedirs(os.path.dirname(BENCH_ASSEMBLY_PATH), exist_ok=True)
+    with open(BENCH_ASSEMBLY_PATH, "w") as f:
+        json.dump({"rows": records}, f, indent=1, sort_keys=True)
+    print(f"# assembly: {len(records)} rows -> {BENCH_ASSEMBLY_PATH}")
+
+
+# ---------------------------------------------------------------------------
 # Tuned vs default execution plans (the plan/autotune subsystem)
 # ---------------------------------------------------------------------------
 
@@ -361,8 +452,8 @@ def roofline_summary(small: bool):
 
 
 BENCHES = [fig5_sequential, table2_accumulation, fig6_colorful,
-           fig89_scaling, schedule_build, flat_vs_rect, tuned_vs_default,
-           roofline_summary]
+           fig89_scaling, schedule_build, flat_vs_rect, assembly,
+           tuned_vs_default, roofline_summary]
 
 
 def main() -> None:

@@ -1,0 +1,75 @@
+"""End-to-end FEM pipeline over the assembly subsystem: mesh → element
+stiffness → conflict-free CSRC assembly → autotuned SpMV plan → CG solve,
+then a time-stepping loop that re-assembles values each step and refreshes
+the operator without any structural rebuild.
+
+  PYTHONPATH=src python examples/assemble_tune_solve.py [--n 24] [--steps 4]
+"""
+import argparse
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.assembly import (assemble, assembly_schedule_for, mesh as amesh,
+                            scatter_serial)
+from repro.core import csrc, schedule as S, tuner
+from repro.core.solvers import cg_solve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=24, help="grid side (cells)")
+    ap.add_argument("--steps", type=int, default=4,
+                    help="time steps (value refreshes)")
+    args = ap.parse_args()
+
+    mesh = amesh.grid_tri(args.n)
+    cache = tuner.PlanCache()
+
+    # --- one-time structural precompute: slot maps + element coloring ---
+    t0 = time.perf_counter()
+    sched = assembly_schedule_for(mesh, cache=cache)
+    print(f"[schedule] ne={sched.ne} n={sched.n} k={sched.k} "
+          f"colors={sched.coloring.num_colors} "
+          f"({(time.perf_counter()-t0)*1e3:.1f} ms)")
+
+    # --- assemble (colored, conflict-free) and check against the oracle ---
+    ke = amesh.poisson_stiffness(mesh, mass=1.0)
+    M = assemble(sched, ke, strategy="colored")
+    oracle = scatter_serial(sched, ke)
+    exact = np.array_equal(
+        np.concatenate([np.asarray(M.ad), np.asarray(M.al),
+                        np.asarray(M.au)]), oracle)
+    print(f"[assemble] nnz={M.nnz} band={csrc.bandwidth(M)} "
+          f"colored==serial: {exact}")
+
+    # --- tune, then solve through the shared cache ---
+    res = tuner.tune(M, cache=cache)
+    print(f"[tune] plan={res.plan.key()} "
+          f"({len(res.timings_s)} candidates measured)")
+    rng = np.random.default_rng(0)
+    x_true = rng.standard_normal(M.n)
+    b = jnp.asarray(csrc.to_dense(M).astype(np.float64) @ x_true,
+                    dtype=jnp.float32)
+    sol, op = cg_solve(M, b, cache=cache, tol=1e-7, maxiter=4000)
+    err = float(np.abs(np.asarray(sol.x, np.float64) - x_true).max())
+    print(f"[solve] converged={bool(sol.converged)} iters={int(sol.iters)} "
+          f"res={float(sol.residual):.1e} err={err:.1e}")
+
+    # --- time stepping: new values, same structure, zero rebuilds ---
+    for step in range(1, args.steps + 1):
+        before = dict(S.BUILD_COUNTS)
+        ke_t = amesh.poisson_stiffness(mesh, mass=1.0 + 0.5 * step)
+        M_t = assemble(sched, ke_t, strategy="colored")
+        op.update_values(M_t)
+        delta = {k: v - before.get(k, 0) for k, v in S.BUILD_COUNTS.items()
+                 if v - before.get(k, 0)}
+        sol_t, _ = cg_solve(M_t, b, plan=op.plan, cache=cache, tol=1e-6,
+                            maxiter=4000)
+        print(f"[step {step}] rebuilds={delta} iters={int(sol_t.iters)} "
+              f"converged={bool(sol_t.converged)}")
+
+
+if __name__ == "__main__":
+    main()

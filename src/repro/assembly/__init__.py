@@ -1,0 +1,21 @@
+"""FEM assembly subsystem: conflict-free construction of the global CSRC
+matrices the SpMV stack consumes (docs/DESIGN.md §5).
+
+  mesh       structured tri/quad/tet meshes + deterministic (dyadic)
+             element stiffness synthesis
+  conflict   element conflict graph + balanced coloring (reuses
+             core/coloring machinery)
+  scatter    accumulation strategies (colored / private-buffer / serial
+             oracle) + the cached AssemblySchedule artifact
+
+End to end:  mesh → stiffness → assemble → tune → solve
+(examples/assemble_tune_solve.py; benchmarks/run.py --only assembly).
+"""
+from .mesh import (Mesh, grid_quad, grid_tet, grid_tri,          # noqa: F401
+                   poisson_stiffness, synthetic_stiffness)
+from .conflict import (color_elements, element_dofs,             # noqa: F401
+                       verify_element_coloring)
+from .scatter import (AssemblySchedule, assemble, assemble_mesh,  # noqa: F401
+                      assembly_schedule_for, build_assembly_schedule,
+                      scatter_colored, scatter_private, scatter_serial,
+                      structure_digest, values_to_csrc)

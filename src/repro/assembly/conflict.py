@@ -1,0 +1,79 @@
+"""The element conflict graph and its coloring (docs/DESIGN.md §5).
+
+FEM assembly is the same scatter race the paper's SpMV scatter term has
+(Chejanovsky et al., arXiv:2012.00585): every element adds a dense
+``edof × edof`` block into the global matrix, and two elements sharing a
+node write the same diagonal entry (and, sharing two nodes, the same
+off-diagonal slots).  So the conflict graph is simply *elements sharing a
+DOF* — one level, no distance-2 closure needed: sharing any node already
+collides on that node's diagonal, and every off-diagonal collision
+requires sharing both endpoints.
+
+Coloring reuses the exact ordering + RACE-style balancing pipeline of
+``core/coloring.py`` (:func:`~repro.core.coloring.color_graph`): within a
+color no two elements share a DOF, so the per-color scatter-add is a
+permutation write — conflict-free on a machine without atomics, exactly
+how the colorful SpMV path executes (§3.2).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.coloring import Coloring, color_graph
+
+
+def element_dofs(conn: np.ndarray, ndof_per_node: int = 1) -> np.ndarray:
+    """(ne, nen·d) global DOF ids per element; node v owns dofs
+    [v·d, (v+1)·d) — the interleaved elasticity layout."""
+    conn = np.asarray(conn)
+    if ndof_per_node == 1:
+        return conn.astype(np.int32)
+    d = ndof_per_node
+    return (conn[:, :, None].astype(np.int64) * d
+            + np.arange(d)[None, None, :]).reshape(conn.shape[0], -1).astype(
+                np.int32)
+
+
+def element_adjacency(conn: np.ndarray) -> List[np.ndarray]:
+    """Adjacency lists of the element conflict graph: e ~ f when the
+    elements share at least one node.  (DOF interleaving is per node, so
+    sharing a node and sharing a DOF are the same relation for any
+    ``ndof_per_node``.)"""
+    conn = np.asarray(conn)
+    ne, _ = conn.shape
+    num_nodes = int(conn.max()) + 1 if conn.size else 0
+    node_els: List[List[int]] = [[] for _ in range(num_nodes)]
+    for e in range(ne):
+        for v in conn[e]:
+            node_els[int(v)].append(e)
+    adj: List[List[int]] = [[] for _ in range(ne)]
+    for els in node_els:
+        for a in els:
+            for b in els:
+                if a != b:
+                    adj[a].append(b)
+    return [np.unique(np.asarray(a, dtype=np.int64)) for a in adj]
+
+
+def color_elements(conn: np.ndarray, order: str = "degree",
+                   balance: bool = True) -> Coloring:
+    """Balanced largest-degree-first coloring of the element conflict
+    graph — same machinery as the row colorer, different graph."""
+    return color_graph(element_adjacency(conn), include_indirect=False,
+                       order=order, balance=balance)
+
+
+def verify_element_coloring(conn: np.ndarray, col: Coloring) -> bool:
+    """Invariant: no two elements of one color share a node (hence no two
+    share any scatter target, diagonal or off-diagonal)."""
+    conn = np.asarray(conn)
+    for c in range(col.num_colors):
+        seen: set = set()
+        for e in col.rows(c).tolist():
+            for v in conn[e].tolist():
+                if v in seen:
+                    return False
+                seen.add(v)
+    return True

@@ -1,0 +1,337 @@
+"""Conflict-free global-matrix assembly: the paper's accumulation
+strategies applied to the FEM scatter-add (docs/DESIGN.md §5).
+
+Assembling ``A = Σ_e P_e^T k_e P_e`` is a scatter-add over CSRC slots:
+contribution (e, a, b) lands on the diagonal (i == j), on a lower slot
+``al[p]`` (i > j) or on the aligned upper slot ``au[p]`` (i < j).  All
+three destinations flatten into one **unified value vector**
+``[ad | al | au]`` of length n + 2k, so assembly is a single scatter into
+that vector and the two race-avoidance families of the paper map exactly:
+
+  colored   per-color batched scatter (elements of one color share no
+            DOF ⇒ within a color every target is written once ⇒ a
+            permutation write, like the colorful SpMV path §3.2)
+  private   per-buffer full-length partials reduced at the end (the
+            local-buffers / all-in-one accumulation family §3.1)
+  serial    numpy ``np.add.at`` in element order — the ground-truth
+            oracle the strategies must reproduce
+
+With the dyadic-quantized stiffness synthesis of ``assembly/mesh.py``
+float32 accumulation is exact in any order, so the strategies are
+required to agree with the oracle **bit-for-bit** (tests and the CI
+assembly smoke assert equality, not closeness).
+
+All structure-dependent precompute — slot layout, contribution targets,
+element coloring, buffer grouping — lives in the npz-serializable
+:class:`AssemblySchedule`, stored in the tuner's PlanCache next to the
+SpMV schedules and keyed by a **connectivity digest**: FEM time stepping
+re-assembles with unchanged connectivity and must reuse every artifact
+(the ``BUILD_COUNTS['assembly_schedule']`` probe asserts zero rebuilds).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Optional, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import csrc
+from repro.core.coloring import Coloring
+# the shared build probe (re-exported as schedule.BUILD_COUNTS): assembly
+# builds count into the same Counter the SpMV schedule layer uses
+from repro.core.paths import BUILD_COUNTS
+from .conflict import color_elements, element_dofs
+from .mesh import Mesh
+
+ASSEMBLY_VERSION = 1
+
+STRATEGIES = ("colored", "private", "serial")
+
+
+@dataclasses.dataclass(frozen=True)
+class AssemblySchedule:
+    """Every structure-dependent precomputation one connectivity needs to
+    assemble CSRC matrices, for any number of value refreshes."""
+
+    structure_digest: str       # connectivity digest (see structure_digest)
+    n: int                      # global DOFs
+    k: int                      # strictly-lower CSRC slots
+    ne: int                     # elements
+    edof: int                   # DOFs per element
+    ndof_per_node: int
+    num_buffers: int            # private-buffer strategy width
+    ia: np.ndarray              # (n+1,) CSRC lower-triangle row pointers
+    ja: np.ndarray              # (k,)
+    # contribution (e, a, b) at flat index e·edof² + a·edof + b scatters to
+    # targets[...] in the unified [ad | al | au] vector of length n + 2k
+    targets: np.ndarray         # (ne·edof²,) int32
+    coloring: Coloring          # element coloring (conflict.color_elements)
+    buffer_elements: np.ndarray  # (num_buffers, epb) int32, -1 = padding
+
+    @property
+    def size(self) -> int:
+        """Length of the unified value vector."""
+        return self.n + 2 * self.k
+
+    def key(self) -> str:
+        return f"asm-{self.structure_digest}.b{self.num_buffers}"
+
+    # ------------------------------------------------------------------
+    # Serialization (npz arrays + JSON meta, SpmvSchedule conventions)
+    # ------------------------------------------------------------------
+
+    def save_npz(self, path: str):
+        meta = {
+            "version": ASSEMBLY_VERSION,
+            "structure_digest": self.structure_digest,
+            "n": self.n, "k": self.k, "ne": self.ne, "edof": self.edof,
+            "ndof_per_node": self.ndof_per_node,
+            "num_buffers": self.num_buffers,
+            "num_colors": int(self.coloring.num_colors),
+        }
+        arrays = dict(
+            ia=np.asarray(self.ia), ja=np.asarray(self.ja),
+            targets=np.asarray(self.targets),
+            color_of_row=np.asarray(self.coloring.color_of_row),
+            rows_by_color=np.asarray(self.coloring.rows_by_color),
+            color_ptr=np.asarray(self.coloring.color_ptr),
+            buffer_elements=np.asarray(self.buffer_elements),
+        )
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        tmp = path + ".tmp.npz"
+        with open(tmp, "wb") as f:
+            np.savez_compressed(f, __meta__=np.frombuffer(
+                json.dumps(meta, sort_keys=True).encode(), dtype=np.uint8),
+                **arrays)
+        os.replace(tmp, path)
+
+    @classmethod
+    def load_npz(cls, path: str) -> "AssemblySchedule":
+        with np.load(path) as z:
+            meta = json.loads(bytes(z["__meta__"]).decode())
+            if meta.get("version") != ASSEMBLY_VERSION:
+                raise ValueError(
+                    f"assembly schedule {path}: version "
+                    f"{meta.get('version')!r} != {ASSEMBLY_VERSION}")
+            coloring = Coloring(color_of_row=z["color_of_row"],
+                                num_colors=int(meta["num_colors"]),
+                                rows_by_color=z["rows_by_color"],
+                                color_ptr=z["color_ptr"])
+            return cls(structure_digest=meta["structure_digest"],
+                       n=meta["n"], k=meta["k"], ne=meta["ne"],
+                       edof=meta["edof"],
+                       ndof_per_node=meta["ndof_per_node"],
+                       num_buffers=meta["num_buffers"],
+                       ia=z["ia"], ja=z["ja"], targets=z["targets"],
+                       coloring=coloring,
+                       buffer_elements=z["buffer_elements"])
+
+
+def structure_digest(conn: np.ndarray, ndof_per_node: int = 1,
+                     num_nodes: Optional[int] = None) -> str:
+    """Digest of the element connectivity (the assembly-side analog of
+    ``schedule.structure_digest``): unchanged connectivity ⇒ identical
+    slot layout, targets, coloring, and buffer grouping."""
+    conn = np.ascontiguousarray(np.asarray(conn, np.int64))
+    num_nodes = int(conn.max()) + 1 if num_nodes is None else num_nodes
+    h = hashlib.sha1()
+    h.update(np.asarray([conn.shape[0], conn.shape[1], num_nodes,
+                         ndof_per_node], np.int64).tobytes())
+    h.update(conn.tobytes())
+    return h.hexdigest()[:16]
+
+
+def build_assembly_schedule(mesh_or_conn: Union[Mesh, np.ndarray],
+                            ndof_per_node: int = 1,
+                            num_buffers: int = 8,
+                            num_nodes: Optional[int] = None,
+                            coloring: Optional[Coloring] = None
+                            ) -> AssemblySchedule:
+    """Build the full assembly artifact for one connectivity.
+
+    The slot layout (ia/ja) is the union of every element's dense block,
+    lower triangle only — structurally symmetric by construction, so the
+    assembled matrix needs no :func:`~repro.core.csrc.symmetrize_pattern`
+    pass.  Contribution targets are resolved once via searchsorted on the
+    sorted lower-slot keys; the element coloring and the private-buffer
+    grouping ride along.
+    """
+    if isinstance(mesh_or_conn, Mesh):
+        conn = mesh_or_conn.conn
+        num_nodes = mesh_or_conn.num_nodes
+    else:
+        conn = np.asarray(mesh_or_conn)
+        num_nodes = (int(conn.max()) + 1 if num_nodes is None
+                     else num_nodes)
+    BUILD_COUNTS["assembly_schedule"] += 1
+    d = ndof_per_node
+    n = num_nodes * d
+    ed = element_dofs(conn, d)                     # (ne, edof)
+    ne, edof = ed.shape
+
+    ii = np.broadcast_to(ed[:, :, None], (ne, edof, edof)).reshape(-1)
+    jj = np.broadcast_to(ed[:, None, :], (ne, edof, edof)).reshape(-1)
+    ii = ii.astype(np.int64)
+    jj = jj.astype(np.int64)
+
+    low = ii > jj
+    keys = np.unique(ii[low] * n + jj[low])        # sorted lower slots
+    k = int(keys.shape[0])
+    rows = (keys // n).astype(np.int64)
+    ja = (keys % n).astype(np.int32)
+    ia = np.zeros(n + 1, dtype=np.int32)
+    np.add.at(ia, rows + 1, 1)
+    ia = np.cumsum(ia, dtype=np.int32)
+
+    targets = np.empty(ne * edof * edof, dtype=np.int32)
+    diag = ii == jj
+    targets[diag] = ii[diag]
+    targets[low] = n + np.searchsorted(keys, ii[low] * n + jj[low])
+    up = ii < jj
+    targets[up] = n + k + np.searchsorted(keys, jj[up] * n + ii[up])
+
+    if coloring is None:
+        BUILD_COUNTS["element_coloring"] += 1
+        coloring = color_elements(conn)
+
+    # private-buffer grouping: contiguous element chunks (locality), padded
+    # to a rectangular (B, epb) table with -1 sentinels
+    B = max(1, min(num_buffers, ne))
+    epb = -(-ne // B)
+    buffer_elements = np.full((B, epb), -1, dtype=np.int32)
+    flat = buffer_elements.reshape(-1)
+    flat[:ne] = np.arange(ne, dtype=np.int32)
+
+    return AssemblySchedule(
+        structure_digest=structure_digest(conn, d, num_nodes),
+        n=n, k=k, ne=ne, edof=edof, ndof_per_node=d, num_buffers=B,
+        ia=ia, ja=ja, targets=targets, coloring=coloring,
+        buffer_elements=buffer_elements)
+
+
+def assembly_schedule_for(mesh_or_conn, ndof_per_node: int = 1,
+                          num_buffers: int = 8, cache=None,
+                          num_nodes: Optional[int] = None
+                          ) -> AssemblySchedule:
+    """The schedule to assemble this connectivity with — cache hit wins.
+
+    ``cache`` is a :class:`~repro.core.tuner.PlanCache`; a hit (keyed by
+    the connectivity digest) performs zero structural work, which is the
+    FEM time-stepping fast path: re-assembly with unchanged connectivity
+    only refreshes value streams.
+    """
+    if cache is None:
+        return build_assembly_schedule(mesh_or_conn, ndof_per_node,
+                                       num_buffers, num_nodes=num_nodes)
+    if isinstance(mesh_or_conn, Mesh):
+        conn, nn = mesh_or_conn.conn, mesh_or_conn.num_nodes
+    else:
+        conn = np.asarray(mesh_or_conn)
+        nn = int(conn.max()) + 1 if num_nodes is None else num_nodes
+    digest = structure_digest(conn, ndof_per_node, nn)
+    # same clamp the builder applies, so lookup and stored keys agree on
+    # meshes with fewer elements than buffers
+    num_buffers = max(1, min(num_buffers, int(conn.shape[0])))
+    hit = cache.get_assembly_schedule(digest, num_buffers)
+    if hit is not None:
+        return hit
+    sched = build_assembly_schedule(conn, ndof_per_node, num_buffers,
+                                    num_nodes=nn)
+    cache.put_assembly_schedule(sched)
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Accumulation strategies
+# ---------------------------------------------------------------------------
+
+def scatter_colored(sched: AssemblySchedule, ke) -> jnp.ndarray:
+    """Per-color batched conflict-free scatter-add: inside one color every
+    target index is unique (no two elements share a DOF), so each
+    ``.at[].add`` is a permutation write — the colorful path's execution
+    discipline applied to assembly.  jit-compatible (color batches are
+    static per schedule)."""
+    kflat = jnp.asarray(ke, jnp.float32).reshape(sched.ne, -1)
+    t2 = np.asarray(sched.targets).reshape(sched.ne, -1)
+    vals = jnp.zeros(sched.size, jnp.float32)
+    col = sched.coloring
+    for c in range(col.num_colors):
+        els = np.asarray(col.rows(c))
+        if els.size == 0:
+            continue
+        tg = jnp.asarray(t2[els].reshape(-1))
+        vals = vals.at[tg].add(kflat[jnp.asarray(els)].reshape(-1))
+    return vals
+
+
+def scatter_private(sched: AssemblySchedule, ke) -> jnp.ndarray:
+    """Private-buffer accumulation: each buffer scatter-adds its element
+    chunk into its own full-length partial (duplicates within a buffer are
+    fine — the buffer is private), then the partials are reduced — the
+    paper's local-buffers / all-in-one strategy (§3.1) as a vmap +
+    tree-sum.  Padded slots target a dump entry past the vector end."""
+    kflat = jnp.asarray(ke, jnp.float32).reshape(sched.ne, -1)
+    t2 = jnp.asarray(sched.targets.reshape(sched.ne, -1))
+    be = jnp.asarray(sched.buffer_elements)             # (B, epb)
+    valid = (be >= 0)[..., None]
+    el = jnp.maximum(be, 0)
+    v3 = jnp.where(valid, kflat[el], 0.0)               # (B, epb, edof²)
+    t3 = jnp.where(valid, t2[el], sched.size)           # dump slot
+
+    def one_buffer(tg, vv):
+        return jnp.zeros(sched.size + 1, jnp.float32).at[
+            tg.reshape(-1)].add(vv.reshape(-1))
+
+    partials = jax.vmap(one_buffer)(t3, v3)             # (B, size+1)
+    return partials.sum(axis=0)[:sched.size]
+
+
+def scatter_serial(sched: AssemblySchedule, ke) -> np.ndarray:
+    """Serial numpy oracle: element-order ``np.add.at`` — the ground truth
+    the parallel strategies must reproduce (bit-for-bit with the dyadic
+    stiffness synthesis)."""
+    vals = np.zeros(sched.size, np.float32)
+    np.add.at(vals, np.asarray(sched.targets),
+              np.asarray(ke, np.float32).reshape(-1))
+    return vals
+
+
+def values_to_csrc(sched: AssemblySchedule, vals) -> csrc.CSRC:
+    """Split the unified value vector back into (ad, al, au) and wrap the
+    schedule's structure — the O(k) value-refresh constructor."""
+    vals = np.asarray(vals, np.float32)
+    n, k = sched.n, sched.k
+    return csrc.from_assembly(n, sched.ia, sched.ja,
+                              vals[:n], vals[n:n + k], vals[n + k:])
+
+
+def assemble(sched: AssemblySchedule, ke,
+             strategy: str = "colored") -> csrc.CSRC:
+    """Assemble the global CSRC matrix from per-element dense blocks
+    ``ke`` of shape (ne, edof, edof) with the chosen accumulation
+    strategy."""
+    if strategy not in STRATEGIES:
+        raise ValueError(f"strategy {strategy!r} not in {STRATEGIES}")
+    if strategy == "colored":
+        vals = scatter_colored(sched, ke)
+    elif strategy == "private":
+        vals = scatter_private(sched, ke)
+    else:
+        vals = scatter_serial(sched, ke)
+    return values_to_csrc(sched, vals)
+
+
+def assemble_mesh(mesh: Mesh, ke, ndof_per_node: int = 1,
+                  strategy: str = "colored", cache=None,
+                  num_buffers: int = 8):
+    """One-call mesh → CSRC assembly; returns (matrix, schedule) so
+    repeated value refreshes reuse the schedule (or pass ``cache=`` and
+    the connectivity digest does it for you)."""
+    sched = assembly_schedule_for(mesh, ndof_per_node=ndof_per_node,
+                                  num_buffers=num_buffers, cache=cache)
+    return assemble(sched, ke, strategy=strategy), sched

@@ -147,6 +147,44 @@ def pack(M: CSRC, tm: int = 128, k_step: int = 1024,
     )
 
 
+def refresh_values(pack_: BlockEll, M: CSRC) -> BlockEll:
+    """Refill a pack's value streams (vals_l/vals_u/ad) from a matrix with
+    **identical structure** — the FEM time-stepping fast path: no window
+    recomputation, no index-stream rebuild, no per-slot Python loop.
+
+    The slot→(tile, position) map is re-derived vectorized from ``ia``
+    alone: slots are row-major, so within a tile they are consecutive and
+    the position is ``slot_index − first_slot_of_tile``.  This reproduces
+    the original pack's fill order exactly (the pack's stable-sort loop
+    over a non-decreasing tile array is the identity order).
+    """
+    assert M.is_square and M.n == pack_.n, "structure mismatch"
+    if bool(M.numerically_symmetric) != pack_.num_symmetric:
+        raise ValueError(
+            "numeric symmetry changed; the pack layout streams vals_u "
+            "conditionally — rebuild instead of refreshing")
+    ros = row_of_slot(M)
+    k = ros.shape[0]
+    tile = ros // pack_.tm
+    first = np.searchsorted(tile, np.arange(pack_.nt))
+    pos = np.arange(k) - first[tile]
+    vals_l = np.zeros((pack_.nt, pack_.s), dtype=np.float32)
+    vals_l[tile, pos] = np.asarray(M.al)
+    if pack_.num_symmetric:          # vals_u aliases vals_l; skip the fill
+        vals_u = vals_l
+    else:
+        vals_u = np.zeros((pack_.nt, pack_.s), dtype=np.float32)
+        vals_u[tile, pos] = np.asarray(M.au)
+    ad = np.zeros((pack_.nt, pack_.tm), dtype=np.float32)
+    ad.reshape(-1)[:pack_.n] = np.asarray(M.ad)
+    vdtype = pack_.vals_l.dtype
+    return dataclasses.replace(
+        pack_,
+        vals_l=jnp.asarray(vals_l, dtype=vdtype),
+        vals_u=jnp.asarray(vals_u, dtype=vdtype),
+        ad=jnp.asarray(ad, dtype=pack_.ad.dtype))
+
+
 def pad_x(pack_: BlockEll, x: jnp.ndarray) -> jnp.ndarray:
     """Left-pad by W and right-pad to NT*TM (window coordinates)."""
     return jnp.pad(x, (pack_.w_pad, pack_.n_pad - pack_.n))

@@ -142,26 +142,25 @@ def _finalize(color: np.ndarray) -> Coloring:
                     rows_by_color=order.astype(np.int64), color_ptr=ptr)
 
 
-def color_rows(M: CSRC, include_indirect: bool = True,
-               order: str = "degree", balance: bool = True,
-               adj: Optional[list] = None) -> Coloring:
-    """Sequential greedy coloring [Coleman–Moré] with vertex ordering and
-    balancing.
+def color_graph(adj: list, include_indirect: bool = False,
+                order: str = "degree", balance: bool = True) -> Coloring:
+    """Sequential greedy coloring [Coleman–Moré] of an arbitrary conflict
+    graph given as adjacency lists, with vertex ordering and balancing.
+
+    This is the machinery behind :func:`color_rows` factored over the
+    graph instead of the matrix, so other conflict graphs — notably the
+    FEM *element* conflict graph of ``repro.assembly.conflict`` — reuse
+    the identical ordering + RACE-style balancing pipeline.
 
     ``order``: 'degree' (largest-degree-first, the default), 'natural'
     (the legacy unordered first-fit).  Degree ordering guards the invariant
     that it never uses more colors than the natural order by computing both
     and keeping the smaller palette (coloring is a one-time precomputation;
     see core/schedule.py).
-
-    With ``include_indirect`` the conflict graph is G'^2 restricted to direct
-    edges' 2-hop closure (paper: u,v indirectly conflict when their direct
-    neighborhoods intersect) — i.e. distance-2 coloring of the direct graph.
     """
-    n = M.n
+    n = len(adj)
     if order not in ("degree", "natural"):
         raise ValueError(f"unknown coloring order {order!r}")
-    adj = direct_adjacency(M) if adj is None else adj
     natural = np.arange(n)
     color = _greedy(adj, natural, include_indirect)
     if order == "degree" and n:
@@ -173,6 +172,21 @@ def color_rows(M: CSRC, include_indirect: bool = True,
     if balance:
         color = _balance(adj, color, include_indirect)
     return _finalize(color)
+
+
+def color_rows(M: CSRC, include_indirect: bool = True,
+               order: str = "degree", balance: bool = True,
+               adj: Optional[list] = None) -> Coloring:
+    """Row coloring of the paper's conflict graph (§3.2) via
+    :func:`color_graph`.
+
+    With ``include_indirect`` the conflict graph is G'^2 restricted to direct
+    edges' 2-hop closure (paper: u,v indirectly conflict when their direct
+    neighborhoods intersect) — i.e. distance-2 coloring of the direct graph.
+    """
+    adj = direct_adjacency(M) if adj is None else adj
+    return color_graph(adj, include_indirect=include_indirect,
+                       order=order, balance=balance)
 
 
 def verify_coloring(M: CSRC, col: Coloring) -> bool:

@@ -182,6 +182,45 @@ def from_coo(rows: Array, cols: Array, vals: Array, n: int,
     )
 
 
+def from_coo_symmetric(rows: Array, cols: Array, vals: Array, n: int,
+                       dtype=np.float32) -> CSRC:
+    """Build a square CSRC matrix from COO triplets whose pattern is
+    *already* structurally symmetric — the shape FEM assembly produces by
+    construction (every element contributes a dense symmetric block of
+    positions).  Skips the O(k) transpose-completion set walk of
+    :func:`symmetrize_pattern`; duplicate entries are summed as usual."""
+    return from_coo(rows, cols, vals, n=n, m=n, dtype=dtype,
+                    pad_pattern=False)
+
+
+def from_assembly(n: int, ia: Array, ja: Array, ad: Array, al: Array,
+                  au: Array, dtype=np.float32) -> CSRC:
+    """Assemble-side constructor: build a square CSRC container directly
+    from precomputed structure (``ia``/``ja`` — e.g. an
+    :class:`repro.assembly.scatter.AssemblySchedule`'s slot layout) and
+    freshly scattered value streams.  No dedup, no pattern work — this is
+    the value-refresh path FEM time stepping takes every step, so it must
+    stay O(k) array conversions only."""
+    ia = np.asarray(ia, dtype=np.int32)
+    ja = np.asarray(ja, dtype=np.int32)
+    ad = np.asarray(ad, dtype=dtype)
+    al = np.asarray(al, dtype=dtype)
+    au = np.asarray(au, dtype=dtype)
+    assert ia.shape == (n + 1,) and ad.shape == (n,)
+    assert al.shape == ja.shape == au.shape
+    num_sym = bool(ja.shape[0] == 0 or np.array_equal(al, au))
+    empty_i = np.zeros(n + 1, dtype=np.int32)
+    empty = np.zeros(0, dtype=np.int32)
+    return CSRC(
+        n=n, m=n,
+        ad=jnp.asarray(ad), ia=jnp.asarray(ia), ja=jnp.asarray(ja),
+        al=jnp.asarray(al), au=jnp.asarray(au),
+        iar=jnp.asarray(empty_i), jar=jnp.asarray(empty),
+        ar=jnp.asarray(empty.astype(dtype)),
+        numerically_symmetric=num_sym,
+    )
+
+
 def from_dense(A: Array, dtype=np.float32) -> CSRC:
     """Build from a dense matrix, keeping exact non-zero pattern (plus the
     symmetrizing explicit zeros)."""

@@ -21,6 +21,8 @@ those into one record per path (docs/DESIGN.md §3):
   load_artifact     the inverse; versioned via schedule.SCHEDULE_VERSION
   make_spmv         executor factory, x of shape (m,)
   make_spmm         executor factory, X of shape (m, r)
+  refresh_values    same-structure value-stream refresh (FEM time
+                    stepping; schedule.refresh_schedule) — optional
 
 ``register_path`` wires the name into ``plan.PATHS`` (so ``ExecutionPlan``
 validation accepts it) and makes the path visible to the operator, the
@@ -37,7 +39,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 from .plan import ExecutionPlan, kernel_window, register_path_name
 
@@ -58,6 +60,10 @@ class CandidateSpace:
     colorful_max_n: int = 2048
     partition: str = "nnz"
     accumulation: str = "allreduce"
+    # index-stream dtypes the windowed enumerators propose; 'int16' is
+    # emitted only where the pack supports it (window fits in 16 bits),
+    # letting the tuner trade index bandwidth per matrix
+    index_dtypes: Tuple[str, ...] = ("int32", "int16")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +79,11 @@ class KernelPath:
     load_artifact: Callable[..., dict]
     make_spmv: Callable[..., Callable]
     make_spmm: Callable[..., Callable]
+    # Same-structure value refresh (M, schedule) -> updated artifact field
+    # dict (schedule.refresh_schedule).  None means the path's artifact is
+    # purely structural (or absent) and is reused as-is — the executors
+    # read values from the matrix directly ('segment', 'colorful').
+    refresh_values: Optional[Callable[..., dict]] = None
 
 
 _REGISTRY: Dict[str, KernelPath] = {}
@@ -114,8 +125,15 @@ def _square_feasible(plan, *, n, m, bandwidth) -> bool:
 
 def _windowed_feasible(plan, *, n, m, bandwidth) -> bool:
     """Square matrix whose padded window fits under the plan's cap — the
-    bandwidth gate shared by the rectangular-grid and flat-grid kernels."""
-    return n == m and kernel_window(plan.tm, bandwidth) <= plan.w_cap
+    bandwidth gate shared by the rectangular-grid and flat-grid kernels.
+    An int16 index stream additionally needs the window (and its padding
+    sentinel, index == W) to fit in 16 bits."""
+    if n != m:
+        return False
+    w = kernel_window(plan.tm, bandwidth)
+    if w > plan.w_cap:
+        return False
+    return plan.index_dtype != "int16" or w + 1 <= 32767
 
 
 def _no_artifact(M, plan, coloring=None) -> dict:
@@ -135,7 +153,7 @@ def _empty_fields(plan) -> tuple:
 
 
 def _windowed_fields(plan) -> tuple:
-    return (plan.tm, plan.w_cap, plan.k_step_sublanes)
+    return (plan.tm, plan.w_cap, plan.k_step_sublanes, plan.index_dtype)
 
 
 def _windowed_candidates(path, stats, space):
@@ -143,12 +161,18 @@ def _windowed_candidates(path, stats, space):
     if stats.n != stats.m:
         return out
     for tm in space.tms:
-        if kernel_window(tm, stats.bandwidth) > space.w_cap:
+        w = kernel_window(tm, stats.bandwidth)
+        if w > space.w_cap:
             continue
         for ks in space.k_steps_sublanes:
-            out.append(ExecutionPlan(
-                path=path, tm=tm, w_cap=space.w_cap, k_step_sublanes=ks,
-                partition=space.partition, accumulation=space.accumulation))
+            for idt in space.index_dtypes:
+                if idt == "int16" and w + 1 > 32767:
+                    continue        # window overflows 16-bit offsets
+                out.append(ExecutionPlan(
+                    path=path, tm=tm, w_cap=space.w_cap,
+                    k_step_sublanes=ks, index_dtype=idt,
+                    partition=space.partition,
+                    accumulation=space.accumulation))
     return out
 
 
@@ -189,6 +213,11 @@ register_path(KernelPath(
 # 'kernel' — rectangular-grid block-ELL Pallas kernel (banded matrices)
 # ---------------------------------------------------------------------------
 
+def _index_dtype_of(plan):
+    import jax.numpy as jnp
+    return jnp.int16 if plan.index_dtype == "int16" else jnp.int32
+
+
 def _kernel_build(M, plan, coloring=None) -> dict:
     from . import blockell
     if not M.is_square:
@@ -197,7 +226,8 @@ def _kernel_build(M, plan, coloring=None) -> dict:
             "use 'segment' for rectangular matrices")
     BUILD_COUNTS["pack"] += 1
     return {"pack": blockell.pack(M, tm=plan.tm, k_step=plan.k_step,
-                                  w_cap=plan.w_cap)}
+                                  w_cap=plan.w_cap,
+                                  index_dtype=_index_dtype_of(plan))}
 
 
 def _kernel_save(sched):
@@ -233,6 +263,11 @@ def _kernel_load(meta, z) -> dict:
     )}
 
 
+def _kernel_refresh(M, sched) -> dict:
+    from . import blockell
+    return {"pack": blockell.refresh_values(sched.pack, M)}
+
+
 def _kernel_make_spmv(M, schedule, plan, *, interpret=True, coloring=None):
     from repro.kernels import csrc_spmv as kernel_mod
     return functools.partial(kernel_mod.blockell_spmv, schedule.pack,
@@ -257,6 +292,7 @@ register_path(KernelPath(
     load_artifact=_kernel_load,
     make_spmv=_kernel_make_spmv,
     make_spmm=_kernel_make_spmm,
+    refresh_values=_kernel_refresh,
 ))
 
 
@@ -372,7 +408,8 @@ def _flat_build(M, plan, coloring=None) -> dict:
             "use 'segment' for rectangular matrices")
     BUILD_COUNTS["flat_pack"] += 1
     return {"flat_pack": flat_mod.pack_flat(
-        M, tm=plan.tm, ks=plan.k_step_sublanes, w_cap=plan.w_cap)}
+        M, tm=plan.tm, ks=plan.k_step_sublanes, w_cap=plan.w_cap,
+        index_dtype=_index_dtype_of(plan))}
 
 
 def _flat_save(sched):
@@ -414,6 +451,11 @@ def _flat_load(meta, z) -> dict:
     )}
 
 
+def _flat_refresh(M, sched) -> dict:
+    from repro.kernels import csrc_spmv_flat as flat_mod
+    return {"flat_pack": flat_mod.refresh_flat_values(sched.flat_pack, M)}
+
+
 def _flat_make_spmv(M, schedule, plan, *, interpret=True, coloring=None):
     from repro.kernels import csrc_spmv_flat as flat_mod
     return functools.partial(flat_mod.flat_spmv, schedule.flat_pack,
@@ -436,4 +478,5 @@ register_path(KernelPath(
     load_artifact=_flat_load,
     make_spmv=_flat_make_spmv,
     make_spmm=_flat_make_spmm,
+    refresh_values=_flat_refresh,
 ))

@@ -33,6 +33,11 @@ cached, and shipped between processes instead of being hard-coded in
                      (1 = classic SpMV; >1 = multi-RHS SpMM, the batched
                      serving / block-Krylov shape).  Execution accepts any
                      width — nrhs records the tuned operating point.
+  index_dtype        index-stream dtype of the windowed packs ('kernel'/
+                     'flat'): 'int32' (default) or 'int16', which halves
+                     the index stream whenever the padded window fits in
+                     16 bits (local window offsets are small on banded
+                     matrices) — the tuner proposes both and measures.
 
 Plans are plain data: JSON-serializable, hashable, comparable.  The tuner
 (core/tuner.py) enumerates feasible plans from matrix statistics, measures
@@ -58,6 +63,11 @@ def register_path_name(name: str) -> None:
 
 PARTITIONS = ("nnz", "count")
 ACCUMULATIONS = ("allreduce", "reduce_scatter", "halo")
+# Index-stream dtypes the windowed packs support (blockell.pack /
+# csrc_spmv_flat.pack_flat): 'int16' halves the index stream whenever the
+# padded window fits (w_pad + 1 <= 32767) — the paper's §1 index
+# compression (Williams et al.) as a tunable plan field.
+INDEX_DTYPES = ("int32", "int16")
 
 LANES = 128                     # TPU lane count; sublane unit for k_step
 
@@ -77,6 +87,7 @@ class ExecutionPlan:
     partition: str = "nnz"
     accumulation: str = "allreduce"
     nrhs: int = 1
+    index_dtype: str = "int32"
 
     def __post_init__(self):
         if self.path not in PATHS:
@@ -100,6 +111,9 @@ class ExecutionPlan:
                 f"k_step_sublanes must be >= 1, got {self.k_step_sublanes}")
         if self.nrhs < 1:
             raise ValueError(f"nrhs must be >= 1, got {self.nrhs}")
+        if self.index_dtype not in INDEX_DTYPES:
+            raise ValueError(
+                f"index_dtype {self.index_dtype!r} not in {INDEX_DTYPES}")
 
     @property
     def k_step(self) -> int:
@@ -109,7 +123,8 @@ class ExecutionPlan:
         """Stable short identifier (used in cache timing tables and CSV)."""
         rhs = f":r{self.nrhs}" if self.nrhs != 1 else ""
         if self.path in ("kernel", "flat"):
-            return (f"{self.path}:tm{self.tm}:ks{self.k_step_sublanes}"
+            i16 = ":i16" if self.index_dtype == "int16" else ""
+            return (f"{self.path}:tm{self.tm}:ks{self.k_step_sublanes}{i16}"
                     f":{self.partition}:{self.accumulation}{rhs}")
         return f"{self.path}:{self.partition}:{self.accumulation}{rhs}"
 

@@ -58,10 +58,11 @@ from .partition import (RowPartition, halo_widths, partition_rows_by_count,
 from .paths import BUILD_COUNTS
 from .plan import ExecutionPlan
 
-# version 2: path-specific artifact sections are registry-serialized; adds
-# the flat-grid pack ('flat' path).  Version-1 files load as misses and
-# are rebuilt transparently.
-SCHEDULE_VERSION = 2
+# version 3: schedules record the matrix *structure* digest next to the
+# value digest, enabling the value-refresh fast path (FEM time stepping:
+# same structure, new values -> refresh streams, zero re-pack/re-color).
+# Version-2 files load as misses and are rebuilt transparently.
+SCHEDULE_VERSION = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +87,9 @@ class SpmvSchedule:
     color_slots: Optional[np.ndarray] = None
     color_slot_ptr: Optional[np.ndarray] = None
     flat_pack: Optional[object] = None       # 'flat' path (FlatBlockEll)
+    # exact-structure digest (ia/ja/iar/jar only — values excluded): the
+    # key of the value-refresh fast path (refresh_schedule)
+    structure_digest: str = ""
 
     def key(self) -> str:
         return schedule_key(self.fingerprint, self.value_digest, self.plan,
@@ -103,6 +107,7 @@ class SpmvSchedule:
             "value_digest": self.value_digest,
             "plan": self.plan.to_dict(),
             "n": self.n, "m": self.m, "p": self.p,
+            "structure_digest": self.structure_digest,
         }
         arrays = {
             "part_starts": np.asarray(self.partition.starts),
@@ -141,6 +146,7 @@ class SpmvSchedule:
             return cls(fingerprint=meta["fingerprint"],
                        value_digest=meta["value_digest"], plan=plan,
                        n=meta["n"], m=meta["m"], p=meta["p"],
+                       structure_digest=meta["structure_digest"],
                        partition=part, halo=z["halo"], **fields)
 
 
@@ -157,6 +163,22 @@ def value_digest(M: CSRC) -> str:
     for a in (M.ia, M.ja, M.ad, M.al, M.au, M.iar, M.jar, M.ar):
         arr = np.ascontiguousarray(np.asarray(a))
         h.update(arr.tobytes())
+    return h.hexdigest()[:16]
+
+
+def structure_digest(M: CSRC) -> str:
+    """Digest of the matrix *structure* only (ia/ja/iar/jar + shape).
+
+    Two matrices sharing it differ at most in values — the FEM
+    time-stepping shape (re-assembled stiffness on a fixed mesh).  For
+    such a pair every structural schedule artifact (partition, halo,
+    coloring, pack index streams) is identical; only the value streams
+    need refreshing (:func:`refresh_schedule`).
+    """
+    h = hashlib.sha1()
+    h.update(np.asarray([M.n, M.m], np.int64).tobytes())
+    for a in (M.ia, M.ja, M.iar, M.jar):
+        h.update(np.ascontiguousarray(np.asarray(a)).tobytes())
     return h.hexdigest()[:16]
 
 
@@ -223,7 +245,34 @@ def build_schedule(M: CSRC, plan: ExecutionPlan, p: int = 8,
 
     return SpmvSchedule(
         fingerprint=_fingerprint(M), value_digest=value_digest(M),
-        plan=plan, n=M.n, m=M.m, p=p, partition=part, halo=halo, **fields)
+        plan=plan, n=M.n, m=M.m, p=p, partition=part, halo=halo,
+        structure_digest=structure_digest(M), **fields)
+
+
+def refresh_schedule(sched: SpmvSchedule, M: CSRC) -> SpmvSchedule:
+    """Same-structure value refresh: a new schedule for ``M`` reusing every
+    structural artifact of ``sched`` (partition, halo, coloring, pack index
+    streams) and rebuilding only the value streams.
+
+    This is the FEM time-stepping fast path — the matrix is re-assembled
+    every step with unchanged connectivity, so re-packing or re-coloring
+    would redo O(nnz) structural work per step for nothing.  The path's
+    registry entry supplies the stream refresh ('kernel'/'flat' refill the
+    pack values vectorized); paths whose artifacts are purely structural
+    ('segment', 'colorful' — executors read values from ``M`` directly)
+    reuse the artifact as-is.  Raises ValueError when the structures do
+    not actually match.
+    """
+    if structure_digest(M) != sched.structure_digest:
+        raise ValueError(
+            "refresh_schedule: matrix structure differs from the "
+            "schedule's; a full rebuild (build_schedule) is required")
+    entry = paths_mod.get_path(sched.plan.path)
+    BUILD_COUNTS["value_refresh"] += 1
+    fields = ({} if entry.refresh_values is None
+              else entry.refresh_values(M, sched))
+    return dataclasses.replace(sched, value_digest=value_digest(M),
+                               **fields)
 
 
 def schedule_for(M: CSRC, plan: ExecutionPlan, cache=None, p: int = 8,
@@ -231,8 +280,12 @@ def schedule_for(M: CSRC, plan: ExecutionPlan, cache=None, p: int = 8,
     """The schedule to execute (M, plan) with — cache hit wins.
 
     ``cache`` is a :class:`~repro.core.tuner.PlanCache`; a hit performs zero
-    pack/partition/coloring work.  An explicit ``coloring`` override bypasses
-    the cache (custom colorings are caller-owned, not shared artifacts).
+    pack/partition/coloring work.  On a value-digest miss a same-structure
+    schedule (matching fingerprint + structure digest — FEM time stepping)
+    is value-refreshed instead of rebuilt (:func:`refresh_schedule`): only
+    the value streams are touched, no re-pack/re-partition/re-color.  An
+    explicit ``coloring`` override bypasses the cache (custom colorings are
+    caller-owned, not shared artifacts).
     """
     from .tuner import fingerprint as _fingerprint
 
@@ -243,8 +296,18 @@ def schedule_for(M: CSRC, plan: ExecutionPlan, cache=None, p: int = 8,
     hit = cache.get_schedule(fp, vd, plan, p)
     if hit is not None:
         return hit
-    sched = build_schedule(M, plan, p=p)
-    cache.put_schedule(sched)
+    base = cache.find_schedule_by_structure(fp, structure_digest(M), plan, p)
+    if base is not None:
+        sched = refresh_schedule(base, M)
+        # the refreshed generation supersedes the base in memory (one
+        # schedule per structure, not one per step); the npz already on
+        # disk keeps serving fresh processes, so skip re-compressing a
+        # full artifact per time step
+        cache.drop_schedule(base, remove_file=False)
+        cache.put_schedule(sched, persist=False)
+    else:
+        sched = build_schedule(M, plan, p=p)
+        cache.put_schedule(sched)
     return sched
 
 
@@ -395,19 +458,27 @@ _FLAT_SHARDS_MEMO: dict = {}
 _FLAT_HALO_MEMO: dict = {}
 
 
+def _plan_index_dtype(plan: ExecutionPlan):
+    import jax.numpy as jnp
+    return jnp.int16 if plan.index_dtype == "int16" else jnp.int32
+
+
 def build_flat_shards(M: CSRC, part: RowPartition, plan: ExecutionPlan):
     """Per-shard flat sub-packs over the schedule's row partition (global
     coordinates; allreduce / reduce_scatter strategies).  Memoized per
-    exact matrix + partition boundaries + pack geometry."""
+    exact matrix + partition boundaries + pack geometry (incl. the plan's
+    index-stream dtype)."""
     from repro.kernels.csrc_spmv_flat import pack_flat_shards
     memo_key = (value_digest(M), np.asarray(part.starts).tobytes(),
-                plan.tm, plan.k_step_sublanes, plan.w_cap)
+                plan.tm, plan.k_step_sublanes, plan.w_cap,
+                plan.index_dtype)
     hit = _FLAT_SHARDS_MEMO.get(memo_key)
     if hit is not None:
         return hit
     BUILD_COUNTS["flat_shards"] += 1
     out = pack_flat_shards(M, part.starts, tm=plan.tm,
-                           ks=plan.k_step_sublanes, w_cap=plan.w_cap)
+                           ks=plan.k_step_sublanes, w_cap=plan.w_cap,
+                           index_dtype=_plan_index_dtype(plan))
     _FLAT_SHARDS_MEMO[memo_key] = out
     return out
 
@@ -416,16 +487,17 @@ def build_flat_halo_layout(M: CSRC, p: int, plan: ExecutionPlan):
     """Per-shard local-coordinate flat packs for the halo strategy.
     Raises ValueError when the band does not fit inside one shard (same
     gate as :func:`build_halo_layout`).  Memoized per exact matrix +
-    shard count + pack geometry."""
+    shard count + pack geometry (incl. the plan's index-stream dtype)."""
     from repro.kernels.csrc_spmv_flat import pack_flat_halo
     memo_key = (value_digest(M), p, plan.tm, plan.k_step_sublanes,
-                plan.w_cap)
+                plan.w_cap, plan.index_dtype)
     hit = _FLAT_HALO_MEMO.get(memo_key)
     if hit is not None:
         return hit
     BUILD_COUNTS["flat_halo"] += 1
     out = pack_flat_halo(M, p, tm=plan.tm, ks=plan.k_step_sublanes,
-                         w_cap=plan.w_cap)
+                         w_cap=plan.w_cap,
+                         index_dtype=_plan_index_dtype(plan))
     _FLAT_HALO_MEMO[memo_key] = out
     return out
 

@@ -139,7 +139,8 @@ def enumerate_plans(stats: MatrixStats,
                     w_cap: int = 4096,
                     colorful_max_n: int = 2048,
                     p_hint: int = 8,
-                    nrhs_options=(1,)) -> List[ExecutionPlan]:
+                    nrhs_options=(1,),
+                    index_dtypes=("int32", "int16")) -> List[ExecutionPlan]:
     """All feasible candidate plans for a matrix with these statistics.
 
     Candidates come from the KernelPath registry (core/paths.py): every
@@ -160,12 +161,19 @@ def enumerate_plans(stats: MatrixStats,
     serving deployment can tune the batched SpMM operating point directly
     (the winning path may differ between nrhs=1 and nrhs=8: arithmetic
     intensity rises with the block).
+
+    ``index_dtypes`` controls the windowed paths' index-stream proposals:
+    with the default both int32 and (where the window fits in 16 bits)
+    int16 variants are measured, so the tuner trades index bandwidth per
+    matrix — SpMV is bandwidth-bound, and int16 halves 8 of ~16 streamed
+    bytes per slot.
     """
     partition, acc = _distributed_fields(stats, p_hint)
     space = paths_mod.CandidateSpace(
         tms=tuple(tms), k_steps_sublanes=tuple(k_steps_sublanes),
         w_cap=w_cap, colorful_max_n=colorful_max_n,
-        partition=partition, accumulation=acc)
+        partition=partition, accumulation=acc,
+        index_dtypes=tuple(index_dtypes))
     raw: List[ExecutionPlan] = []
     for entry in paths_mod.registered_paths():
         raw.extend(entry.candidates(stats, space))
@@ -240,6 +248,9 @@ class PlanCache:
         self.schedules: Dict[str, object] = {}
         self.schedule_hits = 0
         self.schedule_misses = 0
+        self.assembly_schedules: Dict[str, object] = {}
+        self.assembly_hits = 0
+        self.assembly_misses = 0
         if path is not None and os.path.exists(path):
             self._read(path)
 
@@ -321,9 +332,82 @@ class PlanCache:
         self.schedule_hits += 1
         return sched
 
-    def put_schedule(self, sched):
+    def put_schedule(self, sched, persist: bool = True):
+        """Store a schedule (memory, and — for path-backed caches — as an
+        npz beside the plans).  ``persist=False`` keeps it memory-only:
+        the value-refresh path uses it so per-step time stepping does not
+        re-compress a full npz (values + unchanged index streams) every
+        step; the structural generation already on disk keeps serving
+        fresh processes, which value-refresh from it on load."""
         key = sched.key()
         self.schedules[key] = sched
+        d = self._schedule_dir()
+        if persist and d is not None:
+            sched.save_npz(os.path.join(d, key + ".npz"))
+
+    def drop_schedule(self, sched, remove_file: bool = True):
+        """Evict a schedule from memory (and, by default, its npz).  Used
+        by the value-refresh path to replace a superseded value
+        generation: time stepping keeps exactly one schedule per
+        (structure, plan, p) in memory — the newest — so a 10k-step run
+        does not accumulate 10k dead value streams."""
+        key = sched.key()
+        self.schedules.pop(key, None)
+        d = self._schedule_dir()
+        if remove_file and d is not None:
+            try:
+                os.remove(os.path.join(d, key + ".npz"))
+            except OSError:
+                pass
+
+    def find_schedule_by_structure(self, fp: str, sdigest: str, plan,
+                                   p: int = 8):
+        """A cached schedule for the same matrix *structure* (fingerprint +
+        structure digest + plan artifact geometry + partition width) whose
+        values may differ — the FEM time-stepping fast path: the caller
+        refreshes value streams (``schedule.refresh_schedule``) instead of
+        re-packing/re-coloring.  In-memory schedules only: the scenario is
+        repeated refreshes within one serving/solver process."""
+        from .schedule import plan_artifact_fields
+        fields = plan_artifact_fields(plan)
+        for sched in self.schedules.values():
+            if (sched.fingerprint == fp and sched.p == p
+                    and sched.structure_digest == sdigest
+                    and plan_artifact_fields(sched.plan) == fields):
+                return sched
+        return None
+
+    # ---- assembly schedules (repro.assembly.scatter), stored beside the
+    # SpMV schedules and keyed by connectivity digest ----
+
+    def get_assembly_schedule(self, digest: str, num_buffers: int = 8):
+        """The cached AssemblySchedule for this connectivity digest, or
+        None.  Memory first, then the npz beside the cache — a hit means
+        zero structural assembly work (slot maps, coloring, buffers)."""
+        from repro.assembly.scatter import AssemblySchedule
+        key = f"asm-{digest}.b{num_buffers}"
+        sched = self.assembly_schedules.get(key)
+        if sched is None:
+            d = self._schedule_dir()
+            f = None if d is None else os.path.join(d, key + ".npz")
+            if f is not None and os.path.exists(f):
+                try:
+                    sched = AssemblySchedule.load_npz(f)
+                except Exception:      # stale version / truncated: rebuild
+                    sched = None
+                if sched is not None and sched.structure_digest != digest:
+                    sched = None
+                if sched is not None:
+                    self.assembly_schedules[key] = sched
+        if sched is None:
+            self.assembly_misses += 1
+            return None
+        self.assembly_hits += 1
+        return sched
+
+    def put_assembly_schedule(self, sched):
+        key = sched.key()
+        self.assembly_schedules[key] = sched
         d = self._schedule_dir()
         if d is not None:
             sched.save_npz(os.path.join(d, key + ".npz"))

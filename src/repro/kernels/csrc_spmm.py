@@ -29,8 +29,8 @@ def _kernel(vals_l_ref, vals_u_ref, col_ref, row_ref, ad_ref, x_ref,
     start = (b + 1) * tm
     xw = jax.lax.dynamic_slice(x_ref[...], (start, 0), (w_pad, nrhs))
 
-    cols = col_ref[0]
-    rows = row_ref[0]
+    cols = col_ref[0].astype(jnp.int32)   # int32/int16 stream, upcast
+    rows = row_ref[0].astype(jnp.int32)
     vl = vals_l_ref[0]
     vu = vl if num_symmetric else vals_u_ref[0]
     ks = cols.shape[0]

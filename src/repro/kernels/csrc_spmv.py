@@ -45,8 +45,9 @@ def _kernel(vals_l_ref, vals_u_ref, col_ref, row_ref, ad_ref, x_ref,
     start = (b + 1) * tm
     xw = jax.lax.dynamic_slice(x_ref[...], (start,), (w_pad,))  # (W,)
 
-    cols = col_ref[0]                     # (KS, 128) int32, sentinel == W
-    rows = row_ref[0]                     # (KS, 128) int32 in [W-tm, W)
+    # int32 or int16 stream (plan.index_dtype); upcast for the iota compare
+    cols = col_ref[0].astype(jnp.int32)   # (KS, 128), sentinel == W
+    rows = row_ref[0].astype(jnp.int32)   # (KS, 128) in [W-tm, W)
     vl = vals_l_ref[0]                    # (KS, 128) f32
     vu = vl if num_symmetric else vals_u_ref[0]
 

@@ -125,6 +125,8 @@ def pack_flat(M: CSRC, tm: int = 128, ks: int = 8, w_cap: int = 4096,
     n = M.n
     band = bandwidth(M)
     w_pad = _round_up(tm + band, max(128, tm))
+    if index_dtype == jnp.int16 and w_pad + 1 > 32767:
+        raise ValueError(f"window {w_pad} overflows int16 indices")
     if w_pad > w_cap:
         raise ValueError(f"window {w_pad} > cap {w_cap}")
     nt = max(1, -(-n // tm))
@@ -152,6 +154,46 @@ def pack_flat(M: CSRC, tm: int = 128, ks: int = 8, w_cap: int = 4096,
         num_symmetric=bool(M.numerically_symmetric),
         pad_ratio=float(total * step) / k,
     )
+
+
+def refresh_flat_values(pack: FlatBlockEll, M: CSRC) -> FlatBlockEll:
+    """Refill a flat pack's value streams from a same-structure matrix
+    (FEM time stepping): the step/position map is re-derived vectorized
+    from the row pointers — identical to the original fill order (the
+    packer's stable sort over a non-decreasing tile array is the identity)
+    — and no index stream or tile map is touched."""
+    assert M.is_square and M.n == pack.n, "structure mismatch"
+    if bool(M.numerically_symmetric) != pack.num_symmetric:
+        raise ValueError(
+            "numeric symmetry changed; rebuild instead of refreshing")
+    ros = row_of_slot(M)
+    k = ros.shape[0]
+    step = pack.ks * 128
+    tile = ros // pack.tm
+    counts = np.bincount(tile, minlength=pack.nt)
+    nk = np.maximum(1, -(-counts // step))
+    starts = np.concatenate([[0], np.cumsum(nk)])[:-1]
+    first_slot = np.searchsorted(tile, np.arange(pack.nt))
+    q = np.arange(k) - first_slot[tile]
+    j = starts[tile] + q // step
+    pos = q % step
+    vals_l = np.zeros((pack.total_steps, step), np.float32)
+    vals_l[j, pos] = np.asarray(M.al)
+    if pack.num_symmetric:           # vals_u aliases vals_l; skip the fill
+        vals_u = vals_l
+    else:
+        vals_u = np.zeros((pack.total_steps, step), np.float32)
+        vals_u[j, pos] = np.asarray(M.au)
+    ad = np.zeros((pack.nt, pack.tm), np.float32)
+    ad.reshape(-1)[:pack.n] = np.asarray(M.ad)
+    vdtype = pack.vals_l.dtype
+    return dataclasses.replace(
+        pack,
+        vals_l=jnp.asarray(vals_l.reshape(pack.total_steps, pack.ks, 128),
+                           dtype=vdtype),
+        vals_u=jnp.asarray(vals_u.reshape(pack.total_steps, pack.ks, 128),
+                           dtype=vdtype),
+        ad=jnp.asarray(ad, dtype=pack.ad.dtype))
 
 
 def _kernel(tile_ref, first_ref, vals_l_ref, vals_u_ref, col_ref, row_ref,
@@ -310,7 +352,8 @@ def flat_spmm(pack: FlatBlockEll, X: jnp.ndarray,
 # (consumed through core/schedule.py's memoized builders)
 # ---------------------------------------------------------------------------
 
-def _stack_shard_packs(slot_sets, *, nt, tm, w_pad, step, num_symmetric):
+def _stack_shard_packs(slot_sets, *, nt, tm, w_pad, step, num_symmetric,
+                       index_dtype=jnp.int32):
     """Build one flat pack per shard and stack on a leading shard axis.
 
     ``slot_sets`` yields (ros, ja, al, au) per shard.  Step counts are
@@ -336,7 +379,11 @@ def _stack_shard_packs(slot_sets, *, nt, tm, w_pad, step, num_symmetric):
         out["row_in_win"].append(rw.reshape(steps, ks, 128))
         out["tile_of_step"].append(tos)
         out["first_of_tile"].append(first)
-    return steps, {k: jnp.asarray(np.stack(v)) for k, v in out.items()}
+    arrays = {}
+    for k, v in out.items():
+        dt = index_dtype if k in ("col_local", "row_in_win") else None
+        arrays[k] = jnp.asarray(np.stack(v), dtype=dt)
+    return steps, arrays
 
 
 @dataclasses.dataclass(frozen=True)
@@ -375,13 +422,16 @@ class FlatShards:
 
 
 def pack_flat_shards(M: CSRC, starts, tm: int = 128, ks: int = 8,
-                     w_cap: int = 4096) -> FlatShards:
+                     w_cap: int = 4096,
+                     index_dtype=jnp.int32) -> FlatShards:
     """Split a square CSRC matrix into per-shard flat packs along the row
     partition ``starts`` ((p+1,) boundaries from the schedule layer)."""
     assert M.is_square
     n = M.n
     band = bandwidth(M)
     w_pad = _round_up(tm + band, max(128, tm))
+    if index_dtype == jnp.int16 and w_pad + 1 > 32767:
+        raise ValueError(f"window {w_pad} overflows int16 indices")
     if w_pad > w_cap:
         raise ValueError(f"window {w_pad} > cap {w_cap}")
     nt = max(1, -(-n // tm))
@@ -400,7 +450,7 @@ def pack_flat_shards(M: CSRC, starts, tm: int = 128, ks: int = 8,
 
     steps, arrays = _stack_shard_packs(
         list(slot_sets()), nt=nt, tm=tm, w_pad=w_pad, step=step,
-        num_symmetric=M.numerically_symmetric)
+        num_symmetric=M.numerically_symmetric, index_dtype=index_dtype)
 
     ad = np.zeros((p, nt * tm), np.float32)
     ad_full = np.asarray(M.ad)
@@ -450,7 +500,7 @@ class FlatHalo:
 
 
 def pack_flat_halo(M: CSRC, p: int, tm: int = 128, ks: int = 8,
-                   w_cap: int = 4096) -> FlatHalo:
+                   w_cap: int = 4096, index_dtype=jnp.int32) -> FlatHalo:
     """Per-shard local flat packs for the halo strategy.  Raises ValueError
     when the band does not fit inside one shard (same feasibility gate as
     schedule.build_halo_layout) or the local window exceeds ``w_cap``."""
@@ -466,6 +516,8 @@ def pack_flat_halo(M: CSRC, p: int, tm: int = 128, ks: int = 8,
     n_local = ns + h
     # every local row i stores columns in [i-h, i]: bandwidth_local <= h
     w_pad = _round_up(tm + h, max(128, tm))
+    if index_dtype == jnp.int16 and w_pad + 1 > 32767:
+        raise ValueError(f"window {w_pad} overflows int16 indices")
     if w_pad > w_cap:
         raise ValueError(f"window {w_pad} > cap {w_cap}")
     nt = max(1, -(-n_local // tm))
@@ -486,7 +538,7 @@ def pack_flat_halo(M: CSRC, p: int, tm: int = 128, ks: int = 8,
 
     steps, arrays = _stack_shard_packs(
         list(slot_sets()), nt=nt, tm=tm, w_pad=w_pad, step=step,
-        num_symmetric=M.numerically_symmetric)
+        num_symmetric=M.numerically_symmetric, index_dtype=index_dtype)
 
     ad = np.zeros((p, nt * tm), np.float32)
     ad_full = np.asarray(M.ad)

@@ -94,12 +94,18 @@ class SpmvOperator:
                 f"schedule was built for {schedule.plan.key()} and cannot "
                 f"execute plan {plan.key()}")
         self.plan = plan
-        self.schedule = schedule
         self.path = plan.path
+        self.interpret = interpret
+        self._bind(M, schedule, coloring=coloring)
+
+    def _bind(self, M: CSRC, schedule, coloring=None):
+        """Install the schedule and (re)build both jit'd executors through
+        the registry — shared by construction and ``update_values``."""
+        self.M = M
+        self.schedule = schedule
         self.pack = (schedule.pack if schedule.pack is not None
                      else schedule.flat_pack)
         self.coloring = schedule.coloring if coloring is None else coloring
-        self.interpret = interpret
 
         # registry dispatch: the path's KernelPath entry builds both
         # executors from the schedule artifact (no per-path if chain here)
@@ -108,16 +114,29 @@ class SpmvOperator:
         except KeyError as e:
             raise ValueError(str(e)) from None
         spmv_fn = entry.make_spmv(
-            M, schedule, plan, interpret=interpret, coloring=coloring)
+            M, schedule, self.plan, interpret=self.interpret,
+            coloring=coloring)
         if entry.make_spmm is entry.make_spmv:
             # one factory registered for both shapes (e.g. colorful):
             # construct once, share the executor
             spmm_fn = spmv_fn
         else:
             spmm_fn = entry.make_spmm(
-                M, schedule, plan, interpret=interpret, coloring=coloring)
+                M, schedule, self.plan, interpret=self.interpret,
+                coloring=coloring)
         self._fn = jax.jit(spmv_fn)
         self._fn_mm = jax.jit(spmm_fn)
+
+    def update_values(self, M: CSRC) -> "SpmvOperator":
+        """Value-refresh fast path: swap in a matrix with **identical
+        structure** (FEM time stepping — re-assembled values on a fixed
+        connectivity).  Only the schedule's value streams are refreshed
+        (``schedule.refresh_schedule``); no re-pack, no re-partition, no
+        re-coloring — ``BUILD_COUNTS`` records a single ``value_refresh``.
+        Raises ValueError when the structure actually differs."""
+        refreshed = schedule_mod.refresh_schedule(self.schedule, M)
+        self._bind(M, refreshed)
+        return self
 
     @classmethod
     def from_plan(cls, M: CSRC, plan: ExecutionPlan,

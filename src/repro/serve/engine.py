@@ -152,7 +152,15 @@ class SpmvServingEngine:
         self._uid = 0
 
     def register(self, matrix_id: str, M):
-        """Install a matrix; returns the ExecutionPlan it will run with."""
+        """Install a matrix; returns the ExecutionPlan it will run with.
+
+        Registering a matrix whose *structure* is already known to the
+        cache (FEM time stepping: same connectivity, re-assembled values)
+        takes the value-refresh fast path through ``schedule_for`` — the
+        plan is a fingerprint hit and the schedule only refreshes value
+        streams, zero re-pack/re-partition/re-coloring (the
+        ``BUILD_COUNTS`` probe asserts it).
+        """
         from repro.core import tuner as _tuner
         from repro.kernels.ops import SpmvOperator
         plan = _tuner.plan_for(M, cache=self.cache, autotune=self.autotune,
@@ -161,6 +169,16 @@ class SpmvServingEngine:
         self._ops[matrix_id] = SpmvOperator.from_plan(
             M, plan, interpret=self.interpret, cache=self.cache)
         return plan
+
+    def update_values(self, matrix_id: str, M):
+        """In-place value refresh of a registered matrix (structure must
+        be unchanged): ``SpmvOperator.update_values`` swaps the value
+        streams without any structural rebuild."""
+        if matrix_id not in self._ops:
+            raise KeyError(f"matrix {matrix_id!r} not registered")
+        self._matrices[matrix_id] = M
+        self._ops[matrix_id].update_values(M)
+        return self._ops[matrix_id].plan
 
     def plan(self, matrix_id: str):
         return self._ops[matrix_id].plan

@@ -1,0 +1,370 @@
+"""The FEM assembly subsystem (repro.assembly): conflict-free CSRC
+construction feeding the SpMV stack.
+
+Covers: mesh generator invariants, element-coloring conflict-freeness,
+bit-for-bit agreement of the colored / private-buffer strategies with the
+serial oracle (the dyadic stiffness synthesis makes float32 accumulation
+order-independent, so equality is exact — any race or dropped
+contribution fails hard), AssemblySchedule cache/disk round-trips with
+zero-rebuild probes, assembled matrices through the SpMV dense oracle for
+nrhs in {1, 3, 8}, and the end-to-end assemble → tune → solve pipeline
+including the value-refresh fast path for time stepping."""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _propshim import given, settings, st
+from repro.assembly import mesh as amesh
+from repro.assembly import (assemble, assemble_mesh, assembly_schedule_for,
+                            build_assembly_schedule, color_elements,
+                            element_dofs, scatter_colored, scatter_private,
+                            scatter_serial, verify_element_coloring)
+from repro.assembly import scatter as scatter_mod
+from repro.core import csrc, schedule as S, tuner
+from repro.core.plan import ExecutionPlan
+from repro.core.solvers import cg_solve
+from repro.kernels import ops
+
+
+def _build_delta(fn):
+    """Run fn and return (result, builds-that-happened) from the probe."""
+    before = dict(S.BUILD_COUNTS)
+    out = fn()
+    after = dict(S.BUILD_COUNTS)
+    delta = {k: after.get(k, 0) - before.get(k, 0)
+             for k in set(after) | set(before)}
+    return out, {k: v for k, v in delta.items() if v}
+
+
+MESHES = [
+    ("tri", lambda: amesh.grid_tri(5)),
+    ("quad", lambda: amesh.grid_quad(4)),
+    ("tet", lambda: amesh.grid_tet(2)),
+]
+MESH_IDS = [n for n, _ in MESHES]
+
+
+def _dense_oracle(mesh, ke, ndof_per_node=1):
+    """Independent dense assembly: float64 loop over elements — shares no
+    code with the scatter strategies."""
+    ed = element_dofs(mesh.conn, ndof_per_node)
+    n = mesh.num_nodes * ndof_per_node
+    A = np.zeros((n, n), np.float64)
+    for e in range(mesh.ne):
+        dofs = ed[e]
+        A[np.ix_(dofs, dofs)] += np.asarray(ke[e], np.float64)
+    return A
+
+
+# ---------------------------------------------------------------------------
+# Mesh generators and stiffness synthesis
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,make", MESHES, ids=MESH_IDS)
+def test_mesh_generators_wellformed(name, make):
+    mesh = make()
+    assert mesh.conn.min() >= 0
+    assert mesh.conn.max() < mesh.num_nodes
+    assert mesh.coords.shape == (mesh.num_nodes, mesh.dim)
+    # every element's nodes are distinct
+    for e in range(mesh.ne):
+        assert len(set(mesh.conn[e].tolist())) == mesh.nen
+    vols = amesh.element_volumes(mesh)
+    assert (vols > 0).all(), f"{name}: non-positive element volume"
+
+
+def test_tet_mesh_covers_the_cube():
+    """Kuhn triangulation: 6 tets per cube, volumes sum to the domain."""
+    mesh = amesh.grid_tet(2)
+    assert mesh.ne == 6 * 2 * 2 * 2
+    assert amesh.element_volumes(mesh).sum() == pytest.approx(8.0)
+
+
+def test_stiffness_is_dyadic_and_symmetric():
+    """The synthesis contract: entries are multiples of 1/64 (exact in
+    float32, order-independent accumulation) and element-symmetric."""
+    for name, make in MESHES:
+        mesh = make()
+        for ke in (amesh.poisson_stiffness(mesh, mass=0.5),
+                   amesh.synthetic_stiffness(mesh, seed=3)):
+            assert ke.dtype == np.float32
+            scaled = np.asarray(ke, np.float64) * amesh.QUANTUM
+            np.testing.assert_array_equal(scaled, np.round(scaled))
+            np.testing.assert_array_equal(ke, np.swapaxes(ke, 1, 2))
+
+
+def test_element_dofs_interleaved():
+    conn = np.asarray([[0, 2, 3]])
+    ed = element_dofs(conn, ndof_per_node=2)
+    np.testing.assert_array_equal(ed, [[0, 1, 4, 5, 6, 7]])
+    np.testing.assert_array_equal(element_dofs(conn, 1), conn)
+
+
+# ---------------------------------------------------------------------------
+# Element coloring (conflict graph)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,make", MESHES, ids=MESH_IDS)
+def test_element_coloring_conflict_free(name, make):
+    """Satellite invariant: no two same-color elements share a DOF, and
+    every element is covered exactly once."""
+    mesh = make()
+    col = color_elements(mesh.conn)
+    assert verify_element_coloring(mesh.conn, col)
+    covered = sorted(np.concatenate(
+        [col.rows(c) for c in range(col.num_colors)]).tolist())
+    assert covered == list(range(mesh.ne))
+
+
+def test_element_coloring_balancing_preserves_invariant():
+    mesh = amesh.grid_tri(6)
+    raw = color_elements(mesh.conn, balance=False)
+    bal = color_elements(mesh.conn, balance=True)
+    assert bal.num_colors <= raw.num_colors
+    assert verify_element_coloring(mesh.conn, bal)
+
+
+# ---------------------------------------------------------------------------
+# Assembly strategies vs the serial oracle (exact)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,make", MESHES, ids=MESH_IDS)
+def test_assembled_poisson_matches_dense_oracle(name, make):
+    """Acceptance: the assembled Poisson matrix equals the independent
+    dense float64 oracle bit-for-bit on every mesh generator."""
+    mesh = make()
+    ke = amesh.poisson_stiffness(mesh, mass=0.5)
+    sched = build_assembly_schedule(mesh)
+    M = assemble(sched, ke, strategy="colored")
+    A = _dense_oracle(mesh, ke)
+    np.testing.assert_array_equal(csrc.to_dense(M).astype(np.float64), A)
+    assert M.numerically_symmetric
+
+
+@pytest.mark.parametrize("name,make", [MESHES[0], MESHES[2]],
+                         ids=["tri", "tet"])
+def test_assembled_elasticity_matches_dense_oracle(name, make):
+    """Vector-valued DOFs (ndof_per_node=2, the elasticity shape)."""
+    mesh = make()
+    ke = amesh.synthetic_stiffness(mesh, ndof_per_node=2, seed=7)
+    sched = build_assembly_schedule(mesh, ndof_per_node=2)
+    M = assemble(sched, ke, strategy="colored")
+    A = _dense_oracle(mesh, ke, ndof_per_node=2)
+    np.testing.assert_array_equal(csrc.to_dense(M).astype(np.float64), A)
+
+
+@pytest.mark.parametrize("name,make", MESHES, ids=MESH_IDS)
+def test_all_strategies_bit_identical(name, make):
+    """Colored and private-buffer scatters must equal the serial oracle
+    exactly — the race detector the dyadic synthesis enables."""
+    mesh = make()
+    ke = amesh.synthetic_stiffness(mesh, seed=11)
+    sched = build_assembly_schedule(mesh)
+    ref = scatter_serial(sched, ke)
+    np.testing.assert_array_equal(np.asarray(scatter_colored(sched, ke)),
+                                  ref)
+    np.testing.assert_array_equal(np.asarray(scatter_private(sched, ke)),
+                                  ref)
+
+
+def test_private_buffer_width_does_not_change_result():
+    mesh = amesh.grid_tri(5)
+    ke = amesh.synthetic_stiffness(mesh, seed=2)
+    ref = scatter_serial(build_assembly_schedule(mesh), ke)
+    for nb in (1, 3, 16, 1000):
+        sched = build_assembly_schedule(mesh, num_buffers=nb)
+        assert sched.num_buffers <= mesh.ne
+        np.testing.assert_array_equal(
+            np.asarray(scatter_private(sched, ke)), ref)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(2, 7), st.integers(0, 1000))
+def test_property_random_tri_assembly_exact(nx, seed):
+    mesh = amesh.grid_tri(nx)
+    ke = amesh.synthetic_stiffness(mesh, seed=seed)
+    sched = build_assembly_schedule(mesh)
+    ref = scatter_serial(sched, ke)
+    np.testing.assert_array_equal(np.asarray(scatter_colored(sched, ke)),
+                                  ref)
+    A = _dense_oracle(mesh, ke)
+    M = assemble(sched, ke)
+    np.testing.assert_array_equal(csrc.to_dense(M).astype(np.float64), A)
+
+
+# ---------------------------------------------------------------------------
+# AssemblySchedule caching (PlanCache, disk, zero-rebuild probes)
+# ---------------------------------------------------------------------------
+
+def test_assembly_schedule_cache_hit_zero_builds():
+    mesh = amesh.grid_tri(5)
+    cache = tuner.PlanCache()
+    _, d1 = _build_delta(lambda: assembly_schedule_for(mesh, cache=cache))
+    assert d1.get("assembly_schedule") == 1
+    assert d1.get("element_coloring") == 1
+    _, d2 = _build_delta(lambda: assembly_schedule_for(mesh, cache=cache))
+    assert d2 == {}, f"cache hit rebuilt: {d2}"
+    assert cache.assembly_hits == 1
+
+
+def test_assembly_cache_hits_when_fewer_elements_than_buffers():
+    """Regression: the builder clamps num_buffers to ne; the cache lookup
+    must use the same clamp or the key never matches (tiny meshes would
+    silently rebuild the schedule every step)."""
+    mesh = amesh.grid_tri(1)                   # ne=2 < default 8 buffers
+    cache = tuner.PlanCache()
+    s1, d1 = _build_delta(lambda: assembly_schedule_for(mesh, cache=cache))
+    assert s1.num_buffers == mesh.ne
+    assert d1.get("assembly_schedule") == 1
+    s2, d2 = _build_delta(lambda: assembly_schedule_for(mesh, cache=cache))
+    assert d2 == {} and s2 is s1, f"tiny-mesh cache miss: {d2}"
+
+
+def test_assembly_schedule_npz_roundtrip_through_disk_cache(tmp_path):
+    """A fresh process (new cache object on the same file) loads the npz
+    and rebuilds nothing; assembled matrices are bit-identical."""
+    path = os.path.join(tmp_path, "plans.json")
+    mesh = amesh.grid_tet(2)
+    ke = amesh.synthetic_stiffness(mesh, seed=5)
+    cache = tuner.PlanCache(path=path)
+    s1 = assembly_schedule_for(mesh, cache=cache)
+    cache2 = tuner.PlanCache(path=path)            # "new process"
+    s2, d = _build_delta(lambda: assembly_schedule_for(mesh, cache=cache2))
+    assert d == {}, f"disk hit rebuilt: {d}"
+    for f in ("ia", "ja", "targets", "buffer_elements"):
+        np.testing.assert_array_equal(getattr(s1, f), getattr(s2, f))
+    np.testing.assert_array_equal(csrc.to_dense(assemble(s1, ke)),
+                                  csrc.to_dense(assemble(s2, ke)))
+
+
+def test_assembly_version_mismatch_invalidates(tmp_path, monkeypatch):
+    path = os.path.join(tmp_path, "plans.json")
+    mesh = amesh.grid_tri(4)
+    cache = tuner.PlanCache(path=path)
+    assembly_schedule_for(mesh, cache=cache)
+    monkeypatch.setattr(scatter_mod, "ASSEMBLY_VERSION",
+                        scatter_mod.ASSEMBLY_VERSION + 1)
+    cache2 = tuner.PlanCache(path=path)
+    _, d = _build_delta(lambda: assembly_schedule_for(mesh, cache=cache2))
+    assert d.get("assembly_schedule") == 1     # rebuilt, not crashed
+
+
+def test_structure_digest_discriminates():
+    m1, m2 = amesh.grid_tri(4), amesh.grid_tri(5)
+    from repro.assembly import structure_digest
+    assert structure_digest(m1.conn) != structure_digest(m2.conn)
+    assert (structure_digest(m1.conn, ndof_per_node=2)
+            != structure_digest(m1.conn))
+    assert structure_digest(m1.conn) == structure_digest(m1.conn.copy())
+
+
+# ---------------------------------------------------------------------------
+# Assembled matrices through the SpMV stack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nrhs", [1, 3, 8])
+def test_assembled_matrix_all_spmv_plans_dense_oracle(nrhs):
+    """Acceptance: the assembled matrix executes through every feasible
+    registry path (kernel/flat/segment/colorful, int32 and int16 index
+    streams) and matches the dense oracle for nrhs in {1, 3, 8}."""
+    mesh = amesh.grid_tri(5)
+    ke = amesh.poisson_stiffness(mesh, mass=0.5)
+    M = assemble(build_assembly_schedule(mesh), ke)
+    A = csrc.to_dense(M).astype(np.float64)
+    X = np.random.default_rng(nrhs).standard_normal(
+        (M.m, nrhs)).astype(np.float32)
+    Y_ref = A @ X.astype(np.float64)
+    scale = max(1.0, np.abs(Y_ref).max())
+    plans = tuner.enumerate_plans(tuner.stats_of(M), tms=(8,))
+    assert any(p.path == "kernel" for p in plans)
+    for plan in plans:
+        op = ops.SpmvOperator.from_plan(M, plan)
+        Y = np.asarray(op(jnp.asarray(X)), dtype=np.float64)
+        np.testing.assert_allclose(Y / scale, Y_ref / scale,
+                                   rtol=2e-4, atol=2e-4,
+                                   err_msg=f"plan {plan.key()}")
+
+
+def test_time_stepping_reuses_everything():
+    """FEM time stepping: re-assembly with unchanged connectivity reuses
+    the assembly schedule AND the SpMV schedule — the second step performs
+    exactly one value refresh, zero structural rebuilds."""
+    mesh = amesh.grid_tri(6)
+    cache = tuner.PlanCache()
+    plan = ExecutionPlan(path="kernel", tm=8)
+    sched = assembly_schedule_for(mesh, cache=cache)
+
+    def step(t):
+        ke = amesh.poisson_stiffness(mesh, mass=0.5 + 0.25 * t)
+        return assemble(sched, ke, strategy="colored")
+
+    M0 = step(0)
+    op, d0 = _build_delta(
+        lambda: ops.SpmvOperator.from_plan(M0, plan, cache=cache))
+    assert d0.get("pack") == 1
+    M1 = step(1)
+    op1, d1 = _build_delta(
+        lambda: ops.SpmvOperator.from_plan(M1, plan, cache=cache))
+    assert d1 == {"value_refresh": 1}, f"structural rebuild: {d1}"
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(M1.m)
+                    .astype(np.float32))
+    ref = csrc.to_dense(M1).astype(np.float64) @ np.asarray(x, np.float64)
+    scale = max(1.0, np.abs(ref).max())
+    np.testing.assert_allclose(
+        np.asarray(op1(x), np.float64) / scale, ref / scale,
+        rtol=2e-4, atol=2e-4)
+    # in-place refresh of the existing operator: same probe, same result
+    _, d2 = _build_delta(lambda: op.update_values(M1))
+    assert d2 == {"value_refresh": 1}
+    np.testing.assert_array_equal(np.asarray(op(x)), np.asarray(op1(x)))
+
+
+def test_end_to_end_assemble_tune_solve():
+    """The acceptance demo: assemble a Poisson system from a mesh, tune
+    it, solve with cg_solve; the solution matches the dense solve."""
+    mesh = amesh.grid_tri(6)
+    ke = amesh.poisson_stiffness(mesh, mass=1.0)
+    cache = tuner.PlanCache()
+    M, sched = assemble_mesh(mesh, ke, cache=cache)
+    # colored assembly matches the serial oracle exactly
+    np.testing.assert_array_equal(
+        csrc.to_dense(M), csrc.to_dense(assemble(sched, ke, "serial")))
+    # tune (deterministic injected measure), then solve through the cache
+    res = tuner.tune(M, cache=cache,
+                     measure=lambda op, x: 1.0 if op.plan.path == "kernel"
+                     else 2.0)
+    assert res.plan.path == "kernel"
+    A = csrc.to_dense(M).astype(np.float64)
+    x_true = np.random.default_rng(3).standard_normal(M.n)
+    b = jnp.asarray(A @ x_true, dtype=jnp.float32)
+    sol, op = cg_solve(M, b, cache=cache, tol=1e-7, maxiter=2000)
+    assert bool(sol.converged)
+    assert op.plan == res.plan                 # solved with the tuned plan
+    np.testing.assert_allclose(np.asarray(sol.x, np.float64), x_true,
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_serving_time_stepping_value_refresh():
+    """Re-registering a re-assembled (same-structure) matrix in the
+    serving engine refreshes value streams only — the satellite's
+    zero-structural-rebuild probe."""
+    from repro.serve.engine import SpmvServingEngine
+    mesh = amesh.grid_tri(6)
+    sched = build_assembly_schedule(mesh)
+    M0 = assemble(sched, amesh.poisson_stiffness(mesh, mass=0.5))
+    M1 = assemble(sched, amesh.poisson_stiffness(mesh, mass=1.5))
+    eng = SpmvServingEngine(cache=tuner.PlanCache())
+    eng.register("fem", M0)
+    _, d = _build_delta(lambda: eng.register("fem", M1))
+    assert d == {"value_refresh": 1}, f"structural rebuild: {d}"
+    _, d2 = _build_delta(lambda: eng.update_values(
+        "fem", assemble(sched, amesh.poisson_stiffness(mesh, mass=2.5))))
+    assert d2 == {"value_refresh": 1}
+    x = np.random.default_rng(1).standard_normal(M1.m).astype(np.float32)
+    uid = eng.submit("fem", x)
+    out = eng.run_until_drained()
+    M2 = assemble(sched, amesh.poisson_stiffness(mesh, mass=2.5))
+    np.testing.assert_allclose(out[uid], csrc.to_dense(M2) @ x,
+                               rtol=2e-4, atol=2e-4)

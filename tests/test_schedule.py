@@ -2,6 +2,7 @@
 zero re-pack/re-color, bit-identical execution from deserialized artifacts,
 balanced largest-degree-first coloring invariants, and multi-RHS SpMM vs
 the dense oracle across all three paths."""
+import dataclasses
 import os
 
 import numpy as np
@@ -75,7 +76,10 @@ def test_cache_hit_skips_all_precompute():
 
 def test_same_class_different_values_does_not_share_schedule():
     """fingerprint() keys a matrix *class*; the schedule embeds values, so
-    a same-class matrix with different values must rebuild, not reuse."""
+    a same-class matrix with different values must never silently reuse
+    another matrix's value streams.  With an identical *structure* the
+    schedule layer satisfies that via the value-refresh fast path (new
+    streams, zero structural rebuild) instead of a full re-pack."""
     M1 = csrc.fem_band(64, 3, seed=7)
     M2 = csrc.from_dense(2.0 * csrc.to_dense(M1))       # same structure
     assert tuner.fingerprint(M1) == tuner.fingerprint(M2)
@@ -83,12 +87,16 @@ def test_same_class_different_values_does_not_share_schedule():
     cache = tuner.PlanCache()
     plan = ExecutionPlan(path="kernel", tm=8)
     op1 = ops.SpmvOperator.from_plan(M1, plan, cache=cache)
-    _, d = _build_delta(
+    op2, d = _build_delta(
         lambda: ops.SpmvOperator.from_plan(M2, plan, cache=cache))
-    assert d.get("pack") == 1        # rebuilt — no silent value reuse
+    # M2's own value streams were installed (no silent reuse of M1's) ...
+    assert d == {"value_refresh": 1}
+    # ... and the results really are M2's, i.e. 2x M1's
     x = jnp.asarray(np.random.default_rng(1).standard_normal(M1.m)
                     .astype(np.float32))
-    del op1
+    np.testing.assert_allclose(np.asarray(op2(x)),
+                               2.0 * np.asarray(op1(x)),
+                               rtol=1e-6, atol=1e-6)
 
 
 def test_schedule_npz_roundtrip_through_disk_cache(tmp_path):
@@ -335,3 +343,197 @@ def test_serving_step_coalesces_into_one_spmm():
     assert calls == [2], f"expected one batched SpMM call, got {calls}"
     for uid, x in zip(uids, xs):
         np.testing.assert_allclose(out[uid], A @ x, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Value-refresh fast path (same structure, new values — FEM time stepping)
+# ---------------------------------------------------------------------------
+
+def _same_structure_scaled(M, factor=1.5, shift=0.25):
+    """A matrix with identical structure but different values."""
+    A = csrc.to_dense(M)
+    return csrc.from_dense(np.where(A != 0, A * factor + shift, 0.0))
+
+
+@pytest.mark.parametrize("path,tm", [("kernel", 8), ("flat", 8),
+                                     ("colorful", 8), ("segment", 8)])
+def test_schedule_value_refresh_skips_structural_rebuild(path, tm):
+    """On a value-digest miss with a same-structure schedule cached, the
+    schedule layer refreshes value streams only: exactly one value_refresh,
+    no pack/partition/coloring/schedule build — on every path."""
+    M1 = csrc.skewed_band(96, 12, 3, seed=2)
+    M2 = _same_structure_scaled(M1)
+    assert S.structure_digest(M1) == S.structure_digest(M2)
+    assert S.value_digest(M1) != S.value_digest(M2)
+    cache = tuner.PlanCache()
+    plan = ExecutionPlan(path=path, tm=tm)
+    ops.SpmvOperator.from_plan(M1, plan, cache=cache)
+    op2, d = _build_delta(
+        lambda: ops.SpmvOperator.from_plan(M2, plan, cache=cache))
+    assert d == {"value_refresh": 1}, f"{path}: structural rebuild {d}"
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(M2.m)
+                    .astype(np.float32))
+    ref = csrc.to_dense(M2).astype(np.float64) @ np.asarray(x, np.float64)
+    scale = max(1.0, np.abs(ref).max())
+    np.testing.assert_allclose(
+        np.asarray(op2(x), np.float64) / scale, ref / scale,
+        rtol=2e-4, atol=2e-4, err_msg=f"path {path}")
+
+
+def test_value_refresh_replaces_superseded_generation(tmp_path):
+    """Time stepping through the cache keeps ONE schedule per structure in
+    memory (each refresh evicts the generation it superseded) and does NOT
+    re-compress an npz per step — the structural generation written at
+    build time keeps serving fresh processes."""
+    path = os.path.join(tmp_path, "plans.json")
+    cache = tuner.PlanCache(path=path)
+    plan = ExecutionPlan(path="kernel", tm=8)
+    M = csrc.fem_band(64, 4, seed=0)
+    ops.SpmvOperator.from_plan(M, plan, cache=cache)
+    for t in range(4):
+        M = _same_structure_scaled(M, factor=1.0, shift=0.5)
+        ops.SpmvOperator.from_plan(M, plan, cache=cache)
+    assert len(cache.schedules) == 1
+    files = [f for f in os.listdir(cache._schedule_dir())
+             if f.endswith(".npz")]
+    assert len(files) == 1
+    # and the surviving generation is the newest one
+    sched = next(iter(cache.schedules.values()))
+    assert sched.value_digest == S.value_digest(M)
+
+
+def test_operator_update_values_in_place():
+    """SpmvOperator.update_values: refresh the live operator; results match
+    a freshly built operator bit-for-bit, with zero structural work."""
+    M1 = csrc.fem_band(64, 4, seed=5)
+    M2 = _same_structure_scaled(M1)
+    op = ops.SpmvOperator.from_plan(M1, ExecutionPlan(path="kernel", tm=8))
+    _, d = _build_delta(lambda: op.update_values(M2))
+    assert d == {"value_refresh": 1}
+    fresh = ops.SpmvOperator.from_plan(M2, ExecutionPlan(path="kernel",
+                                                         tm=8))
+    X = jnp.asarray(np.random.default_rng(4).standard_normal((M2.m, 3))
+                    .astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(op(X)), np.asarray(fresh(X)))
+
+
+def test_update_values_rejects_different_structure():
+    M1 = csrc.fem_band(64, 4, seed=5)
+    M3 = csrc.fem_band(64, 4, seed=6)          # different pattern
+    op = ops.SpmvOperator.from_plan(M1, ExecutionPlan(path="kernel", tm=8))
+    with pytest.raises(ValueError):
+        op.update_values(M3)
+
+
+def test_refresh_rejects_numeric_symmetry_flip():
+    """A symmetric->nonsymmetric value change alters the pack's streamed
+    layout (vals_u conditional) — must rebuild, not refresh."""
+    from repro.core import blockell
+    M_sym = csrc.fem_band(48, 3, seed=1, numeric_symmetric=True)
+    A = csrc.to_dense(M_sym)
+    A_ns = np.where(A != 0, A + np.tril(np.ones_like(A), -1) * 0.5, 0.0)
+    M_ns = csrc.from_dense(A_ns)
+    assert S.structure_digest(M_sym) == S.structure_digest(M_ns)
+    pack = blockell.pack(M_sym, tm=8)
+    with pytest.raises(ValueError):
+        blockell.refresh_values(pack, M_ns)
+
+
+def test_schedule_npz_records_structure_digest(tmp_path):
+    path = os.path.join(tmp_path, "plans.json")
+    M = csrc.fem_band(48, 3, seed=2)
+    cache = tuner.PlanCache(path=path)
+    op = ops.SpmvOperator.from_plan(M, ExecutionPlan(path="kernel", tm=8),
+                                    cache=cache)
+    assert op.schedule.structure_digest == S.structure_digest(M)
+    cache2 = tuner.PlanCache(path=path)
+    sched = cache2.get_schedule(tuner.fingerprint(M), S.value_digest(M),
+                                ExecutionPlan(path="kernel", tm=8))
+    assert sched is not None
+    assert sched.structure_digest == S.structure_digest(M)
+
+
+# ---------------------------------------------------------------------------
+# index_dtype through plans, candidates, and schedules
+# ---------------------------------------------------------------------------
+
+def test_plan_index_dtype_field_key_and_roundtrip():
+    p = ExecutionPlan(path="kernel", index_dtype="int16")
+    assert ":i16:" in p.key()
+    assert ExecutionPlan.from_json(p.to_json()) == p
+    with pytest.raises(ValueError):
+        ExecutionPlan(index_dtype="int8")
+    # old cache entries (no index_dtype key) deserialize to int32
+    d = p.to_dict()
+    del d["index_dtype"]
+    assert ExecutionPlan.from_dict(d).index_dtype == "int32"
+
+
+def test_enumerate_proposes_int16_where_pack_supports_it():
+    M = csrc.fem_band(96, 4, seed=1)
+    plans = tuner.enumerate_plans(tuner.stats_of(M), tms=(8,))
+    kernel = [p for p in plans if p.path == "kernel"]
+    assert {p.index_dtype for p in kernel} == {"int32", "int16"}
+    # and the sweep can be restricted to int32 (legacy behavior)
+    only32 = tuner.enumerate_plans(tuner.stats_of(M), tms=(8,),
+                                   index_dtypes=("int32",))
+    assert all(p.index_dtype == "int32" for p in only32)
+
+
+def test_int16_infeasible_when_window_overflows():
+    from repro.core.plan import feasible
+    wide = ExecutionPlan(path="kernel", tm=128, w_cap=1 << 20,
+                         index_dtype="int16")
+    assert feasible(dataclasses.replace(wide, index_dtype="int32"),
+                    n=60000, m=60000, bandwidth=40000)
+    assert not feasible(wide, n=60000, m=60000, bandwidth=40000)
+
+
+@pytest.mark.parametrize("path", ["kernel", "flat"])
+def test_int16_plan_bit_identical_and_smaller_stream(path):
+    M = csrc.skewed_band(128, 16, 3, seed=4)
+    p32 = ExecutionPlan(path=path, tm=16)
+    p16 = ExecutionPlan(path=path, tm=16, index_dtype="int16")
+    # distinct schedule artifacts (the pack differs)
+    assert S.plan_artifact_fields(p32) != S.plan_artifact_fields(p16)
+    op32 = ops.SpmvOperator.from_plan(M, p32)
+    op16 = ops.SpmvOperator.from_plan(M, p16)
+    assert op16.pack.col_local.dtype == jnp.int16
+    assert op16.pack.streamed_bytes() < op32.pack.streamed_bytes()
+    x = jnp.asarray(np.random.default_rng(5).standard_normal(M.m)
+                    .astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(op32(x)), np.asarray(op16(x)))
+
+
+def test_int16_plan_reaches_distributed_flat_packs():
+    """The shard-local flat layouts stream indices in the plan's dtype
+    (and memoize per dtype), so a tuned int16 plan keeps its bandwidth win
+    under the distributed strategies too."""
+    M = csrc.fem_band(64, 4, seed=2)
+    p16 = ExecutionPlan(path="flat", tm=16, index_dtype="int16")
+    p32 = ExecutionPlan(path="flat", tm=16)
+    sched = S.build_schedule(M, p16)
+    fs16 = S.build_flat_shards(M, sched.partition, p16)
+    fs32 = S.build_flat_shards(M, sched.partition, p32)
+    assert fs16.col_local.dtype == jnp.int16
+    assert fs32.col_local.dtype == jnp.int32        # distinct memo entries
+    fh16 = S.build_flat_halo_layout(M, 2, p16)
+    assert fh16.col_local.dtype == jnp.int16
+    np.testing.assert_array_equal(np.asarray(fs16.col_local, np.int32),
+                                  np.asarray(fs32.col_local))
+
+
+def test_int16_schedule_disk_roundtrip_preserves_dtype(tmp_path):
+    path = os.path.join(tmp_path, "plans.json")
+    M = csrc.fem_band(64, 4, seed=9)
+    plan = ExecutionPlan(path="kernel", tm=8, index_dtype="int16")
+    cache = tuner.PlanCache(path=path)
+    op1 = ops.SpmvOperator.from_plan(M, plan, cache=cache)
+    cache2 = tuner.PlanCache(path=path)
+    op2, d = _build_delta(
+        lambda: ops.SpmvOperator.from_plan(M, plan, cache=cache2))
+    assert d == {}, f"disk hit rebuilt: {d}"
+    assert op2.pack.col_local.dtype == jnp.int16
+    x = jnp.asarray(np.random.default_rng(6).standard_normal(M.m)
+                    .astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(op1(x)), np.asarray(op2(x)))
