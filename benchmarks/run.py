@@ -17,6 +17,12 @@
                       generator + the assemble→tune→solve pipeline —
                       written to results/BENCH_assembly.json (CI asserts
                       the strategies match the oracle bit-for-bit)
+  serving             local vs mesh serving engines (repro.serve) on 8
+                      forced host devices in a subprocess: mesh-aware
+                      tuning of the per-(matrix, p) winner, register
+                      (build) vs steady-state per-tick latency split —
+                      written to results/BENCH_serving.json (the CI
+                      serving-smoke job asserts the mesh rows exist)
   roofline_summary    single-pod roofline table from results/dryrun (§Roofline)
 
 Output: ``name,us_per_call,derived`` CSV rows.
@@ -46,6 +52,7 @@ PLAN_CACHE_PATH = os.path.join(ROOT, "results", "plans.json")
 BENCH_SCHEDULE_PATH = os.path.join(ROOT, "results", "BENCH_schedule.json")
 BENCH_FLAT_PATH = os.path.join(ROOT, "results", "BENCH_flat.json")
 BENCH_ASSEMBLY_PATH = os.path.join(ROOT, "results", "BENCH_assembly.json")
+BENCH_SERVING_PATH = os.path.join(ROOT, "results", "BENCH_serving.json")
 
 
 # ---------------------------------------------------------------------------
@@ -387,6 +394,92 @@ def assembly(small: bool):
 
 
 # ---------------------------------------------------------------------------
+# Serving: local vs mesh executors behind the engine (subprocess, 8 devices)
+# ---------------------------------------------------------------------------
+
+_SERVING_CODE = """
+    import json, time, numpy as np
+    from repro.core import csrc, tuner
+    from repro.serve import SpmvServingEngine
+    OUT = %(out)r
+    scale = 4 if %(small)s else 1
+    cases = [
+        ('fem_band_w16', csrc.fem_band(20000 // scale, 16, seed=2)),
+        ('skew_band_w48', csrc.skewed_band(8000 // scale, 48, 3, seed=6)),
+    ]
+    rng = np.random.default_rng(0)
+    cache = tuner.PlanCache()
+    rows = []
+    # mesh-aware tuning: the per-(matrix, p=8) winner lands in the cache
+    # under fingerprint@p8 and drives the mesh engines below
+    for name, M in cases:
+        res = tuner.tune_mesh(M, 8, cache=cache, repeats=1)
+        rows.append({'matrix': name, 'kind': 'mesh_winner',
+                     'cache_key': res.fingerprint,
+                     'plan': res.plan.key(),
+                     'candidates_measured': len(res.timings_s)})
+        print(f'serving/{name}/mesh_winner,0.0,plan={res.plan.key()};'
+              f'candidates={len(res.timings_s)}')
+    for name, M in cases:
+        xs = [rng.standard_normal(M.m).astype(np.float32)
+              for _ in range(8)]
+        for mode, kw in (('local', {}), ('mesh', {'mesh_p': 8})):
+            eng = SpmvServingEngine(cache=cache, **kw)
+            t0 = time.perf_counter()
+            plan = eng.register(name, M)
+            t_reg = time.perf_counter() - t0
+
+            def tick():
+                for x in xs:
+                    eng.submit(name, x)
+                return eng.step()
+
+            out = tick()                      # warm the jit caches
+            ts = []
+            for _ in range(5):
+                t0 = time.perf_counter()
+                out = tick()
+                ts.append(time.perf_counter() - t0)
+            r0 = next(iter(out.values()))
+            rows.append({
+                'matrix': name, 'executor': r0.executor,
+                'plan': plan.key(), 'strategy': plan.strategy,
+                'register_us': round(t_reg * 1e6, 1),
+                'steady_us_per_tick': round(float(np.median(ts)) * 1e6, 1),
+                'batched': 8,
+            })
+            print(f'serving/{name}/{mode},{np.median(ts)*1e6:.1f},'
+                  f'plan={plan.key()};register_us={t_reg*1e6:.1f};'
+                  f'executor={r0.executor}')
+    with open(OUT, 'w') as f:
+        json.dump({'rows': rows}, f, indent=1, sort_keys=True)
+    print(f'# serving: {len(rows)} rows -> {OUT}')
+"""
+
+
+def serving(small: bool):
+    """Local vs mesh serving through repro.serve: per-(matrix, p=8)
+    mesh-aware tuning, then register (one-time build) vs steady-state
+    per-tick latency for an 8-request batch on both executors.  Runs on 8
+    forced host devices in a subprocess (device count locks at first jax
+    init); rows land in results/BENCH_serving.json and the CI
+    serving-smoke job asserts the mesh rows exist."""
+    print("# serving: local vs mesh engines (build vs steady-state, "
+          "8 shards)")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + ":" + ROOT
+    os.makedirs(os.path.dirname(BENCH_SERVING_PATH), exist_ok=True)
+    code = _SERVING_CODE % {"out": BENCH_SERVING_PATH, "small": small}
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    print(out.stdout.strip())
+
+
+# ---------------------------------------------------------------------------
 # Tuned vs default execution plans (the plan/autotune subsystem)
 # ---------------------------------------------------------------------------
 
@@ -453,7 +546,7 @@ def roofline_summary(small: bool):
 
 BENCHES = [fig5_sequential, table2_accumulation, fig6_colorful,
            fig89_scaling, schedule_build, flat_vs_rect, assembly,
-           tuned_vs_default, roofline_summary]
+           serving, tuned_vs_default, roofline_summary]
 
 
 def main() -> None:

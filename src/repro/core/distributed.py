@@ -124,11 +124,16 @@ def build_spmv_allreduce(M: CSRC, mesh: Mesh, axis: str = "rows",
                          schedule: Optional[SpmvSchedule] = None,
                          cache=None,
                          plan: Optional[ExecutionPlan] = None,
-                         interpret: bool = True) -> Callable:
+                         interpret: bool = True,
+                         layout=None) -> Callable:
     """'allreduce' (all-in-one) and 'reduce_scatter' (per-buffer/interval)
     strategies.  x replicated, shape (n,) or (n, B); output replicated or
     row-sharded.  With a 'flat' plan/schedule the shard-local partial runs
-    the flat-grid kernel over the shard's sub-pack instead of segment-sum."""
+    the flat-grid kernel over the shard's sub-pack instead of segment-sum.
+
+    ``layout`` injects a prebuilt (or value-refreshed) ShardedSlots /
+    FlatShards; otherwise the schedule layer builds it — and, given
+    ``cache``, serves it from / ships it to the PlanCache npz layer."""
     p = mesh.shape[axis]
     acc = "reduce_scatter" if scatter_output else "allreduce"
     # the requested plan decides shard-local compute; the *schedule* only
@@ -157,7 +162,9 @@ def build_spmv_allreduce(M: CSRC, mesh: Mesh, axis: str = "rows",
         return jax.lax.psum(y, axis)
 
     if flat:
-        fs = schedule_mod.build_flat_shards(M, part, req_plan)
+        fs = (layout if layout is not None
+              else schedule_mod.build_flat_shards(M, part, req_plan,
+                                                  cache=cache))
         local_y = _flat_local_fn(fs, M.n, interpret)
 
         def local(tile, first, vals_l, vals_u, col, row, ad, x):
@@ -169,7 +176,8 @@ def build_spmv_allreduce(M: CSRC, mesh: Mesh, axis: str = "rows",
             jax.sharding.NamedSharding(mesh, P(axis)))
         in_specs = _flat_specs(axis) + (P(),)
     else:
-        ss = schedule_mod.build_sharded_slots(M, part)
+        ss = (layout if layout is not None
+              else schedule_mod.build_sharded_slots(M, part, cache=cache))
 
         def local(row_idx, ja, al, au, ad_shard, x):
             # shard-local partial: the paper's private y buffer
@@ -204,7 +212,8 @@ def build_spmv_halo(M: CSRC, mesh: Mesh, axis: str = "rows",
                     schedule: Optional[SpmvSchedule] = None,
                     cache=None,
                     plan: Optional[ExecutionPlan] = None,
-                    interpret: bool = True) -> Callable:
+                    interpret: bool = True,
+                    layout=None) -> Callable:
     """'halo' (effective) strategy: x and y row-sharded; only band-width
     windows cross shard boundaries (two collective_permutes).
 
@@ -220,7 +229,9 @@ def build_spmv_halo(M: CSRC, mesh: Mesh, axis: str = "rows",
     flat = plan is not None and plan.path == "flat"
 
     if flat:
-        lay = schedule_mod.build_flat_halo_layout(M, p, plan)
+        lay = (layout if layout is not None
+               else schedule_mod.build_flat_halo_layout(M, p, plan,
+                                                        cache=cache))
         n, ns, h = M.n, lay.ns, lay.h
         n_pad = ns * p
         local_y = _flat_local_fn(lay, lay.n_local, interpret)
@@ -242,7 +253,8 @@ def build_spmv_halo(M: CSRC, mesh: Mesh, axis: str = "rows",
             jax.sharding.NamedSharding(mesh, P(axis)))
         slot_specs = _flat_specs(axis)
     else:
-        lay = schedule_mod.build_halo_layout(M, p)
+        lay = (layout if layout is not None
+               else schedule_mod.build_halo_layout(M, p, cache=cache))
         n, ns, h, n_pad = M.n, lay.ns, lay.h, lay.n_pad
 
         def local(row_loc, col_rel, al, au, ad, x_own):
@@ -301,12 +313,14 @@ def build_sharded_spmv(M: CSRC, mesh: Mesh, axis: str = "rows",
                        schedule: Optional[SpmvSchedule] = None,
                        cache=None,
                        plan: Optional[ExecutionPlan] = None,
-                       interpret: bool = True) -> Callable:
+                       interpret: bool = True,
+                       layout=None) -> Callable:
     """Factory: y_fn(x) computing A·x (or A·X for (n, B) blocks) across the
     mesh axis.  ``schedule``/``cache`` reuse the precomputed artifact; with
     ``strategy='auto'`` a supplied schedule's (or ``plan``'s) accumulation
     decides.  A plan/schedule with ``path='flat'`` makes every strategy run
-    the flat-grid kernel shard-locally."""
+    the flat-grid kernel shard-locally.  ``layout`` injects a prebuilt
+    shard layout (the serving MeshExecutor's value-refresh path)."""
     p = mesh.shape[axis]
     if strategy == "auto":
         if schedule is not None:
@@ -320,22 +334,24 @@ def build_sharded_spmv(M: CSRC, mesh: Mesh, axis: str = "rows",
     if strategy == "allreduce":
         return build_spmv_allreduce(M, mesh, axis, scatter_output=False,
                                     schedule=schedule, cache=cache,
-                                    plan=plan, interpret=interpret)
+                                    plan=plan, interpret=interpret,
+                                    layout=layout)
     if strategy == "reduce_scatter":
         return build_spmv_allreduce(M, mesh, axis, scatter_output=True,
                                     schedule=schedule, cache=cache,
-                                    plan=plan, interpret=interpret)
+                                    plan=plan, interpret=interpret,
+                                    layout=layout)
     if strategy == "halo":
         return build_spmv_halo(M, mesh, axis, schedule=schedule,
-                               cache=cache, plan=plan, interpret=interpret)
+                               cache=cache, plan=plan, interpret=interpret,
+                               layout=layout)
     raise ValueError(f"unknown strategy {strategy!r}")
 
 
-def collective_bytes_estimate(M: CSRC, p: int, strategy: str,
-                              nrhs: int = 1) -> int:
-    """Napkin model used by §Roofline and the benchmarks: bytes crossing
-    links per shard per product (scales linearly with the RHS block)."""
-    n, band = M.n, bandwidth(M)
+def collective_bytes_from_stats(n: int, band: int, p: int, strategy: str,
+                                nrhs: int = 1) -> int:
+    """The collective-bytes model over bare matrix statistics — the form
+    the tuner's mesh-aware candidate gate consumes (no matrix needed)."""
     if strategy == "allreduce":
         return 2 * 4 * n * nrhs * (p - 1) // p       # ring all-reduce
     if strategy == "reduce_scatter":
@@ -343,3 +359,11 @@ def collective_bytes_estimate(M: CSRC, p: int, strategy: str,
     if strategy == "halo":
         return 2 * 4 * max(8, band) * nrhs           # x halo + y halo
     raise ValueError(strategy)
+
+
+def collective_bytes_estimate(M: CSRC, p: int, strategy: str,
+                              nrhs: int = 1) -> int:
+    """Napkin model used by §Roofline and the benchmarks: bytes crossing
+    links per shard per product (scales linearly with the RHS block)."""
+    return collective_bytes_from_stats(M.n, bandwidth(M), p, strategy,
+                                       nrhs=nrhs)

@@ -64,6 +64,11 @@ class CandidateSpace:
     # emitted only where the pack supports it (window fits in 16 bits),
     # letting the tuner trade index bandwidth per matrix
     index_dtypes: Tuple[str, ...] = ("int32", "int16")
+    # value-stream dtypes the windowed enumerators propose; 'bfloat16' is
+    # emitted only for numerically-symmetric matrices (the well-conditioned
+    # suite classes) and must additionally pass the tuner's accuracy check
+    # before it can win
+    value_dtypes: Tuple[str, ...] = ("float32", "bfloat16")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,7 +158,8 @@ def _empty_fields(plan) -> tuple:
 
 
 def _windowed_fields(plan) -> tuple:
-    return (plan.tm, plan.w_cap, plan.k_step_sublanes, plan.index_dtype)
+    return (plan.tm, plan.w_cap, plan.k_step_sublanes, plan.index_dtype,
+            plan.value_dtype)
 
 
 def _windowed_candidates(path, stats, space):
@@ -168,11 +174,18 @@ def _windowed_candidates(path, stats, space):
             for idt in space.index_dtypes:
                 if idt == "int16" and w + 1 > 32767:
                     continue        # window overflows 16-bit offsets
-                out.append(ExecutionPlan(
-                    path=path, tm=tm, w_cap=space.w_cap,
-                    k_step_sublanes=ks, index_dtype=idt,
-                    partition=space.partition,
-                    accumulation=space.accumulation))
+                for vdt in space.value_dtypes:
+                    if (vdt == "bfloat16"
+                            and not stats.numerically_symmetric):
+                        # bf16 value streams are proposed only for the
+                        # numerically-symmetric (well-conditioned) classes
+                        continue
+                    out.append(ExecutionPlan(
+                        path=path, tm=tm, w_cap=space.w_cap,
+                        k_step_sublanes=ks, index_dtype=idt,
+                        value_dtype=vdt,
+                        partition=space.partition,
+                        accumulation=space.accumulation))
     return out
 
 
@@ -218,6 +231,12 @@ def _index_dtype_of(plan):
     return jnp.int16 if plan.index_dtype == "int16" else jnp.int32
 
 
+def _value_dtype_of(plan):
+    import jax.numpy as jnp
+    return (jnp.bfloat16 if plan.value_dtype == "bfloat16"
+            else jnp.float32)
+
+
 def _kernel_build(M, plan, coloring=None) -> dict:
     from . import blockell
     if not M.is_square:
@@ -227,22 +246,27 @@ def _kernel_build(M, plan, coloring=None) -> dict:
     BUILD_COUNTS["pack"] += 1
     return {"pack": blockell.pack(M, tm=plan.tm, k_step=plan.k_step,
                                   w_cap=plan.w_cap,
+                                  dtype=_value_dtype_of(plan),
                                   index_dtype=_index_dtype_of(plan))}
 
 
 def _kernel_save(sched):
     import numpy as np
     pk = sched.pack
+    # value streams are persisted as float32 (bf16 -> f32 widening is
+    # lossless; numpy npz has no native bfloat16) and re-narrowed on load
+    # to the dtype recorded in the meta
     meta = {"pack": {"n": pk.n, "tm": pk.tm, "nt": pk.nt,
                      "w_pad": pk.w_pad, "s": pk.s,
                      "num_symmetric": bool(pk.num_symmetric),
+                     "value_dtype": str(pk.vals_l.dtype),
                      "pad_ratio": pk.pad_ratio}}
     arrays = dict(
-        pack_vals_l=np.asarray(pk.vals_l),
-        pack_vals_u=np.asarray(pk.vals_u),
+        pack_vals_l=np.asarray(pk.vals_l, dtype=np.float32),
+        pack_vals_u=np.asarray(pk.vals_u, dtype=np.float32),
         pack_col_local=np.asarray(pk.col_local),
         pack_row_in_win=np.asarray(pk.row_in_win),
-        pack_ad=np.asarray(pk.ad),
+        pack_ad=np.asarray(pk.ad, dtype=np.float32),
     )
     return meta, arrays
 
@@ -251,13 +275,14 @@ def _kernel_load(meta, z) -> dict:
     import jax.numpy as jnp
     from .blockell import BlockEll
     pm = meta["pack"]
+    vdt = jnp.dtype(pm.get("value_dtype", "float32"))
     return {"pack": BlockEll(
         n=pm["n"], tm=pm["tm"], nt=pm["nt"], w_pad=pm["w_pad"], s=pm["s"],
-        vals_l=jnp.asarray(z["pack_vals_l"]),
-        vals_u=jnp.asarray(z["pack_vals_u"]),
+        vals_l=jnp.asarray(z["pack_vals_l"], dtype=vdt),
+        vals_u=jnp.asarray(z["pack_vals_u"], dtype=vdt),
         col_local=jnp.asarray(z["pack_col_local"]),
         row_in_win=jnp.asarray(z["pack_row_in_win"]),
-        ad=jnp.asarray(z["pack_ad"]),
+        ad=jnp.asarray(z["pack_ad"], dtype=vdt),
         num_symmetric=bool(pm["num_symmetric"]),
         pad_ratio=float(pm["pad_ratio"]),
     )}
@@ -409,6 +434,7 @@ def _flat_build(M, plan, coloring=None) -> dict:
     BUILD_COUNTS["flat_pack"] += 1
     return {"flat_pack": flat_mod.pack_flat(
         M, tm=plan.tm, ks=plan.k_step_sublanes, w_cap=plan.w_cap,
+        dtype=_value_dtype_of(plan),
         index_dtype=_index_dtype_of(plan))}
 
 
@@ -419,13 +445,14 @@ def _flat_save(sched):
                           "w_pad": pk.w_pad,
                           "total_steps": pk.total_steps, "ks": pk.ks,
                           "num_symmetric": bool(pk.num_symmetric),
+                          "value_dtype": str(pk.vals_l.dtype),
                           "pad_ratio": pk.pad_ratio}}
     arrays = dict(
-        flat_vals_l=np.asarray(pk.vals_l),
-        flat_vals_u=np.asarray(pk.vals_u),
+        flat_vals_l=np.asarray(pk.vals_l, dtype=np.float32),
+        flat_vals_u=np.asarray(pk.vals_u, dtype=np.float32),
         flat_col_local=np.asarray(pk.col_local),
         flat_row_in_win=np.asarray(pk.row_in_win),
-        flat_ad=np.asarray(pk.ad),
+        flat_ad=np.asarray(pk.ad, dtype=np.float32),
         flat_tile_of_step=np.asarray(pk.tile_of_step),
         flat_first_of_tile=np.asarray(pk.first_of_tile),
     )
@@ -436,14 +463,15 @@ def _flat_load(meta, z) -> dict:
     import jax.numpy as jnp
     from repro.kernels.csrc_spmv_flat import FlatBlockEll
     pm = meta["flat_pack"]
+    vdt = jnp.dtype(pm.get("value_dtype", "float32"))
     return {"flat_pack": FlatBlockEll(
         n=pm["n"], tm=pm["tm"], nt=pm["nt"], w_pad=pm["w_pad"],
         total_steps=pm["total_steps"], ks=pm["ks"],
-        vals_l=jnp.asarray(z["flat_vals_l"]),
-        vals_u=jnp.asarray(z["flat_vals_u"]),
+        vals_l=jnp.asarray(z["flat_vals_l"], dtype=vdt),
+        vals_u=jnp.asarray(z["flat_vals_u"], dtype=vdt),
         col_local=jnp.asarray(z["flat_col_local"]),
         row_in_win=jnp.asarray(z["flat_row_in_win"]),
-        ad=jnp.asarray(z["flat_ad"]),
+        ad=jnp.asarray(z["flat_ad"], dtype=vdt),
         tile_of_step=jnp.asarray(z["flat_tile_of_step"]),
         first_of_tile=jnp.asarray(z["flat_first_of_tile"]),
         num_symmetric=bool(pm["num_symmetric"]),

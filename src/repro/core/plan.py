@@ -38,6 +38,19 @@ cached, and shipped between processes instead of being hard-coded in
                      the index stream whenever the padded window fits in
                      16 bits (local window offsets are small on banded
                      matrices) — the tuner proposes both and measures.
+  value_dtype        value-stream dtype of the windowed packs: 'float32'
+                     (default) or 'bfloat16', which halves the value
+                     stream.  Enumerated only for numerically-symmetric
+                     (well-conditioned suite) classes and accuracy-gated
+                     in the tuner before it can win.
+  strategy           which executor serves the plan (serve/executor.py):
+                     'local' — single-device SpmvOperator; 'mesh' — the
+                     distributed strategies of core/distributed.py across
+                     ``mesh_p`` shards, with ``accumulation`` naming the
+                     collective.  Chosen per (matrix, p) by the tuner's
+                     mesh-aware mode.
+  mesh_p             mesh width the plan was tuned for (1 for local
+                     plans; the shard count of a 'mesh' plan).
 
 Plans are plain data: JSON-serializable, hashable, comparable.  The tuner
 (core/tuner.py) enumerates feasible plans from matrix statistics, measures
@@ -68,6 +81,15 @@ ACCUMULATIONS = ("allreduce", "reduce_scatter", "halo")
 # padded window fits (w_pad + 1 <= 32767) — the paper's §1 index
 # compression (Williams et al.) as a tunable plan field.
 INDEX_DTYPES = ("int32", "int16")
+# Value-stream dtypes the windowed packs support: 'bfloat16' halves the
+# value stream (SpMV is bandwidth-bound); the tuner only proposes it for
+# numerically-symmetric classes and rejects it when the accuracy check
+# fails (core/tuner.py VALUE_DTYPE_TOL).
+VALUE_DTYPES = ("float32", "bfloat16")
+# Executor strategies (serve/executor.py): 'local' = single-device
+# SpmvOperator, 'mesh' = distributed product over mesh_p shards with the
+# plan's accumulation as the collective pattern.
+STRATEGIES = ("local", "mesh")
 
 LANES = 128                     # TPU lane count; sublane unit for k_step
 
@@ -88,6 +110,9 @@ class ExecutionPlan:
     accumulation: str = "allreduce"
     nrhs: int = 1
     index_dtype: str = "int32"
+    value_dtype: str = "float32"
+    strategy: str = "local"
+    mesh_p: int = 1
 
     def __post_init__(self):
         if self.path not in PATHS:
@@ -114,6 +139,18 @@ class ExecutionPlan:
         if self.index_dtype not in INDEX_DTYPES:
             raise ValueError(
                 f"index_dtype {self.index_dtype!r} not in {INDEX_DTYPES}")
+        if self.value_dtype not in VALUE_DTYPES:
+            raise ValueError(
+                f"value_dtype {self.value_dtype!r} not in {VALUE_DTYPES}")
+        if self.strategy not in STRATEGIES:
+            raise ValueError(
+                f"strategy {self.strategy!r} not in {STRATEGIES}")
+        if self.mesh_p < 1:
+            raise ValueError(f"mesh_p must be >= 1, got {self.mesh_p}")
+        if self.strategy == "local" and self.mesh_p != 1:
+            raise ValueError(
+                f"local plans run on one device; mesh_p {self.mesh_p} "
+                "requires strategy='mesh'")
 
     @property
     def k_step(self) -> int:
@@ -122,11 +159,15 @@ class ExecutionPlan:
     def key(self) -> str:
         """Stable short identifier (used in cache timing tables and CSV)."""
         rhs = f":r{self.nrhs}" if self.nrhs != 1 else ""
+        mesh = f":mesh{self.mesh_p}" if self.strategy == "mesh" else ""
         if self.path in ("kernel", "flat"):
             i16 = ":i16" if self.index_dtype == "int16" else ""
-            return (f"{self.path}:tm{self.tm}:ks{self.k_step_sublanes}{i16}"
-                    f":{self.partition}:{self.accumulation}{rhs}")
-        return f"{self.path}:{self.partition}:{self.accumulation}{rhs}"
+            bf16 = ":bf16" if self.value_dtype == "bfloat16" else ""
+            return (f"{self.path}:tm{self.tm}:ks{self.k_step_sublanes}"
+                    f"{i16}{bf16}"
+                    f":{self.partition}:{self.accumulation}{rhs}{mesh}")
+        return (f"{self.path}:{self.partition}:{self.accumulation}"
+                f"{rhs}{mesh}")
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)

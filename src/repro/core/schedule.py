@@ -58,11 +58,11 @@ from .partition import (RowPartition, halo_widths, partition_rows_by_count,
 from .paths import BUILD_COUNTS
 from .plan import ExecutionPlan
 
-# version 3: schedules record the matrix *structure* digest next to the
-# value digest, enabling the value-refresh fast path (FEM time stepping:
-# same structure, new values -> refresh streams, zero re-pack/re-color).
-# Version-2 files load as misses and are rebuilt transparently.
-SCHEDULE_VERSION = 3
+# version 4: windowed pack meta records the value-stream dtype
+# (plan.value_dtype — bf16 packs persist as widened f32 arrays and
+# re-narrow on load) and the artifact key pins it.  Version-3 files load
+# as misses and are rebuilt transparently.
+SCHEDULE_VERSION = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -341,13 +341,124 @@ _SHARDED_SLOTS_MEMO: dict = {}
 _HALO_LAYOUT_MEMO: dict = {}
 
 
-def build_sharded_slots(M: CSRC, part: RowPartition) -> ShardedSlots:
+# ---------------------------------------------------------------------------
+# Shard-layout (de)serialization: the npz layer that ships per-shard
+# sub-artifacts (ShardedSlots / HaloLayout / FlatShards / FlatHalo) to
+# serving workers through the PlanCache, keyed by (fingerprint, value
+# digest, p, strategy kind, pack geometry).
+# ---------------------------------------------------------------------------
+
+SHARD_LAYOUT_VERSION = 1
+
+
+def _layout_kinds() -> dict:
+    from repro.kernels.csrc_spmv_flat import FlatHalo, FlatShards
+    return {"sharded_slots": ShardedSlots, "halo": HaloLayout,
+            "flat_shards": FlatShards, "flat_halo": FlatHalo}
+
+
+def shard_layout_key(kind: str, fp: str, digest: str, p: int,
+                     geo: tuple = ()) -> str:
+    """Cache key of one distributed layout: matrix class + exact values +
+    shard count + strategy family, plus a hash of the pack geometry (tile
+    height, k-step, index dtype, partition boundaries...)."""
+    gh = hashlib.sha1(json.dumps([str(g) for g in geo]).encode()
+                      ).hexdigest()[:10]
+    return f"shard-{kind}-{fp}.{digest}.p{p}.{gh}"
+
+
+def save_shard_layout_npz(path: str, lay):
+    """Serialize any of the four shard-layout dataclasses: scalar fields
+    go to the JSON meta, arrays (and the embedded RowPartition) to npz.
+    bf16 value streams persist widened to f32 (lossless) and re-narrow on
+    load (npz has no native bfloat16)."""
+    kinds = _layout_kinds()
+    kind = next(k for k, cls in kinds.items() if isinstance(lay, cls))
+    meta = {"version": SHARD_LAYOUT_VERSION, "kind": kind}
+    arrays = {}
+    for f in dataclasses.fields(lay):
+        v = getattr(lay, f.name)
+        if isinstance(v, RowPartition):
+            for pf in dataclasses.fields(v):
+                arrays[f"part__{pf.name}"] = np.asarray(getattr(v, pf.name))
+        elif isinstance(v, (bool, int, float)):
+            meta[f.name] = v
+        elif str(v.dtype) == "bfloat16":
+            meta.setdefault("__bf16__", []).append(f.name)
+            arrays[f.name] = np.asarray(v, dtype=np.float32)
+        else:
+            arrays[f.name] = np.asarray(v)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp.npz"
+    with open(tmp, "wb") as f:
+        np.savez_compressed(f, __meta__=np.frombuffer(
+            json.dumps(meta, sort_keys=True).encode(), dtype=np.uint8),
+            **arrays)
+    os.replace(tmp, path)
+
+
+def load_shard_layout_npz(path: str):
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode())
+        if meta.get("version") != SHARD_LAYOUT_VERSION:
+            raise ValueError(
+                f"shard layout {path}: version {meta.get('version')!r} "
+                f"!= {SHARD_LAYOUT_VERSION}")
+        cls = _layout_kinds()[meta["kind"]]
+        bf16 = set(meta.get("__bf16__", ()))
+        kwargs = {}
+        for f in dataclasses.fields(cls):
+            if f.name in meta:
+                kwargs[f.name] = meta[f.name]
+            elif f.name == "part":
+                kwargs["part"] = RowPartition(
+                    starts=z["part__starts"], eff_lo=z["part__eff_lo"],
+                    eff_hi=z["part__eff_hi"],
+                    nnz_per_part=z["part__nnz_per_part"])
+            else:
+                kwargs[f.name] = jnp.asarray(
+                    z[f.name],
+                    dtype=jnp.bfloat16 if f.name in bf16 else None)
+        return cls(**kwargs)
+
+
+def _cached_layout(M: CSRC, cache, kind: str, p: int, geo: tuple):
+    """Probe the cache's shipped-artifact store for a layout; returns
+    (layout_or_None, key_or_None)."""
+    if cache is None:
+        return None, None
+    from .tuner import fingerprint as _fingerprint
+    key = shard_layout_key(kind, _fingerprint(M), value_digest(M), p, geo)
+    return cache.get_shard_layout(key), key
+
+
+def _ensure_shipped(M: CSRC, cache, kind: str, p: int, geo: tuple, lay):
+    """Persist a memoized layout on the first cache-bearing request: a
+    layout built without a cache (e.g. during tune_mesh measurement)
+    ships as soon as a cache-aware consumer asks for it."""
+    if cache is None:
+        return
+    shipped, key = _cached_layout(M, cache, kind, p, geo)
+    if shipped is None and key is not None:
+        cache.put_shard_layout(key, lay)
+
+
+def build_sharded_slots(M: CSRC, part: RowPartition,
+                        cache=None) -> ShardedSlots:
     """Shard-stacked slot arrays over the schedule's row partition
-    (memoized per exact matrix + partition boundaries)."""
+    (memoized per exact matrix + partition boundaries; with ``cache``,
+    also served from / shipped to the PlanCache npz layer)."""
+    starts_geo = tuple(int(s) for s in np.asarray(part.starts))
     memo_key = (value_digest(M), np.asarray(part.starts).tobytes())
     hit = _SHARDED_SLOTS_MEMO.get(memo_key)
     if hit is not None:
+        _ensure_shipped(M, cache, "sharded_slots", part.p, starts_geo, hit)
         return hit
+    shipped, key = _cached_layout(M, cache, "sharded_slots", part.p,
+                                  starts_geo)
+    if shipped is not None:
+        _SHARDED_SLOTS_MEMO[memo_key] = shipped
+        return shipped
     BUILD_COUNTS["sharded_slots"] += 1
     p = part.p
     ros = row_of_slot(M)
@@ -380,6 +491,8 @@ def build_sharded_slots(M: CSRC, part: RowPartition) -> ShardedSlots:
         part=part,
     )
     _SHARDED_SLOTS_MEMO[memo_key] = out
+    if key is not None:
+        cache.put_shard_layout(key, out)
     return out
 
 
@@ -400,16 +513,22 @@ class HaloLayout:
     ad: jnp.ndarray          # (p, ns)
 
 
-def build_halo_layout(M: CSRC, p: int) -> HaloLayout:
-    """Memoized per exact matrix + shard count.  Raises ValueError when the
-    band does not fit inside one shard (the strategy's feasibility gate —
-    callers fall back to allreduce/reduce_scatter)."""
+def build_halo_layout(M: CSRC, p: int, cache=None) -> HaloLayout:
+    """Memoized per exact matrix + shard count (with ``cache``, also
+    served from / shipped to the PlanCache npz layer).  Raises ValueError
+    when the band does not fit inside one shard (the strategy's
+    feasibility gate — callers fall back to allreduce/reduce_scatter)."""
     from .csrc import bandwidth as csrc_bandwidth
 
     memo_key = (value_digest(M), p)
     hit = _HALO_LAYOUT_MEMO.get(memo_key)
     if hit is not None:
+        _ensure_shipped(M, cache, "halo", p, (), hit)
         return hit
+    shipped, key = _cached_layout(M, cache, "halo", p, ())
+    if shipped is not None:
+        _HALO_LAYOUT_MEMO[memo_key] = shipped
+        return shipped
     BUILD_COUNTS["halo_layout"] += 1
     n = M.n
     ns = _round_up(-(-n // p), 8)          # rows per shard
@@ -448,6 +567,8 @@ def build_halo_layout(M: CSRC, p: int) -> HaloLayout:
                      al=jnp.asarray(al_s), au=jnp.asarray(au_s),
                      ad=jnp.asarray(ad_pad.reshape(p, ns)))
     _HALO_LAYOUT_MEMO[memo_key] = out
+    if key is not None:
+        cache.put_shard_layout(key, out)
     return out
 
 
@@ -458,48 +579,157 @@ _FLAT_SHARDS_MEMO: dict = {}
 _FLAT_HALO_MEMO: dict = {}
 
 
-def _plan_index_dtype(plan: ExecutionPlan):
-    import jax.numpy as jnp
-    return jnp.int16 if plan.index_dtype == "int16" else jnp.int32
+# one mapping from plan dtype strings to jnp dtypes for the whole stack
+# (paths.py owns it; the local pack builders use the same helpers)
+_plan_index_dtype = paths_mod._index_dtype_of
+_plan_value_dtype = paths_mod._value_dtype_of
 
 
-def build_flat_shards(M: CSRC, part: RowPartition, plan: ExecutionPlan):
+def build_flat_shards(M: CSRC, part: RowPartition, plan: ExecutionPlan,
+                      cache=None):
     """Per-shard flat sub-packs over the schedule's row partition (global
     coordinates; allreduce / reduce_scatter strategies).  Memoized per
     exact matrix + partition boundaries + pack geometry (incl. the plan's
-    index-stream dtype)."""
+    index- and value-stream dtypes); with ``cache``, also served from /
+    shipped to the PlanCache npz layer."""
     from repro.kernels.csrc_spmv_flat import pack_flat_shards
+    geo = (plan.tm, plan.k_step_sublanes, plan.w_cap, plan.index_dtype,
+           plan.value_dtype, *(int(s) for s in np.asarray(part.starts)))
     memo_key = (value_digest(M), np.asarray(part.starts).tobytes(),
                 plan.tm, plan.k_step_sublanes, plan.w_cap,
-                plan.index_dtype)
+                plan.index_dtype, plan.value_dtype)
     hit = _FLAT_SHARDS_MEMO.get(memo_key)
     if hit is not None:
+        _ensure_shipped(M, cache, "flat_shards", part.p, geo, hit)
         return hit
+    shipped, key = _cached_layout(M, cache, "flat_shards", part.p, geo)
+    if shipped is not None:
+        _FLAT_SHARDS_MEMO[memo_key] = shipped
+        return shipped
     BUILD_COUNTS["flat_shards"] += 1
     out = pack_flat_shards(M, part.starts, tm=plan.tm,
                            ks=plan.k_step_sublanes, w_cap=plan.w_cap,
+                           dtype=_plan_value_dtype(plan),
                            index_dtype=_plan_index_dtype(plan))
     _FLAT_SHARDS_MEMO[memo_key] = out
+    if key is not None:
+        cache.put_shard_layout(key, out)
     return out
 
 
-def build_flat_halo_layout(M: CSRC, p: int, plan: ExecutionPlan):
+def build_flat_halo_layout(M: CSRC, p: int, plan: ExecutionPlan,
+                           cache=None):
     """Per-shard local-coordinate flat packs for the halo strategy.
     Raises ValueError when the band does not fit inside one shard (same
     gate as :func:`build_halo_layout`).  Memoized per exact matrix +
-    shard count + pack geometry (incl. the plan's index-stream dtype)."""
+    shard count + pack geometry (incl. the plan's index- and value-stream
+    dtypes); with ``cache``, also served from / shipped to the PlanCache
+    npz layer."""
     from repro.kernels.csrc_spmv_flat import pack_flat_halo
+    geo = (plan.tm, plan.k_step_sublanes, plan.w_cap, plan.index_dtype,
+           plan.value_dtype)
     memo_key = (value_digest(M), p, plan.tm, plan.k_step_sublanes,
-                plan.w_cap, plan.index_dtype)
+                plan.w_cap, plan.index_dtype, plan.value_dtype)
     hit = _FLAT_HALO_MEMO.get(memo_key)
     if hit is not None:
+        _ensure_shipped(M, cache, "flat_halo", p, geo, hit)
         return hit
+    shipped, key = _cached_layout(M, cache, "flat_halo", p, geo)
+    if shipped is not None:
+        _FLAT_HALO_MEMO[memo_key] = shipped
+        return shipped
     BUILD_COUNTS["flat_halo"] += 1
     out = pack_flat_halo(M, p, tm=plan.tm, ks=plan.k_step_sublanes,
                          w_cap=plan.w_cap,
+                         dtype=_plan_value_dtype(plan),
                          index_dtype=_plan_index_dtype(plan))
     _FLAT_HALO_MEMO[memo_key] = out
+    if key is not None:
+        cache.put_shard_layout(key, out)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Same-structure value refresh of the shard layouts (the mesh-path analog
+# of refresh_schedule: serving update_values / FEM time stepping must not
+# re-pack, re-partition, or re-color on the mesh)
+# ---------------------------------------------------------------------------
+
+def refresh_shard_layout(lay, M: CSRC, part: Optional[RowPartition] = None):
+    """Refill a distributed layout's value streams from a same-structure
+    matrix.  Structural arrays (slot indices, tile maps, halo geometry)
+    are reused untouched; only al/au/ad streams are rewritten — the probe
+    counter is ``shard_value_refresh``, and no structural counter moves.
+    ``part`` is required for FlatShards (the layout does not embed its
+    partition boundaries)."""
+    from repro.kernels.csrc_spmv_flat import (FlatHalo, FlatShards,
+                                              refresh_flat_halo,
+                                              refresh_flat_shards)
+
+    BUILD_COUNTS["shard_value_refresh"] += 1
+    if isinstance(lay, FlatShards):
+        if part is None:
+            raise ValueError("refresh_shard_layout: FlatShards needs the "
+                             "row partition it was built over")
+        return refresh_flat_shards(lay, M, np.asarray(part.starts))
+    if isinstance(lay, FlatHalo):
+        return refresh_flat_halo(lay, M)
+    if isinstance(lay, ShardedSlots):
+        return _refresh_sharded_slots(lay, M)
+    if isinstance(lay, HaloLayout):
+        return _refresh_halo_layout(lay, M)
+    raise TypeError(f"unknown shard layout {type(lay).__name__}")
+
+
+def _refresh_sharded_slots(ss: ShardedSlots, M: CSRC) -> ShardedSlots:
+    """Value-only refill of the stacked slot arrays: the spans are
+    re-derived from the (unchanged) row pointers, so the padded layout is
+    bit-compatible with the original build."""
+    part = ss.part
+    p = part.p
+    ia = np.asarray(M.ia)
+    al = np.asarray(M.al)
+    au = np.asarray(M.au)
+    smax = int(ss.al.shape[1])
+    spans = [(int(ia[part.starts[t]]), int(ia[part.starts[t + 1]]))
+             for t in range(p)]
+
+    def padded(arr):
+        out = np.zeros((p, smax), dtype=np.float32)
+        for t, (s, e) in enumerate(spans):
+            out[t, :e - s] = arr[s:e]
+        return jnp.asarray(out)
+
+    ad_shard = np.zeros((p, M.n), dtype=np.float32)
+    for t in range(p):
+        r0, r1 = part.rows(t)
+        ad_shard[t, r0:r1] = np.asarray(M.ad)[r0:r1]
+    return dataclasses.replace(ss, al=padded(al), au=padded(au),
+                               ad_shard=jnp.asarray(ad_shard))
+
+
+def _refresh_halo_layout(lay: HaloLayout, M: CSRC) -> HaloLayout:
+    """Value-only refill of the local-coordinate halo arrays, vectorized:
+    slots are row-major, so a shard's slots are consecutive and the
+    original fill order (stable sort over a non-decreasing shard array)
+    is the identity."""
+    ros = row_of_slot(M)
+    k = ros.shape[0]
+    p, ns = lay.p, lay.ns
+    smax = int(lay.al.shape[1])
+    al_s = np.zeros((p, smax), np.float32)
+    au_s = np.zeros((p, smax), np.float32)
+    if k:
+        shard = ros // ns
+        first = np.searchsorted(shard, np.arange(p))
+        q = np.arange(k) - first[shard]
+        al_s[shard, q] = np.asarray(M.al)
+        au_s[shard, q] = np.asarray(M.au)
+    ad_pad = np.zeros(lay.n_pad, np.float32)
+    ad_pad[:M.n] = np.asarray(M.ad)
+    return dataclasses.replace(lay, al=jnp.asarray(al_s),
+                               au=jnp.asarray(au_s),
+                               ad=jnp.asarray(ad_pad.reshape(p, ns)))
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,23 @@ Pieces:
                              skips re-measurement entirely
   tune / plan_for            the tuning entry points used by solvers,
                              the serve engine, and benchmarks
+  enumerate_mesh_plans /     the mesh-aware mode: distributed candidates
+  tune_mesh / mesh_plan_for  (strategy='mesh', every accumulation x
+                             shard-compute path, gated by the
+                             collective-bytes model) measured on an
+                             actual mesh of ``p`` forced host (or real)
+                             devices; winners land in the cache under the
+                             per-(matrix, p) key ``<fingerprint>@p<p>``
+
+Mesh-aware tuning needs the process to see ``p`` devices — launch with
+``XLA_FLAGS=--xla_force_host_platform_device_count=<p>`` on CPU (device
+count is locked at first jax init, so benchmarks run it in a subprocess).
+
+Windowed candidates with ``value_dtype='bfloat16'`` (enumerated only for
+numerically-symmetric matrices) additionally pass an accuracy check
+against the exact segment-sum product before they may win
+(``VALUE_DTYPE_TOL``): the tuner trades precision for value-stream
+bandwidth only where the matrix class tolerates it.
 
 The timing harness is benchmarks/util.time_fn when importable (running
 from the repo root); a same-contract fallback is inlined so the tuner
@@ -104,6 +121,12 @@ def fingerprint(M: CSRC) -> str:
     h.update(bytes([int(M.numerically_symmetric)]))
     band = csrc_bandwidth(M)
     return f"n{M.n}m{M.m}k{M.k}b{band}-{h.hexdigest()[:12]}"
+
+
+def mesh_fingerprint(fp: str, p: int) -> str:
+    """Cache key of the per-(matrix class, mesh width) distributed tuning
+    decision — the mesh-aware mode records one winner per (matrix, p)."""
+    return f"{fp}@p{p}"
 
 
 # ---------------------------------------------------------------------------
@@ -208,6 +231,97 @@ def heuristic_plan(stats: MatrixStats, tm: int = 128,
 
 
 # ---------------------------------------------------------------------------
+# Mesh-aware candidate enumeration (strategy='mesh' plans per shard count)
+# ---------------------------------------------------------------------------
+
+# A distributed candidate is dropped when its estimated collective traffic
+# exceeds this multiple of the shard's compute-stream bytes (working set /
+# p): past that point the product is collective-bound by construction and
+# measuring it wastes tuning budget (Schubert et al., arXiv:0910.4836 —
+# the strategy decision is a bandwidth/topology question).
+MESH_COLLECTIVE_RATIO = 4.0
+
+
+def _halo_fits(stats: MatrixStats, p: int) -> bool:
+    ns = -(-stats.n // p)
+    ns = (ns + 7) // 8 * 8
+    h = max(8, (stats.bandwidth + 7) // 8 * 8)
+    return h <= ns
+
+
+def enumerate_mesh_plans(stats: MatrixStats, p: int,
+                         tms=(32, 128),
+                         k_steps_sublanes=(8,),
+                         w_cap: int = 4096,
+                         nrhs_options=(1,),
+                         index_dtypes=("int32", "int16"),
+                         max_collective_ratio: float = MESH_COLLECTIVE_RATIO
+                         ) -> List[ExecutionPlan]:
+    """Distributed candidate plans for a p-way mesh.
+
+    Shard-local compute comes from the paths the distributed strategies
+    execute — 'segment' always, 'flat' when the skew gate makes it worth
+    measuring (same enumerator the local tuner uses) — crossed with every
+    accumulation strategy whose collective footprint passes the
+    bandwidth gate: 'halo' only when the band fits inside one shard, and
+    any strategy only when ``collective_bytes_estimate`` stays within
+    ``max_collective_ratio`` x the shard's working-set bytes.
+    """
+    from .distributed import collective_bytes_from_stats
+
+    if stats.n != stats.m or p < 1:
+        return []                 # distributed strategies shard square rows
+    partition = "nnz" if stats.nnz_row_dev > 0 else "count"
+    space = paths_mod.CandidateSpace(
+        tms=tuple(tms), k_steps_sublanes=tuple(k_steps_sublanes),
+        w_cap=w_cap, partition=partition,
+        index_dtypes=tuple(index_dtypes),
+        # the precision trade is not enumerated on the mesh yet (explicit
+        # bf16 mesh plans execute; measuring them needs the accuracy gate
+        # wired into the distributed measurement loop first)
+        value_dtypes=("float32",))
+    bases: List[ExecutionPlan] = []
+    for name in ("segment", "flat"):
+        entry = paths_mod.get_path(name)
+        for cand in entry.candidates(stats, space):
+            if feasible(cand, n=stats.n, m=stats.m,
+                        bandwidth=stats.bandwidth):
+                bases.append(cand)
+    shard_ws = max(1, stats.working_set_bytes // p)
+    out: List[ExecutionPlan] = []
+    for acc in ("halo", "reduce_scatter", "allreduce"):
+        if acc == "halo" and not _halo_fits(stats, p):
+            continue
+        for r in nrhs_options:
+            est = collective_bytes_from_stats(
+                stats.n, stats.bandwidth, p, acc, nrhs=r)
+            if est > max_collective_ratio * shard_ws:
+                continue          # collective-bound by construction
+            for base in bases:
+                out.append(dataclasses.replace(
+                    base, strategy="mesh", mesh_p=p, accumulation=acc,
+                    nrhs=r))
+    return out
+
+
+def heuristic_mesh_plan(stats: MatrixStats, p: int,
+                        w_cap: int = 4096) -> ExecutionPlan:
+    """Measurement-free distributed plan: segment shard compute with the
+    collective-bytes model's strategy pick (the analytic fallback when the
+    process cannot see p devices to measure on).  Raises ValueError for
+    rectangular matrices — same gate as ``enumerate_mesh_plans`` (the
+    distributed strategies shard square rows only)."""
+    if stats.n != stats.m:
+        raise ValueError(
+            "distributed strategies shard square matrices only; serve "
+            "rectangular matrices through a local plan")
+    partition = "nnz" if stats.nnz_row_dev > 0 else "count"
+    acc = "halo" if _halo_fits(stats, p) else "reduce_scatter"
+    return ExecutionPlan(path="segment", w_cap=w_cap, partition=partition,
+                         accumulation=acc, strategy="mesh", mesh_p=p)
+
+
+# ---------------------------------------------------------------------------
 # Plan cache
 # ---------------------------------------------------------------------------
 
@@ -251,6 +365,9 @@ class PlanCache:
         self.assembly_schedules: Dict[str, object] = {}
         self.assembly_hits = 0
         self.assembly_misses = 0
+        self.shard_layouts: Dict[str, object] = {}
+        self.shard_layout_hits = 0
+        self.shard_layout_misses = 0
         if path is not None and os.path.exists(path):
             self._read(path)
 
@@ -377,6 +494,41 @@ class PlanCache:
                 return sched
         return None
 
+    # ---- distributed shard layouts (ShardedSlots / HaloLayout /
+    # FlatShards / FlatHalo), stored beside the schedules and keyed by
+    # (fingerprint, value digest, p, strategy kind, pack geometry) — the
+    # npz layer that ships per-shard sub-artifacts to serving workers ----
+
+    def get_shard_layout(self, key: str):
+        """The cached distributed layout for this key, or None.  Memory
+        first, then the npz beside the plans — a hit means zero per-shard
+        pack/layout construction (the mesh executor's artifact-shipping
+        path)."""
+        from .schedule import load_shard_layout_npz
+        lay = self.shard_layouts.get(key)
+        if lay is None:
+            d = self._schedule_dir()
+            f = None if d is None else os.path.join(d, key + ".npz")
+            if f is not None and os.path.exists(f):
+                try:
+                    lay = load_shard_layout_npz(f)
+                except Exception:     # stale version / truncated: rebuild
+                    lay = None
+                if lay is not None:
+                    self.shard_layouts[key] = lay
+        if lay is None:
+            self.shard_layout_misses += 1
+            return None
+        self.shard_layout_hits += 1
+        return lay
+
+    def put_shard_layout(self, key: str, lay, persist: bool = True):
+        from .schedule import save_shard_layout_npz
+        self.shard_layouts[key] = lay
+        d = self._schedule_dir()
+        if persist and d is not None:
+            save_shard_layout_npz(os.path.join(d, key + ".npz"), lay)
+
     # ---- assembly schedules (repro.assembly.scatter), stored beside the
     # SpMV schedules and keyed by connectivity digest ----
 
@@ -420,12 +572,42 @@ class PlanCache:
 # Tuning
 # ---------------------------------------------------------------------------
 
+# Max relative error a reduced-precision (value_dtype != 'float32')
+# candidate may show against the exact segment-sum product before the
+# tuner rejects it — the accuracy gate of the bf16 value-stream trade.
+VALUE_DTYPE_TOL = 2e-2
+
+
+def _rhs_pool(M: CSRC, x: Optional[np.ndarray]):
+    """Measurement inputs per RHS block width, shared by the local and
+    mesh tuners: multi-RHS candidates are measured at their tuned width
+    (seeded per width, memoized)."""
+    import jax.numpy as jnp
+    if x is None:
+        x = np.random.default_rng(0).standard_normal(M.m).astype(np.float32)
+    xj = jnp.asarray(x)
+    by_width = {1: xj} if xj.ndim == 1 else {xj.shape[1]: xj, 1: xj[:, 0]}
+
+    def x_for(nrhs: int):
+        if nrhs not in by_width:
+            by_width[nrhs] = jnp.asarray(
+                np.random.default_rng(nrhs).standard_normal(
+                    (M.m, nrhs)).astype(np.float32))
+        return by_width[nrhs]
+
+    return x_for
+
+
 @dataclasses.dataclass(frozen=True)
 class TuneResult:
     plan: ExecutionPlan
     fingerprint: str
     timings_s: Dict[str, float]   # plan.key() -> seconds; empty on cache hit
     cached: bool
+    # per-p distributed winners when tune() ran with mesh_ps (empty
+    # otherwise); also recorded in the cache under mesh_fingerprint keys
+    mesh_plans: Dict[int, ExecutionPlan] = dataclasses.field(
+        default_factory=dict)
 
 
 def tune(M: CSRC,
@@ -436,18 +618,30 @@ def tune(M: CSRC,
          warmup: int = 1,
          repeats: int = 3,
          interpret: bool = True,
-         save: bool = True) -> TuneResult:
+         save: bool = True,
+         value_dtype_tol: float = VALUE_DTYPE_TOL,
+         mesh_ps=()) -> TuneResult:
     """Measure every feasible candidate and return the argmin plan.
 
     ``cache`` short-circuits: a fingerprint hit returns the stored plan
     with zero measurements.  ``measure(op, x) -> seconds`` is injectable
     for tests; the default is the benchmarks/util timing harness with a
     small budget (the tuner runs at operator-construction time).
+
+    Candidates with a reduced ``value_dtype`` must additionally match the
+    exact segment-sum product within ``value_dtype_tol`` relative error or
+    they are rejected before measurement (the bf16 accuracy gate).
+
+    ``mesh_ps`` is the mesh-aware mode: for every shard count listed the
+    distributed candidates are measured on an actual ``p``-device mesh
+    (``tune_mesh``) and the per-(matrix, p) winner is recorded in the
+    cache under ``mesh_fingerprint(fp, p)`` — the process must see that
+    many devices (forced host platform on CPU).
     """
     from repro.kernels.ops import SpmvOperator   # local: avoid import cycle
 
     fp = fingerprint(M)
-    if cache is not None:
+    if cache is not None and not mesh_ps:
         # a heuristic (unmeasured) entry must not satisfy a tune request
         hit = cache.get(fp, require_measured=True)
         if hit is not None:
@@ -459,47 +653,154 @@ def tune(M: CSRC,
     if measure is None:
         def measure(op, xv):
             return _time_fn(op, xv, warmup=warmup, repeats=repeats)
-    if x is None:
-        x = np.random.default_rng(0).standard_normal(M.m).astype(np.float32)
-    import jax.numpy as jnp
-    xj = jnp.asarray(x)
-    # multi-RHS candidates are measured at their tuned block width
-    _x_by_width = {1: xj} if xj.ndim == 1 else {xj.shape[1]: xj,
-                                               1: xj[:, 0]}
+    _x_for = _rhs_pool(M, x)
 
-    def _x_for(nrhs: int):
-        if nrhs not in _x_by_width:
-            _x_by_width[nrhs] = jnp.asarray(
-                np.random.default_rng(nrhs).standard_normal(
-                    (M.m, nrhs)).astype(np.float32))
-        return _x_by_width[nrhs]
+    _y_ref_by_width: Dict[int, np.ndarray] = {}
+
+    def _accuracy_ok(op, nrhs: int) -> bool:
+        """Reduced-precision gate: compare against the exact product."""
+        from repro.kernels import ref as ref_mod
+        xv = _x_for(nrhs)
+        if nrhs not in _y_ref_by_width:
+            y_ref = (ref_mod.csrc_spmm(M, xv) if xv.ndim == 2
+                     else ref_mod.csrc_spmv(M, xv))
+            _y_ref_by_width[nrhs] = np.asarray(y_ref, dtype=np.float64)
+        y_ref = _y_ref_by_width[nrhs]
+        y = np.asarray(op(xv), dtype=np.float64)
+        scale = max(1.0, float(np.abs(y_ref).max()))
+        return float(np.abs(y - y_ref).max()) / scale <= value_dtype_tol
+
+    cached_local = False
+    if cache is not None and mesh_ps:
+        hit = cache.get(fp, require_measured=True)
+    else:
+        hit = None
 
     timings: Dict[str, float] = {}
-    best_plan, best_t, best_op = None, float("inf"), None
-    for p in cands:
-        if not feasible(p, n=M.n, m=M.m, bandwidth=stats.bandwidth):
-            continue
+    if hit is not None:
+        best_plan, cached_local = hit, True
+    else:
+        best_plan, best_t, best_op = None, float("inf"), None
+        for p in cands:
+            if not feasible(p, n=M.n, m=M.m, bandwidth=stats.bandwidth):
+                continue
+            try:
+                op = SpmvOperator.from_plan(M, p, interpret=interpret)
+            except ValueError:
+                continue          # pack-time infeasibility (bandwidth gate)
+            if p.value_dtype != "float32" and not _accuracy_ok(op, p.nrhs):
+                continue          # precision trade failed the gate
+            t = float(measure(op, _x_for(p.nrhs)))
+            timings[p.key()] = t
+            # argmin on per-RHS-column time: an nrhs=8 candidate does 8x
+            # the work of a single product, so raw runtimes are not
+            # comparable across block widths
+            t_norm = t / p.nrhs
+            if t_norm < best_t:
+                best_plan, best_t, best_op = p, t_norm, op
+        if best_plan is None:
+            raise ValueError("no feasible execution plan for this matrix")
+
+        if cache is not None:
+            cache.put(fp, best_plan, timings)
+            # store the winner's schedule next to the plan: serving
+            # processes constructing this (matrix, plan) never re-pack or
+            # re-color
+            if (best_op is not None
+                    and getattr(best_op, "schedule", None) is not None):
+                cache.put_schedule(best_op.schedule)
+            if save and cache.path is not None:
+                cache.save()
+
+    mesh_plans: Dict[int, ExecutionPlan] = {}
+    for p_mesh in mesh_ps:
+        res = tune_mesh(M, p_mesh, cache=cache, x=x, measure=measure,
+                        warmup=warmup, repeats=repeats,
+                        interpret=interpret, save=save)
+        mesh_plans[p_mesh] = res.plan
+    return TuneResult(plan=best_plan, fingerprint=fp, timings_s=timings,
+                      cached=cached_local, mesh_plans=mesh_plans)
+
+
+def tune_mesh(M: CSRC, p: int,
+              cache: Optional[PlanCache] = None,
+              mesh=None,
+              axis: str = "rows",
+              x: Optional[np.ndarray] = None,
+              candidates: Optional[List[ExecutionPlan]] = None,
+              measure: Optional[Callable] = None,
+              warmup: int = 1,
+              repeats: int = 3,
+              interpret: bool = True,
+              save: bool = True) -> TuneResult:
+    """The mesh-aware tuning mode: measure distributed candidates on an
+    actual p-device mesh and cache the per-(matrix, p) winner.
+
+    The winner is recorded under ``mesh_fingerprint(fingerprint(M), p)``,
+    so local and distributed decisions for one matrix class coexist in
+    the same cache: the serving engine asks for the mesh entry when it
+    has a mesh to serve from, and the local entry otherwise.  The process
+    must see ``p`` devices (``XLA_FLAGS=--xla_force_host_platform_
+    device_count=<p>`` on CPU); a ``measure(fn, x) -> seconds`` injection
+    makes the mode testable on one device with a 1-wide mesh.
+    """
+    import jax
+    from .distributed import build_sharded_spmv
+
+    fp = mesh_fingerprint(fingerprint(M), p)
+    if cache is not None:
+        hit = cache.get(fp, require_measured=True)
+        if hit is not None:
+            return TuneResult(plan=hit, fingerprint=fp, timings_s={},
+                              cached=True)
+
+    if mesh is None:
+        ndev = len(jax.devices())
+        if ndev < p:
+            raise ValueError(
+                f"mesh-aware tuning for p={p} needs {p} devices, this "
+                f"process sees {ndev}; relaunch with XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={p}")
+        mesh = jax.make_mesh((p,), (axis,))
+
+    stats = stats_of(M)
+    cands = (candidates if candidates is not None
+             else enumerate_mesh_plans(stats, p))
+    if not cands:
+        raise ValueError(
+            f"no feasible distributed plan for this matrix at p={p}")
+    if measure is None:
+        def measure(fn, xv):
+            return _time_fn(fn, xv, warmup=warmup, repeats=repeats)
+    _x_for = _rhs_pool(M, x)
+
+    timings: Dict[str, float] = {}
+    best_plan, best_t = None, float("inf")
+    for cand in cands:
         try:
-            op = SpmvOperator.from_plan(M, p, interpret=interpret)
+            # measured WITHOUT the cache: only the argmin's artifacts
+            # are shipped (below) — losers would otherwise persist one
+            # matrix-sized npz per candidate geometry
+            fn = build_sharded_spmv(M, mesh, axis, strategy="auto",
+                                    cache=None, plan=cand,
+                                    interpret=interpret)
         except ValueError:
-            continue              # pack-time infeasibility (bandwidth gate)
-        t = float(measure(op, _x_for(p.nrhs)))
-        timings[p.key()] = t
-        # argmin on per-RHS-column time: an nrhs=8 candidate does 8x the
-        # work of a single product, so raw runtimes are not comparable
-        # across block widths
-        t_norm = t / p.nrhs
+            continue              # halo band gate / window over cap
+        t = float(measure(fn, _x_for(cand.nrhs)))
+        timings[cand.key()] = t
+        t_norm = t / cand.nrhs
         if t_norm < best_t:
-            best_plan, best_t, best_op = p, t_norm, op
+            best_plan, best_t = cand, t_norm
     if best_plan is None:
-        raise ValueError("no feasible execution plan for this matrix")
+        raise ValueError(
+            f"no distributed candidate survived measurement at p={p}")
 
     if cache is not None:
         cache.put(fp, best_plan, timings)
-        # store the winner's schedule next to the plan: serving processes
-        # constructing this (matrix, plan) never re-pack or re-color
-        if best_op is not None and getattr(best_op, "schedule", None) is not None:
-            cache.put_schedule(best_op.schedule)
+        # ship the winner's schedule + shard-layout artifacts (layout
+        # builders re-serve the memoized build and persist it)
+        build_sharded_spmv(M, mesh, axis, strategy="auto", cache=cache,
+                           plan=best_plan, interpret=interpret)
         if save and cache.path is not None:
             cache.save()
     return TuneResult(plan=best_plan, fingerprint=fp, timings_s=timings,
@@ -526,6 +827,33 @@ def plan_for(M: CSRC,
         if hit is not None:
             return hit
     plan = heuristic_plan(stats_of(M))
+    if cache is not None:
+        cache.put(fp, plan)
+        if cache.path is not None:
+            cache.save()
+    return plan
+
+
+def mesh_plan_for(M: CSRC, p: int,
+                  cache: Optional[PlanCache] = None,
+                  autotune: bool = False,
+                  interpret: bool = True,
+                  **tune_kw) -> ExecutionPlan:
+    """The distributed plan to serve this matrix with on a p-way mesh.
+
+    Mirrors :func:`plan_for` for the per-(matrix, p) cache keys: hit wins;
+    ``autotune=True`` measures on an actual mesh (``tune_mesh``);
+    ``autotune=False`` falls back to the collective-bytes heuristic
+    (cached, so the decision is stable across calls)."""
+    if autotune:
+        return tune_mesh(M, p, cache=cache, interpret=interpret,
+                         **tune_kw).plan
+    fp = mesh_fingerprint(fingerprint(M), p)
+    if cache is not None:
+        hit = cache.get(fp)
+        if hit is not None:
+            return hit
+    plan = heuristic_mesh_plan(stats_of(M), p)
     if cache is not None:
         cache.put(fp, plan)
         if cache.path is not None:

@@ -119,8 +119,12 @@ def _flat_arrays(ros, ja, al, au, *, nt: int, tm: int, w_pad: int,
 
 
 def pack_flat(M: CSRC, tm: int = 128, ks: int = 8, w_cap: int = 4096,
-              index_dtype=jnp.int32) -> FlatBlockEll:
-    """Per-tile-exact packing (no cross-tile ELL padding)."""
+              dtype=jnp.float32, index_dtype=jnp.int32) -> FlatBlockEll:
+    """Per-tile-exact packing (no cross-tile ELL padding).
+
+    ``dtype=jnp.bfloat16`` halves the value streams (plan.value_dtype);
+    ``index_dtype=jnp.int16`` halves the index streams (plan.index_dtype).
+    """
     assert M.is_square
     n = M.n
     band = bandwidth(M)
@@ -141,14 +145,14 @@ def pack_flat(M: CSRC, tm: int = 128, ks: int = 8, w_cap: int = 4096,
     k = max(1, int(np.asarray(M.ja).shape[0]))
     return FlatBlockEll(
         n=n, tm=tm, nt=nt, w_pad=w_pad, total_steps=total, ks=ks,
-        vals_l=jnp.asarray(vals_l.reshape(total, ks, 128)),
+        vals_l=jnp.asarray(vals_l.reshape(total, ks, 128), dtype=dtype),
         vals_u=jnp.asarray((vals_l if M.numerically_symmetric else vals_u
-                            ).reshape(total, ks, 128)),
+                            ).reshape(total, ks, 128), dtype=dtype),
         col_local=jnp.asarray(col_local.reshape(total, ks, 128),
                               dtype=index_dtype),
         row_in_win=jnp.asarray(row_in_win.reshape(total, ks, 128),
                                dtype=index_dtype),
-        ad=jnp.asarray(ad),
+        ad=jnp.asarray(ad, dtype=dtype),
         tile_of_step=jnp.asarray(tile_of_step),
         first_of_tile=jnp.asarray(first),
         num_symmetric=bool(M.numerically_symmetric),
@@ -166,24 +170,11 @@ def refresh_flat_values(pack: FlatBlockEll, M: CSRC) -> FlatBlockEll:
     if bool(M.numerically_symmetric) != pack.num_symmetric:
         raise ValueError(
             "numeric symmetry changed; rebuild instead of refreshing")
-    ros = row_of_slot(M)
-    k = ros.shape[0]
     step = pack.ks * 128
-    tile = ros // pack.tm
-    counts = np.bincount(tile, minlength=pack.nt)
-    nk = np.maximum(1, -(-counts // step))
-    starts = np.concatenate([[0], np.cumsum(nk)])[:-1]
-    first_slot = np.searchsorted(tile, np.arange(pack.nt))
-    q = np.arange(k) - first_slot[tile]
-    j = starts[tile] + q // step
-    pos = q % step
-    vals_l = np.zeros((pack.total_steps, step), np.float32)
-    vals_l[j, pos] = np.asarray(M.al)
-    if pack.num_symmetric:           # vals_u aliases vals_l; skip the fill
-        vals_u = vals_l
-    else:
-        vals_u = np.zeros((pack.total_steps, step), np.float32)
-        vals_u[j, pos] = np.asarray(M.au)
+    vals_l, vals_u = _value_fill_steps(
+        row_of_slot(M), np.asarray(M.al), np.asarray(M.au),
+        nt=pack.nt, tm=pack.tm, step=step, steps=pack.total_steps,
+        num_symmetric=pack.num_symmetric)
     ad = np.zeros((pack.nt, pack.tm), np.float32)
     ad.reshape(-1)[:pack.n] = np.asarray(M.ad)
     vdtype = pack.vals_l.dtype
@@ -353,7 +344,7 @@ def flat_spmm(pack: FlatBlockEll, X: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def _stack_shard_packs(slot_sets, *, nt, tm, w_pad, step, num_symmetric,
-                       index_dtype=jnp.int32):
+                       dtype=jnp.float32, index_dtype=jnp.int32):
     """Build one flat pack per shard and stack on a leading shard axis.
 
     ``slot_sets`` yields (ros, ja, al, au) per shard.  Step counts are
@@ -381,7 +372,8 @@ def _stack_shard_packs(slot_sets, *, nt, tm, w_pad, step, num_symmetric,
         out["first_of_tile"].append(first)
     arrays = {}
     for k, v in out.items():
-        dt = index_dtype if k in ("col_local", "row_in_win") else None
+        dt = (index_dtype if k in ("col_local", "row_in_win")
+              else dtype if k in ("vals_l", "vals_u") else None)
         arrays[k] = jnp.asarray(np.stack(v), dtype=dt)
     return steps, arrays
 
@@ -422,7 +414,7 @@ class FlatShards:
 
 
 def pack_flat_shards(M: CSRC, starts, tm: int = 128, ks: int = 8,
-                     w_cap: int = 4096,
+                     w_cap: int = 4096, dtype=jnp.float32,
                      index_dtype=jnp.int32) -> FlatShards:
     """Split a square CSRC matrix into per-shard flat packs along the row
     partition ``starts`` ((p+1,) boundaries from the schedule layer)."""
@@ -450,7 +442,8 @@ def pack_flat_shards(M: CSRC, starts, tm: int = 128, ks: int = 8,
 
     steps, arrays = _stack_shard_packs(
         list(slot_sets()), nt=nt, tm=tm, w_pad=w_pad, step=step,
-        num_symmetric=M.numerically_symmetric, index_dtype=index_dtype)
+        num_symmetric=M.numerically_symmetric, dtype=dtype,
+        index_dtype=index_dtype)
 
     ad = np.zeros((p, nt * tm), np.float32)
     ad_full = np.asarray(M.ad)
@@ -459,7 +452,7 @@ def pack_flat_shards(M: CSRC, starts, tm: int = 128, ks: int = 8,
         ad[t, r0:r1] = ad_full[r0:r1]
     return FlatShards(
         p=p, n=n, tm=tm, nt=nt, w_pad=w_pad, steps=steps, ks=ks,
-        ad=jnp.asarray(ad.reshape(p, nt, tm)),
+        ad=jnp.asarray(ad.reshape(p, nt, tm), dtype=dtype),
         num_symmetric=bool(M.numerically_symmetric), **arrays)
 
 
@@ -500,7 +493,8 @@ class FlatHalo:
 
 
 def pack_flat_halo(M: CSRC, p: int, tm: int = 128, ks: int = 8,
-                   w_cap: int = 4096, index_dtype=jnp.int32) -> FlatHalo:
+                   w_cap: int = 4096, dtype=jnp.float32,
+                   index_dtype=jnp.int32) -> FlatHalo:
     """Per-shard local flat packs for the halo strategy.  Raises ValueError
     when the band does not fit inside one shard (same feasibility gate as
     schedule.build_halo_layout) or the local window exceeds ``w_cap``."""
@@ -538,7 +532,8 @@ def pack_flat_halo(M: CSRC, p: int, tm: int = 128, ks: int = 8,
 
     steps, arrays = _stack_shard_packs(
         list(slot_sets()), nt=nt, tm=tm, w_pad=w_pad, step=step,
-        num_symmetric=M.numerically_symmetric, index_dtype=index_dtype)
+        num_symmetric=M.numerically_symmetric, dtype=dtype,
+        index_dtype=index_dtype)
 
     ad = np.zeros((p, nt * tm), np.float32)
     ad_full = np.asarray(M.ad)
@@ -550,5 +545,110 @@ def pack_flat_halo(M: CSRC, p: int, tm: int = 128, ks: int = 8,
     return FlatHalo(
         p=p, ns=ns, h=h, n_local=n_local, tm=tm, nt=nt, w_pad=w_pad,
         steps=steps, ks=ks,
-        ad=jnp.asarray(ad.reshape(p, nt, tm)),
+        ad=jnp.asarray(ad.reshape(p, nt, tm), dtype=dtype),
         num_symmetric=bool(M.numerically_symmetric), **arrays)
+
+
+# ---------------------------------------------------------------------------
+# Same-structure value refresh of the stacked shard layouts (the mesh-path
+# analog of refresh_flat_values: FEM time stepping / serving update_values
+# must not re-pack or re-partition on the mesh)
+# ---------------------------------------------------------------------------
+
+def _value_fill_steps(ros, al, au, *, nt, tm, step, steps, num_symmetric):
+    """Vectorized value-only refill of one shard's flat step arrays.
+
+    ``ros`` is the shard's slot rows (global or local coordinates),
+    non-decreasing — exactly the order `_flat_arrays` filled with (its
+    stable sort over a non-decreasing tile array is the identity), so the
+    (step, position) map is re-derived without touching index streams.
+    """
+    k = ros.shape[0]
+    vals_l = np.zeros((steps, step), np.float32)
+    vals_u = vals_l if num_symmetric else np.zeros((steps, step), np.float32)
+    if k:
+        tile = ros // tm
+        counts = np.bincount(tile, minlength=nt)
+        nk = np.maximum(1, -(-counts // step))
+        starts = np.concatenate([[0], np.cumsum(nk)])[:-1]
+        first_slot = np.searchsorted(tile, np.arange(nt))
+        q = np.arange(k) - first_slot[tile]
+        j = starts[tile] + q // step
+        pos = q % step
+        vals_l[j, pos] = al
+        if not num_symmetric:
+            vals_u[j, pos] = au
+    return vals_l, vals_u
+
+
+def refresh_flat_shards(fs: FlatShards, M: CSRC, starts) -> FlatShards:
+    """Refill a FlatShards stack's value streams from a same-structure
+    matrix over the same partition ``starts`` — no index stream, tile map,
+    or step-count work."""
+    assert M.is_square and M.n == fs.n, "structure mismatch"
+    if bool(M.numerically_symmetric) != fs.num_symmetric:
+        raise ValueError(
+            "numeric symmetry changed; rebuild instead of refreshing")
+    starts = np.asarray(starts, dtype=np.int64)
+    ros = row_of_slot(M)
+    al = np.asarray(M.al)
+    au = np.asarray(M.au)
+    step = fs.ks * 128
+    vls, vus = [], []
+    for t in range(fs.p):
+        sel = (ros >= starts[t]) & (ros < starts[t + 1])
+        vl, vu = _value_fill_steps(
+            ros[sel], al[sel], au[sel], nt=fs.nt, tm=fs.tm, step=step,
+            steps=fs.steps, num_symmetric=fs.num_symmetric)
+        vls.append(vl.reshape(fs.steps, fs.ks, 128))
+        vus.append(vu.reshape(fs.steps, fs.ks, 128))
+    ad = np.zeros((fs.p, fs.nt * fs.tm), np.float32)
+    ad_full = np.asarray(M.ad)
+    for t in range(fs.p):
+        r0, r1 = int(starts[t]), int(starts[t + 1])
+        ad[t, r0:r1] = ad_full[r0:r1]
+    vdtype = fs.vals_l.dtype
+    return dataclasses.replace(
+        fs,
+        vals_l=jnp.asarray(np.stack(vls), dtype=vdtype),
+        vals_u=jnp.asarray(np.stack(vus), dtype=vdtype),
+        ad=jnp.asarray(ad.reshape(fs.p, fs.nt, fs.tm),
+                       dtype=fs.ad.dtype))
+
+
+def refresh_flat_halo(lay: FlatHalo, M: CSRC) -> FlatHalo:
+    """Refill a FlatHalo stack's value streams from a same-structure
+    matrix (local halo coordinates re-derived from the layout geometry)."""
+    assert M.is_square, "structure mismatch"
+    if bool(M.numerically_symmetric) != lay.num_symmetric:
+        raise ValueError(
+            "numeric symmetry changed; rebuild instead of refreshing")
+    n = M.n
+    ros = row_of_slot(M)
+    al = np.asarray(M.al)
+    au = np.asarray(M.au)
+    shard_of_slot = ros // lay.ns
+    step = lay.ks * 128
+    vls, vus = [], []
+    for t in range(lay.p):
+        sel = shard_of_slot == t
+        vl, vu = _value_fill_steps(
+            ros[sel] - t * lay.ns + lay.h, al[sel], au[sel],
+            nt=lay.nt, tm=lay.tm, step=step, steps=lay.steps,
+            num_symmetric=lay.num_symmetric)
+        vls.append(vl.reshape(lay.steps, lay.ks, 128))
+        vus.append(vu.reshape(lay.steps, lay.ks, 128))
+    ad = np.zeros((lay.p, lay.nt * lay.tm), np.float32)
+    ad_full = np.asarray(M.ad)
+    for t in range(lay.p):
+        r0 = t * lay.ns
+        r1 = min(n, r0 + lay.ns)
+        if r1 > r0:
+            ad[t, lay.h:lay.h + (r1 - r0)] = ad_full[r0:r1]
+    vdtype = lay.vals_l.dtype
+    return dataclasses.replace(
+        lay,
+        vals_l=jnp.asarray(np.stack(vls), dtype=vdtype),
+        vals_u=jnp.asarray(np.stack(vus), dtype=vdtype),
+        ad=jnp.asarray(ad.reshape(lay.p, lay.nt, lay.tm),
+                       dtype=lay.ad.dtype))

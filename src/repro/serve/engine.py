@@ -13,10 +13,14 @@ Two engines share the continuous-batching discipline:
   submit (matrix_id, x) products; matrices are registered once and get an
   :class:`ExecutionPlan` from the plan-cache/tuner (a cache hit means a
   known matrix class is never re-tuned), and each tick answers all pending
-  requests per matrix with one batched multi-RHS product.
+  requests per matrix with one batched multi-RHS product through a
+  pluggable :class:`~repro.serve.executor.SpmvExecutor` — single-device
+  (``LocalExecutor``) or distributed across a mesh (``MeshExecutor``),
+  chosen by the plan's ``strategy``/``mesh_p`` fields
+  (serve/placement.py).
 
-Single-chip CPU execution here; the decode step is the same function the
-launch layer lowers for the 256-chip serve dry-run.
+The decode step is the same function the launch layer lowers for the
+256-chip serve dry-run.
 """
 from __future__ import annotations
 
@@ -123,57 +127,94 @@ class SpmvRequest:
     x: np.ndarray
 
 
+class SpmvResult(np.ndarray):
+    """A served y = A·x with the metadata benchmarks need to attribute
+    latency to the chosen path: behaves exactly like the float32 result
+    array (ndarray subclass), plus
+
+      matrix_id   the registered matrix the request hit
+      plan_key    ExecutionPlan.key() of the plan that served it
+      path        shard-compute path ('kernel'/'flat'/'segment'/...)
+      strategy    'local' or 'mesh'
+      mesh_p      shard count (1 for local)
+      executor    executor kind that ran it
+      batched     how many requests shared the coalesced SpMM
+    """
+
+    _META = ("matrix_id", "plan_key", "path", "strategy", "mesh_p",
+             "executor", "batched")
+
+    def __array_finalize__(self, obj):
+        for k in self._META:
+            setattr(self, k, getattr(obj, k, None))
+
+    def meta(self) -> Dict[str, object]:
+        return {k: getattr(self, k, None) for k in self._META}
+
+
 class SpmvServingEngine:
     """Continuous-batching SpMV service over tuned execution plans.
 
     ``register`` resolves the matrix's plan through the shared plan cache
     (``autotune=True`` measures candidates on a miss; a hit — e.g. a second
-    matrix of an already-served class — constructs the operator with zero
-    measurements) and reuses the schedule artifact stored next to the plan
-    (core/schedule.py): re-registering a known matrix performs zero
-    pack/partition/coloring work.  Plans resolve through the KernelPath
-    registry, so every registered path — including 'flat' for skewed
-    matrices — is servable with no engine changes.  ``step`` groups the
-    queue by matrix and answers each group with **one batched multi-RHS
-    SpMM** through the operator's tuned path — never a loop of single
-    products.
+    matrix of an already-served class — constructs the executor with zero
+    measurements) and backs it with a pluggable executor
+    (serve/executor.py): ``strategy='local'`` plans run today's
+    single-device SpmvOperator, ``strategy='mesh'`` plans run the
+    distributed strategies across ``plan.mesh_p`` shards, with every
+    schedule / shard-layout artifact served from (and shipped through)
+    the PlanCache npz layer — re-registering a known matrix performs zero
+    pack/partition/coloring work on either path.  Construct with
+    ``mesh_p=N`` to prefer the per-(matrix, p) distributed cache entries
+    when the process has N devices (placement degrades to local
+    otherwise).  ``step`` groups the queue by matrix and answers each
+    group with **one batched multi-RHS SpMM** through the chosen
+    executor — never a loop of single products; results are
+    :class:`SpmvResult` arrays carrying the plan/strategy metadata.
     """
 
     def __init__(self, cache=None, autotune: bool = False,
-                 interpret: bool = True, max_batch: int = 64):
+                 interpret: bool = True, max_batch: int = 64,
+                 mesh_p: Optional[int] = None):
         from repro.core.tuner import PlanCache
         self.cache = cache if cache is not None else PlanCache()
         self.autotune = autotune
         self.interpret = interpret
         self.max_batch = max_batch
+        self.mesh_p = mesh_p
         self._matrices: Dict[str, object] = {}
         self._ops: Dict[str, object] = {}
         self.queue: List[SpmvRequest] = []
         self._uid = 0
 
-    def register(self, matrix_id: str, M):
+    def register(self, matrix_id: str, M, plan=None):
         """Install a matrix; returns the ExecutionPlan it will run with.
 
-        Registering a matrix whose *structure* is already known to the
-        cache (FEM time stepping: same connectivity, re-assembled values)
-        takes the value-refresh fast path through ``schedule_for`` — the
-        plan is a fingerprint hit and the schedule only refreshes value
-        streams, zero re-pack/re-partition/re-coloring (the
-        ``BUILD_COUNTS`` probe asserts it).
+        The plan resolves through placement (mesh entry when the engine
+        has a mesh width and the process the devices; local otherwise) —
+        or is pinned by the explicit ``plan`` argument.  Registering a
+        matrix whose *structure* is already known to the cache (FEM time
+        stepping: same connectivity, re-assembled values) takes the
+        value-refresh fast path through ``schedule_for`` — the plan is a
+        fingerprint hit and the schedule only refreshes value streams,
+        zero re-pack/re-partition/re-coloring (the ``BUILD_COUNTS`` probe
+        asserts it).
         """
-        from repro.core import tuner as _tuner
-        from repro.kernels.ops import SpmvOperator
-        plan = _tuner.plan_for(M, cache=self.cache, autotune=self.autotune,
-                               interpret=self.interpret)
+        from . import placement
+        if plan is None:
+            plan = placement.resolve_plan(
+                M, cache=self.cache, autotune=self.autotune,
+                interpret=self.interpret, mesh_p=self.mesh_p)
         self._matrices[matrix_id] = M
-        self._ops[matrix_id] = SpmvOperator.from_plan(
-            M, plan, interpret=self.interpret, cache=self.cache)
+        self._ops[matrix_id] = placement.build_executor(
+            M, plan, cache=self.cache, interpret=self.interpret)
         return plan
 
     def update_values(self, matrix_id: str, M):
         """In-place value refresh of a registered matrix (structure must
-        be unchanged): ``SpmvOperator.update_values`` swaps the value
-        streams without any structural rebuild."""
+        be unchanged): the executor swaps the value streams without any
+        structural rebuild — on the mesh path this refreshes the shipped
+        shard layouts too (``BUILD_COUNTS['shard_value_refresh']``)."""
         if matrix_id not in self._ops:
             raise KeyError(f"matrix {matrix_id!r} not registered")
         self._matrices[matrix_id] = M
@@ -182,6 +223,9 @@ class SpmvServingEngine:
 
     def plan(self, matrix_id: str):
         return self._ops[matrix_id].plan
+
+    def executor(self, matrix_id: str):
+        return self._ops[matrix_id]
 
     def submit(self, matrix_id: str, x: np.ndarray) -> int:
         if matrix_id not in self._ops:
@@ -197,10 +241,25 @@ class SpmvServingEngine:
         self.queue.append(SpmvRequest(uid=uid, matrix_id=matrix_id, x=x))
         return uid
 
-    def step(self) -> Dict[int, np.ndarray]:
+    def _wrap(self, y, matrix_id: str, batched: int) -> SpmvResult:
+        """Attach per-request plan/strategy metadata to a result array."""
+        ex = self._ops[matrix_id]
+        plan = getattr(ex, "plan", None)
+        r = np.ascontiguousarray(np.asarray(y)).view(SpmvResult)
+        r.matrix_id = matrix_id
+        r.plan_key = plan.key() if plan is not None else None
+        r.path = getattr(plan, "path", None)
+        r.strategy = getattr(plan, "strategy", "local")
+        r.mesh_p = getattr(plan, "mesh_p", 1)
+        r.executor = getattr(ex, "kind", "local")
+        r.batched = batched
+        return r
+
+    def step(self) -> Dict[int, SpmvResult]:
         """One tick: answer up to max_batch requests per matrix, each group
-        coalesced into a single batched SpMM through the tuned operator
-        (kernel, segment, and colorful paths all execute blocks natively)."""
+        coalesced into a single batched SpMM through the chosen executor
+        (every registered path executes blocks natively, locally or on
+        the mesh)."""
         by_matrix: Dict[str, List[SpmvRequest]] = {}
         rest: List[SpmvRequest] = []
         for r in self.queue:
@@ -210,20 +269,22 @@ class SpmvServingEngine:
             else:
                 rest.append(r)
         self.queue = rest
-        out: Dict[int, np.ndarray] = {}
+        out: Dict[int, SpmvResult] = {}
         for mid, group in by_matrix.items():
             op = self._ops[mid]
             if len(group) == 1:
-                out[group[0].uid] = np.asarray(op(jnp.asarray(group[0].x)))
+                out[group[0].uid] = self._wrap(
+                    op(jnp.asarray(group[0].x)), mid, batched=1)
             else:
                 X = jnp.asarray(np.stack([r.x for r in group], axis=1))
                 Y = np.asarray(op(X))
                 for i, r in enumerate(group):
-                    out[r.uid] = Y[:, i]
+                    out[r.uid] = self._wrap(Y[:, i], mid,
+                                            batched=len(group))
         return out
 
-    def run_until_drained(self, max_ticks: int = 1000) -> Dict[int, np.ndarray]:
-        out: Dict[int, np.ndarray] = {}
+    def run_until_drained(self, max_ticks: int = 1000) -> Dict[int, SpmvResult]:
+        out: Dict[int, SpmvResult] = {}
         for _ in range(max_ticks):
             if not self.queue:
                 break

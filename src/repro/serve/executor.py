@@ -1,0 +1,204 @@
+"""Pluggable SpMV executors: how a registered matrix actually computes.
+
+The serving engine (serve/engine.py) resolves an
+:class:`~repro.core.plan.ExecutionPlan` per matrix and hands execution to
+whichever executor the plan's ``strategy`` field names:
+
+* :class:`LocalExecutor` — ``strategy='local'``: today's single-device
+  :class:`~repro.kernels.ops.SpmvOperator`, schedule-cached through the
+  PlanCache (zero pack/partition/coloring on a hit).
+
+* :class:`MeshExecutor` — ``strategy='mesh'``: the paper's accumulation
+  strategies across ``plan.mesh_p`` shards via
+  :func:`~repro.core.distributed.build_sharded_spmv`.  Every structural
+  artifact the mesh needs — the :class:`~repro.core.schedule.SpmvSchedule`
+  (row partition) and the per-shard layout (``ShardedSlots`` /
+  ``HaloLayout`` for segment shard-compute, ``FlatShards`` / ``FlatHalo``
+  for flat) — is built through the schedule layer and, given a cache,
+  served from / shipped to the PlanCache npz layer keyed by
+  (fingerprint, value digest, p, strategy kind): a worker process
+  re-registering a known matrix performs zero per-shard pack work.
+
+Both executors expose the same three-method surface (``__call__``,
+``update_values``, ``plan``), so the engine's coalesced multi-RHS step
+path is executor-agnostic: a request batch is answered by one SpMM
+through whichever executor the plan chose.
+
+``update_values`` is the FEM time-stepping / model-refresh fast path on
+either side: the local executor refreshes the schedule's value streams
+(``BUILD_COUNTS['value_refresh']``), the mesh executor additionally
+refreshes the shard layout's value streams
+(``BUILD_COUNTS['shard_value_refresh']``) — no re-pack, no re-partition,
+no re-coloring on either path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csrc import CSRC
+from repro.core.plan import ExecutionPlan
+
+
+class SpmvExecutor:
+    """Executor surface the serving engine programs against."""
+
+    kind: str = "abstract"
+    plan: ExecutionPlan
+
+    @property
+    def path(self) -> str:
+        """Shard-compute path of the plan (SpmvOperator API parity)."""
+        return self.plan.path
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def update_values(self, M: CSRC) -> "SpmvExecutor":
+        raise NotImplementedError
+
+
+class LocalExecutor(SpmvExecutor):
+    """Single-device execution through a tuned SpmvOperator."""
+
+    kind = "local"
+
+    def __init__(self, M: CSRC, plan: ExecutionPlan, cache=None,
+                 interpret: bool = True):
+        from repro.kernels.ops import SpmvOperator
+        self.M = M
+        self.op = SpmvOperator.from_plan(M, plan, interpret=interpret,
+                                         cache=cache)
+        self.plan = self.op.plan
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.op(x)
+
+    def update_values(self, M: CSRC) -> "LocalExecutor":
+        self.M = M
+        self.op.update_values(M)
+        return self
+
+    @property
+    def schedule(self):
+        return self.op.schedule
+
+
+class MeshExecutor(SpmvExecutor):
+    """Distributed execution across ``plan.mesh_p`` shards.
+
+    Construction materializes (or fetches from the cache's npz layer) the
+    schedule and the per-shard layout, then compiles one shard_map'd
+    apply through :func:`~repro.core.distributed.build_sharded_spmv` with
+    the layout injected.  ``update_values`` refreshes value streams in
+    place — schedule and layout — and recompiles the apply; the matrix
+    structure, partition, halo geometry, and index streams never move.
+    """
+
+    kind = "mesh"
+
+    def __init__(self, M: CSRC, plan: ExecutionPlan, mesh=None,
+                 cache=None, interpret: bool = True, axis: str = "rows"):
+        if plan.strategy != "mesh":
+            raise ValueError(
+                f"MeshExecutor needs a strategy='mesh' plan, got "
+                f"{plan.key()}")
+        p = plan.mesh_p
+        if mesh is None:
+            ndev = len(jax.devices())
+            if ndev < p:
+                raise ValueError(
+                    f"plan {plan.key()} needs {p} devices, this process "
+                    f"sees {ndev}; relaunch with XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={p} or "
+                    "register a local plan")
+            mesh = jax.make_mesh((p,), (axis,))
+        self.plan = plan
+        self.mesh = mesh
+        self.axis = axis
+        self.p = p
+        self.cache = cache
+        self.interpret = interpret
+        self._flat = plan.path == "flat"
+        self._sched = None
+        self.layout = None
+        self._structure_digest = None
+        self._build(M)
+
+    # the schedule artifact only supplies the row partition here; a flat
+    # plan builds its per-shard sub-packs instead of the (unused)
+    # full-matrix pack, so the schedule request is path-free
+    def _sched_plan(self) -> ExecutionPlan:
+        return (dataclasses.replace(self.plan, path="segment")
+                if self._flat else self.plan)
+
+    def _build(self, M: CSRC):
+        from repro.core import distributed as dist
+        from repro.core import schedule as schedule_mod
+        self.M = M
+        self._structure_digest = schedule_mod.structure_digest(M)
+        strat = self.plan.accumulation
+        if strat == "halo":
+            # halo geometry depends only on (matrix, p): no schedule needed
+            self._sched = None
+            if self._flat:
+                self.layout = schedule_mod.build_flat_halo_layout(
+                    M, self.p, self.plan, cache=self.cache)
+            else:
+                self.layout = schedule_mod.build_halo_layout(
+                    M, self.p, cache=self.cache)
+        else:
+            self._sched = schedule_mod.schedule_for(
+                M, self._sched_plan(), cache=self.cache, p=self.p)
+            part = self._sched.partition
+            if self._flat:
+                self.layout = schedule_mod.build_flat_shards(
+                    M, part, self.plan, cache=self.cache)
+            else:
+                self.layout = schedule_mod.build_sharded_slots(
+                    M, part, cache=self.cache)
+        self._fn = dist.build_sharded_spmv(
+            M, self.mesh, self.axis, strategy=strat, schedule=self._sched,
+            cache=self.cache, plan=self.plan, interpret=self.interpret,
+            layout=self.layout)
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        # reduce_scatter pads y to p equal intervals; serve the true rows
+        return self._fn(x)[:self.M.n]
+
+    def update_values(self, M: CSRC) -> "MeshExecutor":
+        """Same-structure value refresh on the mesh: schedule value
+        streams (via the cache's structure-digest fast path) and shard
+        layout value streams are rewritten; partition, halo geometry, and
+        index streams are reused untouched.  Raises ValueError when the
+        structure actually differs (same contract as the local path's
+        ``refresh_schedule``) — the shard layouts can only be value-
+        refilled against the slot order they were built for."""
+        from repro.core import distributed as dist
+        from repro.core import schedule as schedule_mod
+        if schedule_mod.structure_digest(M) != self._structure_digest:
+            raise ValueError(
+                "MeshExecutor.update_values: matrix structure differs "
+                "from the registered one; re-register for a full rebuild")
+        part = None
+        if self._sched is not None:
+            if self.cache is not None:
+                self._sched = schedule_mod.schedule_for(
+                    M, self._sched_plan(), cache=self.cache, p=self.p)
+            else:
+                self._sched = schedule_mod.refresh_schedule(self._sched, M)
+            part = self._sched.partition
+        self.layout = schedule_mod.refresh_shard_layout(
+            self.layout, M, part=part)
+        self.M = M
+        self._fn = dist.build_sharded_spmv(
+            M, self.mesh, self.axis, strategy=self.plan.accumulation,
+            schedule=self._sched, cache=self.cache, plan=self.plan,
+            interpret=self.interpret, layout=self.layout)
+        return self
+
+    @property
+    def schedule(self):
+        return self._sched

@@ -1,0 +1,754 @@
+"""Mesh-backed serving: executors, placement, mesh-aware tuning, and the
+shipped shard-layout artifacts.
+
+Single-device tests run in-process with 1-wide meshes (a mesh plan with
+``mesh_p=1`` exercises the full MeshExecutor machinery on any host);
+8-device tests run in subprocesses with their own XLA_FLAGS, like every
+multi-device test here (device count is locked at first jax init).
+
+Bit-identity discipline: matrices and inputs are quantized to dyadic
+values (multiples of 1/64, the assembly subsystem's trick), so float32
+accumulation is exact in any order and the mesh path must reproduce the
+local oracle **bit for bit** — a dropped or double-counted shard
+contribution is always visible.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import csrc, schedule as S, tuner
+from repro.core.plan import ExecutionPlan
+from repro.serve import (LocalExecutor, MeshExecutor, SpmvResult,
+                         SpmvServingEngine)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n_devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def _build_delta(fn):
+    """Run fn and return (result, builds-that-happened) from the probe."""
+    before = dict(S.BUILD_COUNTS)
+    out = fn()
+    after = dict(S.BUILD_COUNTS)
+    delta = {k: after.get(k, 0) - before.get(k, 0)
+             for k in set(after) | set(before)}
+    return out, {k: v for k, v in delta.items() if v}
+
+
+def _dyadic(M):
+    """Quantize a CSRC matrix's values to multiples of 1/64: float32
+    accumulation of the products becomes order-independent, so every
+    strategy must agree bit for bit."""
+    def q(a):
+        return jnp.asarray(np.round(np.asarray(a) * 64.0) / 64.0,
+                           jnp.float32)
+    return dataclasses.replace(M, ad=q(M.ad), al=q(M.al), au=q(M.au))
+
+
+def _dyadic_x(m, seed=0, nrhs=None):
+    rng = np.random.default_rng(seed)
+    shape = (m,) if nrhs is None else (m, nrhs)
+    return (rng.integers(-128, 128, shape) / 64.0).astype(np.float32)
+
+
+STRUCTURAL_KEYS = ("pack", "flat_pack", "partition", "coloring",
+                   "schedule", "sharded_slots", "halo_layout",
+                   "flat_shards", "flat_halo")
+
+
+# ---------------------------------------------------------------------------
+# Plan fields: strategy / mesh_p / value_dtype
+# ---------------------------------------------------------------------------
+
+def test_plan_mesh_fields_roundtrip_and_keys():
+    p = ExecutionPlan(path="segment", strategy="mesh", mesh_p=8,
+                      accumulation="halo")
+    assert ExecutionPlan.from_json(p.to_json()) == p
+    assert ":mesh8" in p.key()
+    local = ExecutionPlan()
+    assert "mesh" not in local.key()
+    bf = ExecutionPlan(path="kernel", value_dtype="bfloat16")
+    assert ":bf16" in bf.key()
+    # old cache entries (no new fields) load with defaults
+    d = local.to_dict()
+    for k in ("strategy", "mesh_p", "value_dtype"):
+        d.pop(k)
+    assert ExecutionPlan.from_dict(d) == local
+
+
+def test_plan_mesh_fields_validation():
+    with pytest.raises(ValueError):
+        ExecutionPlan(strategy="cluster")
+    with pytest.raises(ValueError):
+        ExecutionPlan(strategy="mesh", mesh_p=0)
+    with pytest.raises(ValueError):
+        ExecutionPlan(strategy="local", mesh_p=4)   # mesh_p needs 'mesh'
+    with pytest.raises(ValueError):
+        ExecutionPlan(value_dtype="float8")
+
+
+# ---------------------------------------------------------------------------
+# Mesh-aware candidate enumeration (collective-bytes + halo gates)
+# ---------------------------------------------------------------------------
+
+def test_enumerate_mesh_plans_basic():
+    M = csrc.fem_band(512, 8, seed=1)
+    plans = tuner.enumerate_mesh_plans(tuner.stats_of(M), 8)
+    assert plans and all(p.strategy == "mesh" and p.mesh_p == 8
+                         for p in plans)
+    accs = {p.accumulation for p in plans}
+    # band 8 fits inside 64-row shards: all three strategies compete
+    assert accs == {"halo", "reduce_scatter", "allreduce"}
+    assert {p.path for p in plans} == {"segment"}   # no skew: no flat
+
+
+def test_enumerate_mesh_plans_halo_gate():
+    M = csrc.fem_band(64, 32, seed=0)       # band 32 > 64/8 rows per shard
+    plans = tuner.enumerate_mesh_plans(tuner.stats_of(M), 8)
+    assert plans
+    assert all(p.accumulation != "halo" for p in plans)
+
+
+def test_enumerate_mesh_plans_collective_bytes_gate():
+    # p=64 on a narrow band: Θ(n) collectives exceed the per-shard
+    # working set by construction; only the Θ(band) halo survives
+    M = csrc.fem_band(4096, 1, seed=1)
+    plans = tuner.enumerate_mesh_plans(tuner.stats_of(M), 64)
+    assert plans
+    assert {p.accumulation for p in plans} == {"halo"}
+
+
+def test_enumerate_mesh_plans_proposes_flat_on_skew():
+    M = csrc.skewed_band(512, 24, 3, seed=2)
+    plans = tuner.enumerate_mesh_plans(tuner.stats_of(M), 4)
+    assert {"segment", "flat"} <= {p.path for p in plans}
+
+
+def test_enumerate_mesh_plans_rectangular_empty():
+    M = csrc.rectangular_fem(64, 16, 4, seed=5)
+    assert tuner.enumerate_mesh_plans(tuner.stats_of(M), 4) == []
+
+
+# ---------------------------------------------------------------------------
+# MeshExecutor on a 1-wide mesh: bit-identical to the local oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("acc", ["allreduce", "reduce_scatter", "halo"])
+def test_mesh_executor_bit_identical_to_local_p1(acc):
+    M = _dyadic(csrc.fem_band(96, 4, seed=2))
+    local = LocalExecutor(M, ExecutionPlan(path="segment"))
+    mesh = MeshExecutor(M, ExecutionPlan(path="segment", strategy="mesh",
+                                         mesh_p=1, accumulation=acc))
+    for nrhs in (None, 3, 8):
+        x = jnp.asarray(_dyadic_x(M.m, seed=nrhs or 1, nrhs=nrhs))
+        y_local = np.asarray(local(x))
+        y_mesh = np.asarray(mesh(x))
+        assert np.array_equal(y_local, y_mesh), (acc, nrhs)
+
+
+def test_mesh_engine_register_step_update_values_p1():
+    """The full serving loop through MeshExecutor on one device:
+    coalesced step bit-identical to the local-oracle engine, zero
+    structural rebuild on re-register, value-refresh probe on
+    update_values."""
+    M = _dyadic(csrc.fem_band(96, 4, seed=3))
+    A = np.asarray(csrc.to_dense(M), np.float64)
+    mesh_plan = ExecutionPlan(path="segment", strategy="mesh", mesh_p=1,
+                              accumulation="reduce_scatter")
+    cache = tuner.PlanCache()
+    eng = SpmvServingEngine(cache=cache)
+    eng_oracle = SpmvServingEngine(cache=tuner.PlanCache())
+    eng.register("m", M, plan=mesh_plan)
+    eng_oracle.register("m", M, plan=ExecutionPlan(path="segment"))
+    assert eng.executor("m").kind == "mesh"
+
+    xs = [_dyadic_x(M.m, seed=i) for i in range(3)]
+    uids = [eng.submit("m", x) for x in xs]
+    uids_o = [eng_oracle.submit("m", x) for x in xs]
+    out = eng.run_until_drained()
+    out_o = eng_oracle.run_until_drained()
+    for u, uo in zip(uids, uids_o):
+        assert np.array_equal(np.asarray(out[u]), np.asarray(out_o[uo]))
+        np.testing.assert_allclose(out[u], A @ xs[uids.index(u)],
+                                   rtol=1e-6, atol=1e-6)
+
+    # re-register: every artifact (plan, schedule, shard layout) hits
+    _, d = _build_delta(lambda: eng.register("m2", M, plan=mesh_plan))
+    assert d == {}, f"cache-hit mesh register did precompute work: {d}"
+
+    # same-structure value refresh: value streams only, on the mesh
+    M2 = _dyadic(dataclasses.replace(M, al=M.al * 2, au=M.au * 2,
+                                     ad=M.ad * 2))
+    _, d = _build_delta(lambda: eng.update_values("m", M2))
+    assert d.get("shard_value_refresh") == 1, d
+    assert not any(d.get(k) for k in STRUCTURAL_KEYS), d
+    u = eng.submit("m", xs[0])
+    y = eng.step()[u]
+    np.testing.assert_allclose(
+        y, np.asarray(csrc.to_dense(M2), np.float64) @ xs[0],
+        rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("acc", ["reduce_scatter", "halo"])
+def test_mesh_update_values_rejects_structure_change(acc):
+    """The mesh path enforces the same contract as the local one: a
+    different-structure matrix must raise, never silently refill the
+    stale layout's value streams."""
+    M = csrc.fem_band(96, 4, seed=2)
+    M_other = csrc.fem_band(96, 4, seed=9)      # same class, new sparsity
+    ex = MeshExecutor(M, ExecutionPlan(path="segment", strategy="mesh",
+                                       mesh_p=1, accumulation=acc))
+    with pytest.raises(ValueError, match="structure differs"):
+        ex.update_values(M_other)
+    # the executor still serves the registered matrix correctly
+    x = _dyadic_x(M.m, seed=1)
+    np.testing.assert_allclose(
+        np.asarray(ex(jnp.asarray(x))),
+        np.asarray(csrc.to_dense(M), np.float64) @ x,
+        rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("acc", ["allreduce", "halo"])
+def test_mesh_flat_value_refresh_p1(acc):
+    """Flat shard-compute value refresh through the executor: value
+    streams only, correct product afterwards."""
+    M = csrc.skewed_band(256, 24, 3, seed=2)
+    ex = MeshExecutor(M, ExecutionPlan(path="flat", tm=32,
+                                       strategy="mesh", mesh_p=1,
+                                       accumulation=acc))
+    M2 = dataclasses.replace(M, al=M.al * 2, au=M.au * 2, ad=M.ad * 2)
+    _, d = _build_delta(lambda: ex.update_values(M2))
+    assert d.get("shard_value_refresh") == 1, d
+    assert not any(d.get(k) for k in STRUCTURAL_KEYS), d
+    x = np.random.default_rng(1).standard_normal(M.m).astype(np.float32)
+    y = np.asarray(ex(jnp.asarray(x)), np.float64)
+    ref = np.asarray(csrc.to_dense(M2), np.float64) @ x
+    assert np.abs(y - ref).max() / np.abs(ref).max() < 1e-5, acc
+
+
+def test_flat_shard_refresh_matches_fresh_pack_multishard():
+    """refresh_flat_shards / refresh_flat_halo at p=4 reproduce a fresh
+    pack of the new-value matrix bit for bit (host-side: no devices
+    needed — this pins the fill-order identity the refreshers rely on)."""
+    from repro.kernels import csrc_spmv_flat as F
+    M = csrc.skewed_band(300, 24, 3, seed=3)
+    M2 = dataclasses.replace(M, al=M.al * 3, au=M.au * 3, ad=M.ad * 3)
+    part = S.partition_rows_by_nnz(M, 4)
+    fs = F.pack_flat_shards(M, part.starts, tm=32)
+    fresh = F.pack_flat_shards(M2, part.starts, tm=32)
+    refreshed = F.refresh_flat_shards(fs, M2, np.asarray(part.starts))
+    for name in ("vals_l", "vals_u", "ad"):
+        assert np.array_equal(np.asarray(getattr(refreshed, name)),
+                              np.asarray(getattr(fresh, name))), name
+    lay = F.pack_flat_halo(M, 4, tm=32)
+    fresh_h = F.pack_flat_halo(M2, 4, tm=32)
+    refreshed_h = F.refresh_flat_halo(lay, M2)
+    for name in ("vals_l", "vals_u", "ad"):
+        assert np.array_equal(np.asarray(getattr(refreshed_h, name)),
+                              np.asarray(getattr(fresh_h, name))), name
+
+
+def test_mesh_halo_value_refresh_p1():
+    M = _dyadic(csrc.fem_band(96, 4, seed=5))
+    ex = MeshExecutor(M, ExecutionPlan(path="segment", strategy="mesh",
+                                       mesh_p=1, accumulation="halo"))
+    M2 = _dyadic(dataclasses.replace(M, al=M.al * 3, au=M.au * 3,
+                                     ad=M.ad * 3))
+    _, d = _build_delta(lambda: ex.update_values(M2))
+    assert d.get("shard_value_refresh") == 1, d
+    assert not any(d.get(k) for k in STRUCTURAL_KEYS), d
+    x = _dyadic_x(M.m, seed=2)
+    np.testing.assert_allclose(
+        np.asarray(ex(jnp.asarray(x))),
+        np.asarray(csrc.to_dense(M2), np.float64) @ x,
+        rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Placement: plan resolution and graceful degradation
+# ---------------------------------------------------------------------------
+
+def _skip_unless_single_device(p: int = 8):
+    from repro.serve import placement
+    if placement.device_count() >= p:
+        pytest.skip(f"process sees >= {p} devices; the degradation "
+                    "path under test needs a device-starved process")
+
+
+def test_placement_falls_back_to_local_without_devices():
+    """A mesh_p the process cannot satisfy degrades to the local plan
+    (needs a device-starved process — skipped under forced devices,
+    e.g. the CI serving-smoke job)."""
+    _skip_unless_single_device(8)
+    M = csrc.fem_band(80, 4, seed=2)
+    eng = SpmvServingEngine(cache=tuner.PlanCache(), mesh_p=8)
+    plan = eng.register("m", M)
+    assert plan.strategy == "local"
+    assert eng.executor("m").kind == "local"
+
+
+def test_mesh_executor_requires_devices():
+    _skip_unless_single_device(8)
+    M = csrc.fem_band(80, 4, seed=2)
+    plan = ExecutionPlan(path="segment", strategy="mesh", mesh_p=8,
+                         accumulation="halo")
+    with pytest.raises(ValueError, match="devices"):
+        MeshExecutor(M, plan)
+
+
+def test_placement_falls_back_to_local_for_rectangular():
+    """The distributed strategies shard square rows only: a rectangular
+    matrix on a mesh-width engine must serve through the (working)
+    local path, never a crashing mesh plan."""
+    M = csrc.rectangular_fem(64, 16, 4, seed=5)
+    eng = SpmvServingEngine(cache=tuner.PlanCache(), mesh_p=1)
+    plan = eng.register("r", M)
+    assert plan.strategy == "local"
+    assert eng.executor("r").kind == "local"
+    x = np.random.default_rng(0).standard_normal(M.m).astype(np.float32)
+    u = eng.submit("r", x)
+    np.testing.assert_allclose(
+        eng.step()[u], np.asarray(csrc.to_dense(M), np.float64) @ x,
+        rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError):
+        tuner.heuristic_mesh_plan(tuner.stats_of(M), 4)
+
+
+def test_mesh_plan_for_heuristic_is_cached():
+    M = csrc.fem_band(256, 4, seed=1)
+    cache = tuner.PlanCache()
+    plan = tuner.mesh_plan_for(M, 8, cache=cache)
+    assert plan.strategy == "mesh" and plan.mesh_p == 8
+    assert plan.accumulation == "halo"          # band fits inside a shard
+    hits0 = cache.hits
+    assert tuner.mesh_plan_for(M, 8, cache=cache) == plan
+    assert cache.hits == hits0 + 1
+    # the mesh entry does not shadow the local entry
+    local = tuner.plan_for(M, cache=cache)
+    assert local.strategy == "local"
+
+
+# ---------------------------------------------------------------------------
+# Mesh-aware tuning (1-wide mesh in-process; 8-wide in the slow test)
+# ---------------------------------------------------------------------------
+
+def test_tune_mesh_records_per_p_winner():
+    M = csrc.fem_band(128, 4, seed=2)
+    cache = tuner.PlanCache()
+    calls = []
+
+    def measure(fn, x):
+        calls.append(1)
+        return 1.0 + len(calls) * 1e-3      # first candidate wins
+
+    res = tuner.tune_mesh(M, 1, cache=cache, measure=measure)
+    assert calls and not res.cached
+    assert res.plan.strategy == "mesh" and res.plan.mesh_p == 1
+    fp = tuner.mesh_fingerprint(tuner.fingerprint(M), 1)
+    assert res.fingerprint == fp
+    entry = cache.entries[fp]
+    assert entry["measured"] and entry["timings_us"]
+    # all three accumulation strategies were actually measured
+    # (key layout: ...:<partition>:<accumulation>:mesh<p>)
+    accs = {k.split(":")[-2] for k in res.timings_s}
+    assert accs == {"halo", "reduce_scatter", "allreduce"}
+    # second call: pure cache hit, zero measurements
+    calls.clear()
+    res2 = tuner.tune_mesh(M, 1, cache=cache, measure=measure)
+    assert res2.cached and not calls and res2.plan == res.plan
+
+
+def test_tune_mesh_ps_through_tune():
+    M = csrc.fem_band(128, 4, seed=2)
+    cache = tuner.PlanCache()
+    res = tuner.tune(M, cache=cache, measure=lambda op, x: 1.0,
+                     mesh_ps=(1,))
+    assert res.plan.strategy == "local"
+    assert 1 in res.mesh_plans and res.mesh_plans[1].mesh_p == 1
+    fp = tuner.mesh_fingerprint(tuner.fingerprint(M), 1)
+    assert cache.get(fp, require_measured=True) is not None
+
+
+def test_registered_mesh_winner_drives_serving():
+    """The serving flow of the tuned mesh decision: tune_mesh fills the
+    per-(matrix, p) entry, an engine with that mesh width picks it up
+    and serves through a MeshExecutor."""
+    M = _dyadic(csrc.fem_band(96, 4, seed=7))
+    cache = tuner.PlanCache()
+    tuner.tune_mesh(M, 1, cache=cache, measure=lambda fn, x: 1.0)
+    eng = SpmvServingEngine(cache=cache, mesh_p=1)
+    plan = eng.register("m", M)
+    assert plan.strategy == "mesh" and plan.mesh_p == 1
+    assert eng.executor("m").kind == "mesh"
+    x = _dyadic_x(M.m, seed=1)
+    u = eng.submit("m", x)
+    np.testing.assert_allclose(
+        eng.step()[u], np.asarray(csrc.to_dense(M), np.float64) @ x,
+        rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Result metadata (per-request plan/strategy attribution)
+# ---------------------------------------------------------------------------
+
+def test_results_surface_plan_metadata():
+    M = csrc.fem_band(64, 3, seed=4)
+    eng = SpmvServingEngine(cache=tuner.PlanCache())
+    plan = eng.register("m", M)
+    rng = np.random.default_rng(0)
+    xs = [rng.standard_normal(M.m).astype(np.float32) for _ in range(3)]
+    uids = [eng.submit("m", x) for x in xs]
+    out = eng.run_until_drained()
+    for u in uids:
+        r = out[u]
+        assert isinstance(r, SpmvResult) and isinstance(r, np.ndarray)
+        assert r.matrix_id == "m"
+        assert r.plan_key == plan.key()
+        assert r.path == plan.path
+        assert r.strategy == "local" and r.mesh_p == 1
+        assert r.executor == "local"
+        assert r.batched == 3
+        assert set(r.meta()) == set(SpmvResult._META)
+    # single-request ticks report batched == 1
+    u = eng.submit("m", xs[0])
+    assert eng.step()[u].batched == 1
+
+
+def test_result_metadata_survives_slicing_mesh():
+    M = _dyadic(csrc.fem_band(64, 3, seed=4))
+    eng = SpmvServingEngine(cache=tuner.PlanCache())
+    eng.register("m", M, plan=ExecutionPlan(
+        path="segment", strategy="mesh", mesh_p=1,
+        accumulation="allreduce"))
+    uids = [eng.submit("m", _dyadic_x(M.m, seed=i)) for i in range(2)]
+    out = eng.run_until_drained()
+    for u in uids:
+        assert out[u].executor == "mesh"
+        assert out[u].strategy == "mesh"
+        assert out[u].batched == 2
+
+
+# ---------------------------------------------------------------------------
+# Shipped shard-layout artifacts (the PlanCache npz layer)
+# ---------------------------------------------------------------------------
+
+def _clear_layout_memos():
+    S._SHARDED_SLOTS_MEMO.clear()
+    S._HALO_LAYOUT_MEMO.clear()
+    S._FLAT_SHARDS_MEMO.clear()
+    S._FLAT_HALO_MEMO.clear()
+
+
+@pytest.mark.parametrize("acc,path", [
+    ("reduce_scatter", "segment"),
+    ("halo", "segment"),
+    ("allreduce", "flat"),
+    ("halo", "flat"),
+])
+def test_shard_layout_ships_through_npz(tmp_path, acc, path):
+    """A fresh process (simulated: new PlanCache instance + cleared
+    memos) constructs the mesh executor for a known matrix with ZERO
+    structural work — every per-shard sub-artifact loads from the npz
+    beside the plans."""
+    M = _dyadic(csrc.skewed_band(256, 24, 3, seed=2) if path == "flat"
+                else csrc.fem_band(128, 4, seed=2))
+    plan = ExecutionPlan(path=path, tm=32, strategy="mesh", mesh_p=1,
+                         accumulation=acc)
+    cache_file = str(tmp_path / "plans.json")
+    cache = tuner.PlanCache(path=cache_file)
+    ex = MeshExecutor(M, plan, cache=cache)
+    x = _dyadic_x(M.m, seed=1)
+    y_ref = np.asarray(ex(jnp.asarray(x)))
+
+    _clear_layout_memos()
+    cache2 = tuner.PlanCache(path=cache_file)
+    _, d = _build_delta(lambda: MeshExecutor(M, plan, cache=cache2))
+    assert d == {}, f"shipped artifacts were rebuilt: {d}"
+    ex2 = MeshExecutor(M, plan, cache=cache2)
+    assert np.array_equal(np.asarray(ex2(jnp.asarray(x))), y_ref)
+
+
+def test_shard_layout_npz_roundtrip(tmp_path):
+    M = csrc.fem_band(96, 4, seed=1)
+    part = S.partition_rows_by_nnz(M, 4)
+    ss = S.build_sharded_slots(M, part)
+    f = str(tmp_path / "lay.npz")
+    S.save_shard_layout_npz(f, ss)
+    back = S.load_shard_layout_npz(f)
+    assert type(back).__name__ == "ShardedSlots"
+    for name in ("row_idx", "ja", "al", "au", "ad_shard"):
+        assert np.array_equal(np.asarray(getattr(back, name)),
+                              np.asarray(getattr(ss, name))), name
+    assert np.array_equal(np.asarray(back.part.starts),
+                          np.asarray(part.starts))
+    # version gate: a bumped version is a miss, not a crash
+    ver = S.SHARD_LAYOUT_VERSION
+    try:
+        S.SHARD_LAYOUT_VERSION = ver + 1
+        with pytest.raises(ValueError):
+            S.load_shard_layout_npz(f)
+    finally:
+        S.SHARD_LAYOUT_VERSION = ver
+
+
+# ---------------------------------------------------------------------------
+# bf16 value-stream plans (satellite)
+# ---------------------------------------------------------------------------
+
+def test_bf16_enumerated_only_for_numerically_symmetric():
+    sym = tuner.stats_of(csrc.fem_band(128, 8, seed=1,
+                                       numeric_symmetric=True))
+    nonsym = tuner.stats_of(csrc.fem_band(128, 8, seed=1))
+    assert any(p.value_dtype == "bfloat16"
+               for p in tuner.enumerate_plans(sym))
+    assert all(p.value_dtype == "float32"
+               for p in tuner.enumerate_plans(nonsym))
+
+
+def test_bf16_winner_passes_accuracy_gate_and_executes():
+    M = csrc.fem_band(128, 8, seed=1, numeric_symmetric=True)
+    cache = tuner.PlanCache()
+    res = tuner.tune(M, cache=cache,
+                     measure=lambda op, x: (
+                         0.5 if op.plan.value_dtype == "bfloat16" else 1.0))
+    assert res.plan.value_dtype == "bfloat16"
+    from repro.kernels import ops
+    op = ops.SpmvOperator.from_plan(M, res.plan, cache=cache)
+    assert str(op.pack.vals_l.dtype) == "bfloat16"
+    x = np.random.default_rng(0).standard_normal(M.m).astype(np.float32)
+    y = np.asarray(op(jnp.asarray(x)), np.float64)
+    ref = np.asarray(csrc.to_dense(M), np.float64) @ x
+    assert np.abs(y - ref).max() / np.abs(ref).max() < tuner.VALUE_DTYPE_TOL
+
+
+def test_bf16_rejected_when_accuracy_gate_fails():
+    """tol=0 makes every reduced-precision candidate fail the gate: the
+    tuner must fall back to an exact plan even when bf16 measures
+    faster."""
+    M = csrc.fem_band(128, 8, seed=1, numeric_symmetric=True)
+    res = tuner.tune(M, cache=tuner.PlanCache(), value_dtype_tol=0.0,
+                     measure=lambda op, x: (
+                         0.5 if op.plan.value_dtype == "bfloat16" else 1.0))
+    assert res.plan.value_dtype == "float32"
+    assert all(":bf16" not in k for k in res.timings_s)
+
+
+def test_bf16_schedule_npz_roundtrip(tmp_path):
+    """bf16 packs persist widened to f32 and re-narrow on load."""
+    M = csrc.fem_band(96, 4, seed=2, numeric_symmetric=True)
+    plan = ExecutionPlan(path="kernel", tm=32, value_dtype="bfloat16")
+    sched = S.build_schedule(M, plan)
+    assert str(sched.pack.vals_l.dtype) == "bfloat16"
+    f = str(tmp_path / "sched.npz")
+    sched.save_npz(f)
+    back = S.SpmvSchedule.load_npz(f)
+    assert str(back.pack.vals_l.dtype) == "bfloat16"
+    assert np.array_equal(np.asarray(back.pack.vals_l, np.float32),
+                          np.asarray(sched.pack.vals_l, np.float32))
+    # artifact key separates value dtypes: no silent cross-dtype reuse
+    f32 = ExecutionPlan(path="kernel", tm=32)
+    assert (S.plan_artifact_fields(plan) != S.plan_artifact_fields(f32))
+
+
+def test_bf16_mesh_flat_plan_streams_bf16(tmp_path):
+    """An explicit bf16 mesh flat plan actually narrows the shard value
+    streams (plan.key() attribution is honest) and round-trips through
+    the shipped npz layer."""
+    M = csrc.skewed_band(256, 24, 3, seed=2)
+    plan = ExecutionPlan(path="flat", tm=32, value_dtype="bfloat16",
+                         strategy="mesh", mesh_p=1,
+                         accumulation="allreduce")
+    cache = tuner.PlanCache(path=str(tmp_path / "plans.json"))
+    ex = MeshExecutor(M, plan, cache=cache)
+    assert str(ex.layout.vals_l.dtype) == "bfloat16"
+    x = np.random.default_rng(0).standard_normal(M.m).astype(np.float32)
+    y = np.asarray(ex(jnp.asarray(x)), np.float64)
+    ref = np.asarray(csrc.to_dense(M), np.float64) @ x
+    assert np.abs(y - ref).max() / np.abs(ref).max() < tuner.VALUE_DTYPE_TOL
+    # shipped artifact reloads with the narrow dtype intact
+    _clear_layout_memos()
+    cache2 = tuner.PlanCache(path=str(tmp_path / "plans.json"))
+    _, d = _build_delta(lambda: MeshExecutor(M, plan, cache=cache2))
+    assert d == {}, d
+    ex2 = MeshExecutor(M, plan, cache=cache2)
+    assert str(ex2.layout.vals_l.dtype) == "bfloat16"
+    assert np.array_equal(np.asarray(ex2(jnp.asarray(x))),
+                          np.asarray(ex(jnp.asarray(x))))
+
+
+def test_tune_mesh_ships_only_winner_artifacts(tmp_path):
+    """Measurement must not persist one npz per losing candidate: after
+    tune_mesh, the schedules dir holds the winner's artifacts only."""
+    M = csrc.fem_band(128, 4, seed=2)
+    cache = tuner.PlanCache(path=str(tmp_path / "plans.json"))
+    res = tuner.tune_mesh(M, 1, cache=cache, measure=lambda fn, x: 1.0)
+    assert len(res.timings_s) >= 3
+    sdir = str(tmp_path / "plans_schedules")
+    layouts = [f for f in os.listdir(sdir) if f.startswith("shard-")]
+    assert len(layouts) == 1, layouts       # the winner's, nothing else
+
+
+def test_bf16_value_refresh_preserves_dtype():
+    M = csrc.fem_band(96, 4, seed=2, numeric_symmetric=True)
+    plan = ExecutionPlan(path="kernel", tm=32, value_dtype="bfloat16")
+    from repro.kernels import ops
+    op = ops.SpmvOperator.from_plan(M, plan)
+    M2 = dataclasses.replace(M, al=M.al * 2, au=M.al * 2, ad=M.ad * 2)
+    _, d = _build_delta(lambda: op.update_values(M2))
+    assert d == {"value_refresh": 1}, d
+    assert str(op.pack.vals_l.dtype) == "bfloat16"
+
+
+# ---------------------------------------------------------------------------
+# 8-device end-to-end (subprocess; the CI serving-smoke job runs these)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_mesh_serving_8dev_bit_identical_all_strategies():
+    """The acceptance probe: register/step/update_values through a
+    MeshExecutor on 8 forced host devices, bit-identical to the
+    LocalExecutor oracle for nrhs in {1, 3, 8}, zero rebuild on
+    re-register, value refresh on the mesh path."""
+    print(run_with_devices("""
+        import dataclasses, numpy as np, jax.numpy as jnp
+        from repro.core import csrc, schedule as S, tuner
+        from repro.core.plan import ExecutionPlan
+        from repro.serve import SpmvServingEngine
+
+        def dyadic(M):
+            q = lambda a: jnp.asarray(
+                np.round(np.asarray(a) * 64.0) / 64.0, jnp.float32)
+            return dataclasses.replace(M, ad=q(M.ad), al=q(M.al),
+                                       au=q(M.au))
+
+        def dx(m, seed, nrhs=None):
+            rng = np.random.default_rng(seed)
+            shape = (m,) if nrhs is None else (m, nrhs)
+            return (rng.integers(-128, 128, shape) / 64.0
+                    ).astype(np.float32)
+
+        def delta(fn):
+            before = dict(S.BUILD_COUNTS)
+            out = fn()
+            d = {k: S.BUILD_COUNTS[k] - before.get(k, 0)
+                 for k in S.BUILD_COUNTS}
+            return out, {k: v for k, v in d.items() if v}
+
+        M = dyadic(csrc.fem_band(512, 8, seed=1))
+        oracle = SpmvServingEngine(cache=tuner.PlanCache())
+        oracle.register('m', M, plan=ExecutionPlan(path='segment'))
+        for acc in ('allreduce', 'reduce_scatter', 'halo'):
+            plan = ExecutionPlan(path='segment', strategy='mesh',
+                                 mesh_p=8, accumulation=acc)
+            cache = tuner.PlanCache()
+            eng = SpmvServingEngine(cache=cache)
+            eng.register('m', M, plan=plan)
+            assert eng.executor('m').kind == 'mesh'
+            for nrhs in (1, 3, 8):
+                xs = [dx(M.m, 10 * nrhs + i) for i in range(nrhs)]
+                uids = [eng.submit('m', x) for x in xs]
+                uo = [oracle.submit('m', x) for x in xs]
+                out = eng.run_until_drained()
+                ref = oracle.run_until_drained()
+                for u, r in zip(uids, uo):
+                    assert np.array_equal(np.asarray(out[u]),
+                                          np.asarray(ref[r])), (acc, nrhs)
+                assert out[uids[0]].executor == 'mesh'
+                assert out[uids[0]].mesh_p == 8
+                assert out[uids[0]].batched == nrhs
+            # zero-rebuild probe on re-register
+            _, d = delta(lambda: eng.register('m2', M, plan=plan))
+            assert d == {}, (acc, d)
+            # value refresh on the mesh path
+            M2 = dyadic(dataclasses.replace(M, al=M.al * 2, au=M.au * 2,
+                                            ad=M.ad * 2))
+            _, d = delta(lambda: eng.update_values('m', M2))
+            assert d.get('shard_value_refresh') == 1, (acc, d)
+            structural = ('pack', 'flat_pack', 'partition', 'coloring',
+                          'schedule', 'sharded_slots', 'halo_layout',
+                          'flat_shards', 'flat_halo')
+            assert not any(d.get(k) for k in structural), (acc, d)
+            x = dx(M.m, 99)
+            u = eng.submit('m', x)
+            y = np.asarray(eng.step()[u], np.float64)
+            ref2 = np.asarray(csrc.to_dense(M2), np.float64) @ x
+            assert np.abs(y - ref2).max() < 1e-6, acc
+        print('OK')
+    """))
+
+
+@pytest.mark.slow
+def test_mesh_serving_8dev_flat_path():
+    """Flat shard-compute through the serving engine on 8 devices."""
+    print(run_with_devices("""
+        import numpy as np, jax.numpy as jnp
+        from repro.core import csrc, tuner
+        from repro.core.plan import ExecutionPlan
+        from repro.serve import SpmvServingEngine
+        M = csrc.skewed_band(512, 24, 3, seed=2)
+        A = np.asarray(csrc.to_dense(M), np.float64)
+        rng = np.random.default_rng(0)
+        for acc in ('allreduce', 'halo'):
+            plan = ExecutionPlan(path='flat', tm=32, strategy='mesh',
+                                 mesh_p=8, accumulation=acc)
+            eng = SpmvServingEngine(cache=tuner.PlanCache())
+            eng.register('skew', M, plan=plan)
+            xs = [rng.standard_normal(M.m).astype(np.float32)
+                  for _ in range(4)]
+            uids = [eng.submit('skew', x) for x in xs]
+            out = eng.run_until_drained()
+            for u, x in zip(uids, xs):
+                err = np.abs(np.asarray(out[u], np.float64) - A @ x).max()
+                assert err / max(1.0, np.abs(A @ x).max()) < 1e-5, acc
+            assert out[uids[0]].path == 'flat'
+            assert out[uids[0]].executor == 'mesh'
+        print('OK')
+    """))
+
+
+@pytest.mark.slow
+def test_tune_mesh_8dev_records_skewed_band_winner():
+    """The mesh-aware mode on a real 8-device mesh: the skewed-band suite
+    entry gets a measured per-(matrix, p) winner in the cache, and an
+    engine with mesh_p=8 serves through it."""
+    print(run_with_devices("""
+        import numpy as np
+        from repro.core import csrc, tuner
+        from repro.serve import SpmvServingEngine
+        M = csrc.skewed_band(2000, 48, 3, seed=6)   # skew_band_w48 class
+        cache = tuner.PlanCache()
+        res = tuner.tune_mesh(M, 8, cache=cache, repeats=1)
+        assert not res.cached and res.plan.strategy == 'mesh'
+        assert res.plan.mesh_p == 8
+        fp = tuner.mesh_fingerprint(tuner.fingerprint(M), 8)
+        entry = cache.entries[fp]
+        assert entry['measured'] and entry['timings_us']
+        paths_seen = {k.split(':')[0] for k in res.timings_s}
+        assert 'segment' in paths_seen and 'flat' in paths_seen
+        eng = SpmvServingEngine(cache=cache, mesh_p=8)
+        plan = eng.register('skew', M)
+        assert plan == res.plan
+        assert eng.executor('skew').kind == 'mesh'
+        x = np.random.default_rng(0).standard_normal(M.m).astype('float32')
+        u = eng.submit('skew', x)
+        y = np.asarray(eng.step()[u], np.float64)
+        ref = np.asarray(csrc.to_dense(M), np.float64) @ x
+        assert np.abs(y - ref).max() / np.abs(ref).max() < 1e-5
+        print('OK', res.plan.key())
+    """))
