@@ -12,6 +12,12 @@
                       uniform band matrices: pad_ratio, streamed_bytes,
                       SpMV/SpMM time — written to results/BENCH_flat.json
                       (the CI bench-smoke job asserts the skewed rows)
+  nnzsplit_unstructured  nnz-split chunking vs the windowed grids on the
+                      shuffled power-law class, tuned under a bandwidth
+                      roofline model — written to
+                      results/BENCH_nnzsplit.json (the CI bench-smoke job
+                      asserts nnzsplit is selected and streams fewer
+                      bytes than either windowed grid)
   assembly            FEM assembly (repro.assembly): colored vs
                       private-buffer vs serial-oracle scatter per mesh
                       generator + the assemble→tune→solve pipeline —
@@ -51,6 +57,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 PLAN_CACHE_PATH = os.path.join(ROOT, "results", "plans.json")
 BENCH_SCHEDULE_PATH = os.path.join(ROOT, "results", "BENCH_schedule.json")
 BENCH_FLAT_PATH = os.path.join(ROOT, "results", "BENCH_flat.json")
+BENCH_NNZSPLIT_PATH = os.path.join(ROOT, "results", "BENCH_nnzsplit.json")
 BENCH_ASSEMBLY_PATH = os.path.join(ROOT, "results", "BENCH_assembly.json")
 BENCH_SERVING_PATH = os.path.join(ROOT, "results", "BENCH_serving.json")
 
@@ -235,6 +242,9 @@ def schedule_build(small: bool):
             if paths.flat_worth_measuring(stats):
                 # same skew gate the tuner's flat enumerator uses
                 bench_one(name, M, "flat", ExecutionPlan(path="flat"))
+            if paths.nnzsplit_worth_measuring(stats):
+                bench_one(name, M, "nnzsplit",
+                          ExecutionPlan(path="nnzsplit"))
             if M.n <= 2048 and stats.bandwidth <= 64 and M.k > 0:
                 bench_one(name, M, "colorful",
                           ExecutionPlan(path="colorful"))
@@ -306,6 +316,69 @@ def flat_vs_rect(small: bool):
     with open(BENCH_FLAT_PATH, "w") as f:
         json.dump({"rows": records}, f, indent=1, sort_keys=True)
     print(f"# flat_vs_rect: {len(records)} rows -> {BENCH_FLAT_PATH}")
+
+
+# ---------------------------------------------------------------------------
+# Nnz-split chunking vs the windowed grids on the unstructured class
+# ---------------------------------------------------------------------------
+
+def nnzsplit_unstructured(small: bool):
+    """The reason 'nnzsplit' exists, measured on the shuffled power-law
+    Laplacian (hub rows, bandwidth ~ n): tuning runs under a bandwidth
+    roofline model — modeled time = streamed bytes / effective bandwidth,
+    with the irregular gather/scatter paths ('segment', 'colorful')
+    charged a 4x effective-bandwidth penalty against the contiguous-
+    stream kernels (the DRAM stream-vs-random-access gap in Schubert et
+    al.'s SpMV bandwidth model, arXiv:1011.2308) — so the winner is
+    decided by memory traffic, which interpret-mode wall clock cannot
+    see.  The nnz-split row must win the class and stream strictly fewer
+    bytes than either windowed grid; CI bench-smoke asserts both from
+    results/BENCH_nnzsplit.json."""
+    print("# nnzsplit_unstructured: nnz-split vs windowed grids "
+          "(bandwidth-roofline tuning)")
+    n = 2000            # windowed grids stay feasible (bandwidth < w_cap)
+    M = csrc.powerlaw_laplacian(n, seed=7)
+    stats = tuner.stats_of(M)
+    assert paths.nnzsplit_worth_measuring(stats), "powerlaw not gated in?"
+
+    BW = 100e9                       # arbitrary scale; only ratios matter
+
+    def modeled(op, x):
+        eff = BW / 4 if op.plan.path in ("segment", "colorful") else BW
+        return op.bytes_per_call / eff
+
+    cache = tuner.PlanCache()
+    res = tuner.tune(M, cache=cache, measure=modeled)
+    row(f"nnzsplit/powerlaw_{n}/winner",
+        res.timings_s[res.plan.key()] * 1e6, f"plan={res.plan.key()};"
+        f"candidates={len(res.timings_s)}")
+    streamed = {}
+    for path in ("nnzsplit", "flat", "kernel"):
+        plan = (ExecutionPlan(path="nnzsplit", k_step_sublanes=2)
+                if path == "nnzsplit" else ExecutionPlan(path=path, tm=64))
+        try:
+            op = ops.SpmvOperator.from_plan(M, plan)
+        except ValueError:
+            continue                      # window over cap: skip the grid
+        streamed[path] = int(op.bytes_per_call)
+        row(f"nnzsplit/powerlaw_{n}/{path}", modeled(op, None) * 1e6,
+            f"streamed_bytes={op.bytes_per_call};"
+            f"pad_ratio={op.pack.pad_ratio:.2f}")
+    rec = {
+        "matrix": f"powerlaw_{n}", "n": M.n, "nnz": M.nnz,
+        "bandwidth": int(stats.bandwidth),
+        "winner_plan": res.plan.key(),
+        "nnzsplit_selected": res.plan.path == "nnzsplit",
+        "streamed_bytes": streamed,
+        "beats_windowed_bytes": bool(
+            "nnzsplit" in streamed
+            and all(streamed["nnzsplit"] < streamed[p]
+                    for p in ("flat", "kernel") if p in streamed)),
+    }
+    os.makedirs(os.path.dirname(BENCH_NNZSPLIT_PATH), exist_ok=True)
+    with open(BENCH_NNZSPLIT_PATH, "w") as f:
+        json.dump({"rows": [rec]}, f, indent=1, sort_keys=True)
+    print(f"# nnzsplit_unstructured: 1 row -> {BENCH_NNZSPLIT_PATH}")
 
 
 # ---------------------------------------------------------------------------
@@ -545,8 +618,9 @@ def roofline_summary(small: bool):
 
 
 BENCHES = [fig5_sequential, table2_accumulation, fig6_colorful,
-           fig89_scaling, schedule_build, flat_vs_rect, assembly,
-           serving, tuned_vs_default, roofline_summary]
+           fig89_scaling, schedule_build, flat_vs_rect,
+           nnzsplit_unstructured, assembly, serving, tuned_vs_default,
+           roofline_summary]
 
 
 def main() -> None:

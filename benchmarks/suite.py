@@ -8,6 +8,8 @@ classes (the UF collection is not available offline):
     row-length-skew class where the flat-grid kernel beats the
     rectangular ELL padding, see benchmarks.run flat_vs_rect);
   * unstructured random pattern (cage15/F1 class — no band);
+  * shuffled power-law graph Laplacian (social/power/circuit class —
+    hub rows + bandwidth ~ n, the nnz-split path's home turf);
   * dense control (dense_1000).
 """
 from repro.core import csrc
@@ -26,6 +28,8 @@ def matrices(small: bool = False):
             8000 // scale, 48, 3, seed=6)),
         ("random_nnz6", lambda: csrc.random_symmetric_pattern(
             8000 // scale, 6, seed=4)),
+        ("powerlaw_graph", lambda: csrc.powerlaw_laplacian(
+            8000 // scale, seed=7)),
         ("dense_1000", lambda: csrc.dense_matrix(1000 // scale, seed=5)),
     ]
     return out

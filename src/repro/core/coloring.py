@@ -28,6 +28,7 @@ at[].add with unique indices — no read-modify-write ordering needed).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import List, Optional
 
@@ -102,6 +103,11 @@ def _balance(adj, color, include_indirect: bool, max_rounds: int = 3):
     if num_colors <= 1:
         return color
     target = -(-n // num_colors)            # ceil: perfectly balanced size
+    # sorted member list per class, maintained incrementally across moves
+    # (a full color == d scan per (vertex, class) pair is O(n) per query)
+    members: List[List[int]] = [[] for _ in range(num_colors)]
+    for v in range(n):                      # ascending v keeps lists sorted
+        members[int(color[v])].append(v)
     for _ in range(max_rounds):
         sizes = np.bincount(color, minlength=num_colors)
         moved = False
@@ -114,20 +120,32 @@ def _balance(adj, color, include_indirect: bool, max_rounds: int = 3):
             for d in range(num_colors):
                 if d == c or d in forbidden or sizes[d] + 1 > sizes[c] - 1:
                     continue
-                members = np.flatnonzero(color == d)
                 # locality: distance from v to the nearest row of class d
-                dist = int(np.abs(members - v).min()) if members.size else 0
+                dist = _nearest_distance(members[d], v)
                 key = (int(sizes[d]), dist)
                 if best_key is None or key < best_key:
                     best, best_key = d, key
             if best >= 0:
                 sizes[c] -= 1
                 sizes[best] += 1
+                del members[c][bisect.bisect_left(members[c], v)]
+                bisect.insort(members[best], v)
                 color[v] = best
                 moved = True
         if not moved:
             break
     return color
+
+
+def _nearest_distance(sorted_members: List[int], v: int) -> int:
+    """min |m - v| over a sorted member list; 0 when the class is empty."""
+    if not sorted_members:
+        return 0
+    i = bisect.bisect_left(sorted_members, v)
+    best = sorted_members[i] - v if i < len(sorted_members) else None
+    if i > 0 and (best is None or v - sorted_members[i - 1] < best):
+        best = v - sorted_members[i - 1]
+    return int(best)
 
 
 def _finalize(color: np.ndarray) -> Coloring:
@@ -223,10 +241,11 @@ def conflict_stats(M: CSRC) -> dict:
     direct = sum(len(a) for a in adj) // 2
     indirect = 0
     for v in range(n):
+        direct_v = set(adj[v].tolist())
         two_hop = set()
         for u in adj[v]:
             for w in adj[u]:
-                if w > v and w not in adj[v].tolist():
+                if w > v and w not in direct_v:
                     two_hop.add(int(w))
         indirect += len(two_hop)
     return {"direct": int(direct), "indirect": int(indirect)}

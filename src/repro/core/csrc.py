@@ -221,6 +221,35 @@ def from_assembly(n: int, ia: Array, ja: Array, ad: Array, al: Array,
     )
 
 
+def from_scipy(A, dtype=np.float32) -> CSRC:
+    """Ingest any ``scipy.sparse`` matrix.
+
+    The square leading block is pattern-symmetrized with explicit zeros at
+    missing transpose positions (the standard CSRC preprocessing), values
+    split into ad / al / au; columns ``>= n`` land in the rectangular CSR
+    tail.  scipy is imported lazily — it is an ingestion convenience, not a
+    package dependency.
+    """
+    try:
+        import scipy.sparse as sp
+    except ImportError as e:   # pragma: no cover - scipy present in CI
+        raise ImportError(
+            "CSRC.from_scipy requires scipy; install it or build via "
+            "from_coo directly") from e
+    if not sp.issparse(A):
+        raise TypeError(
+            f"from_scipy expects a scipy.sparse matrix, got "
+            f"{type(A).__name__}")
+    n, m = A.shape
+    if m < n:
+        raise ValueError(
+            "CSRC requires m >= n (the rectangular extension stores wide "
+            "matrices only); transpose the input first")
+    C = A.tocoo()
+    return from_coo(C.row, C.col, C.data, n=n, m=m, dtype=dtype,
+                    pad_pattern=True)
+
+
 def from_dense(A: Array, dtype=np.float32) -> CSRC:
     """Build from a dense matrix, keeping exact non-zero pattern (plus the
     symmetrizing explicit zeros)."""
@@ -380,6 +409,69 @@ def random_symmetric_pattern(n: int, avg_nnz_per_row: int, seed: int = 0,
     return from_coo(rows, cols, vals, n=n, dtype=dtype, pad_pattern=False)
 
 
+def powerlaw_laplacian(n: int, attach: int = 4, seed: int = 0,
+                       dtype=np.float32) -> CSRC:
+    """Graph Laplacian of a Barabási–Albert preferential-attachment graph
+    with randomly shuffled vertex labels — the unstructured scenario class
+    (social/power/circuit graphs) none of the band-ish generators cover.
+
+    Two properties matter downstream: the power-law degree distribution
+    gives a high nnz-per-row CoV (hub rows), and the label shuffle spreads
+    ``ja`` across the full index range (bandwidth ~ n), so windowed paths
+    either pad explosively or fall infeasible.  All entries are small
+    integers (degree diagonal, -1 off-diagonals), exactly representable in
+    float32: products against dyadic vectors are accumulation-order
+    independent, which is what lets tests compare kernels bit-for-bit
+    against the dense oracle."""
+    assert n > attach >= 1
+    rng = np.random.default_rng(seed)
+    edges = []
+    repeated: list = []             # endpoint pool; sampling it uniformly
+    targets = list(range(attach))   # is preferential attachment by degree
+    for source in range(attach, n):
+        for t in targets:
+            edges.append((source, t))
+        repeated.extend(targets)
+        repeated.extend([source] * attach)
+        seen: set = set()
+        targets = []
+        while len(targets) < attach:
+            x = int(repeated[rng.integers(0, len(repeated))])
+            if x not in seen:
+                seen.add(x)
+                targets.append(x)
+    perm = rng.permutation(n)
+    e = perm[np.asarray(edges, dtype=np.int64)]         # (ne, 2) relabeled
+    u, v = e[:, 0], e[:, 1]
+    deg = np.zeros(n, dtype=np.int64)
+    np.add.at(deg, u, 1)
+    np.add.at(deg, v, 1)
+    rows = np.concatenate([u, v, np.arange(n)])
+    cols = np.concatenate([v, u, np.arange(n)])
+    vals = np.concatenate([-np.ones(2 * e.shape[0]), deg.astype(np.float64)])
+    return from_coo(rows, cols, vals, n=n, dtype=dtype, pad_pattern=False)
+
+
+def paper_example(dtype=np.float32) -> CSRC:
+    """The paper's 9×9 conflict-graph example: a structurally-symmetric
+    pattern with exactly 12 direct conflicts (stored lower entries) and 7
+    indirect conflicts (non-adjacent row pairs sharing a direct neighbor)
+    — the counts §3.2 reports for its illustration.  Values are small
+    integers so products against dyadic vectors are exact in float32."""
+    lower = np.asarray([(1, 0), (2, 0), (4, 0), (6, 0), (2, 1), (4, 1),
+                        (4, 2), (6, 2), (7, 3), (8, 3), (7, 5), (8, 6)],
+                       dtype=np.int64)
+    r, c = lower[:, 0], lower[:, 1]
+    deg = np.zeros(9, dtype=np.int64)
+    np.add.at(deg, r, 1)
+    np.add.at(deg, c, 1)
+    rows = np.concatenate([r, c, np.arange(9)])
+    cols = np.concatenate([c, r, np.arange(9)])
+    vals = np.concatenate([-np.ones(2 * len(lower)),
+                           (deg + 1).astype(np.float64)])
+    return from_coo(rows, cols, vals, n=9, dtype=dtype, pad_pattern=False)
+
+
 def dense_matrix(n: int, seed: int = 0, dtype=np.float32) -> CSRC:
     """The paper's dense_1000 control case."""
     rng = np.random.default_rng(seed)
@@ -403,3 +495,8 @@ def rectangular_fem(n: int, extra_cols: int, half_band: int, seed: int = 0,
     full[:, :n] = A
     full[r, c] = v.astype(A.dtype)
     return from_dense(full, dtype=dtype)
+
+
+# quickstart-facing alias: CSRC.from_scipy(sp_matrix) reads naturally at
+# ingestion call sites
+CSRC.from_scipy = staticmethod(from_scipy)

@@ -32,12 +32,13 @@ solver restarts) are zero-precompute.  Every strategy accepts x of shape
 (n,) or (n, B): the multi-RHS product shares one collective per block.
 
 Shard-local compute is itself plan-driven: with a plan (or schedule) whose
-``path == 'flat'``, every strategy runs the flat-grid Pallas kernel per
-shard — allreduce/reduce_scatter over per-shard global-coordinate flat
-sub-packs (``schedule.build_flat_shards``), halo over local-coordinate
-per-shard packs (``schedule.build_flat_halo_layout``) — instead of the
-default segment-sum.  Skewed shards stop paying rectangular ELL padding
-inside the distributed product too.
+path registers a :class:`~repro.core.paths.ShardSupport` ('flat',
+'nnzsplit'), every strategy runs that path's Pallas kernel per shard —
+allreduce/reduce_scatter over per-shard global-coordinate sub-packs
+(``schedule.build_path_shards``), halo over local-coordinate per-shard
+packs (``schedule.build_path_halo``) — instead of the default
+segment-sum.  The branches below only consume the ShardSupport hooks;
+a newly registered path is served here with zero edits.
 
 The colorful method (paper §3.2) is a shared-memory construct (conflict-free
 concurrent writes to one y); across distributed memories every write is a
@@ -60,6 +61,7 @@ except ImportError:                     # jax 0.4.x
 
 from .csrc import CSRC, bandwidth
 from .plan import ExecutionPlan
+from . import paths as paths_mod
 from . import schedule as schedule_mod
 from .schedule import SpmvSchedule
 
@@ -84,39 +86,13 @@ def _schedule(M: CSRC, p: int, accumulation: str,
     return schedule_mod.schedule_for(M, plan, cache=cache, p=p)
 
 
-def _flat_local_fn(fs, n_local: int, interpret: bool):
-    """Shard-local flat-grid product: rebuild the shard's FlatBlockEll from
-    the shard_map-sliced stacked arrays and run the Pallas kernel (SpMV or
-    SpMM by x rank).  ``fs`` is a FlatShards or FlatHalo layout."""
-    from repro.kernels.csrc_spmv_flat import (FlatBlockEll, flat_spmm,
-                                              flat_spmv)
-
-    def local_y(tile, first, vals_l, vals_u, col, row, ad, x):
-        pk = FlatBlockEll(
-            n=n_local, tm=fs.tm, nt=fs.nt, w_pad=fs.w_pad,
-            total_steps=fs.steps, ks=fs.ks,
-            vals_l=vals_l[0], vals_u=vals_u[0], col_local=col[0],
-            row_in_win=row[0], ad=ad[0], tile_of_step=tile[0],
-            first_of_tile=first[0],
-            num_symmetric=fs.num_symmetric, pad_ratio=1.0)
-        if x.ndim == 2:
-            return flat_spmm(pk, x, interpret=interpret)
-        return flat_spmv(pk, x, interpret=interpret)
-
-    return local_y
-
-
-def _flat_shard_arrays(fs):
-    return (fs.tile_of_step, fs.first_of_tile, fs.vals_l, fs.vals_u,
-            fs.col_local, fs.row_in_win, fs.ad)
-
-
-def _flat_specs(axis: str):
-    """in_specs for the stacked flat arrays: leading shard axis only."""
-    return (P(axis, None), P(axis, None),
-            P(axis, None, None, None), P(axis, None, None, None),
-            P(axis, None, None, None), P(axis, None, None, None),
-            P(axis, None, None))
+def _shard_support(plan: Optional[ExecutionPlan]):
+    """The requested plan's ShardSupport, or None when the path runs
+    shard-locally as segment-sum ('segment', 'colorful', 'kernel', or no
+    plan at all)."""
+    if plan is None:
+        return None
+    return paths_mod.get_path(plan.path).shard_support
 
 
 def build_spmv_allreduce(M: CSRC, mesh: Mesh, axis: str = "rows",
@@ -128,17 +104,19 @@ def build_spmv_allreduce(M: CSRC, mesh: Mesh, axis: str = "rows",
                          layout=None) -> Callable:
     """'allreduce' (all-in-one) and 'reduce_scatter' (per-buffer/interval)
     strategies.  x replicated, shape (n,) or (n, B); output replicated or
-    row-sharded.  With a 'flat' plan/schedule the shard-local partial runs
-    the flat-grid kernel over the shard's sub-pack instead of segment-sum.
+    row-sharded.  With a plan/schedule whose path registers ShardSupport
+    ('flat', 'nnzsplit') the shard-local partial runs that path's kernel
+    over the shard's sub-pack instead of segment-sum.
 
     ``layout`` injects a prebuilt (or value-refreshed) ShardedSlots /
-    FlatShards; otherwise the schedule layer builds it — and, given
-    ``cache``, serves it from / ships it to the PlanCache npz layer."""
+    path shards layout; otherwise the schedule layer builds it — and,
+    given ``cache``, serves it from / ships it to the PlanCache npz
+    layer."""
     p = mesh.shape[axis]
     acc = "reduce_scatter" if scatter_output else "allreduce"
     # the requested plan decides shard-local compute; the *schedule* only
-    # supplies the row partition here, so a flat plan builds its
-    # path-specific artifact per shard (build_flat_shards), never the
+    # supplies the row partition here, so a shard-supported plan builds
+    # its path-specific artifact per shard (build_path_shards), never the
     # unused full-matrix pack — schedule_for gets the path-free variant
     req_plan = plan if plan is not None else (
         schedule.plan if schedule is not None else None)
@@ -151,7 +129,7 @@ def build_spmv_allreduce(M: CSRC, mesh: Mesh, axis: str = "rows",
             f"schedule partition is {part.p}-way, mesh axis {axis} has {p}")
     n = M.n
     n_pad = _round_up(n, p)
-    flat = req_plan is not None and req_plan.path == "flat"
+    sup = _shard_support(req_plan)
 
     def reduce_y(y, x_ndim):
         if scatter_output:
@@ -161,20 +139,20 @@ def build_spmv_allreduce(M: CSRC, mesh: Mesh, axis: str = "rows",
                                         tiled=True)
         return jax.lax.psum(y, axis)
 
-    if flat:
+    if sup is not None:
         fs = (layout if layout is not None
-              else schedule_mod.build_flat_shards(M, part, req_plan,
+              else schedule_mod.build_path_shards(M, part, req_plan,
                                                   cache=cache))
-        local_y = _flat_local_fn(fs, M.n, interpret)
+        local_y = sup.local_fn(fs, M.n, interpret)
 
-        def local(tile, first, vals_l, vals_u, col, row, ad, x):
-            return reduce_y(local_y(tile, first, vals_l, vals_u, col,
-                                    row, ad, x), x.ndim)
+        def local(*args):
+            x = args[-1]
+            return reduce_y(local_y(*args), x.ndim)
 
         sharded = jax.device_put(
-            _flat_shard_arrays(fs),
+            sup.shard_arrays(fs),
             jax.sharding.NamedSharding(mesh, P(axis)))
-        in_specs = _flat_specs(axis) + (P(),)
+        in_specs = tuple(sup.shard_specs(axis)) + (P(),)
     else:
         ss = (layout if layout is not None
               else schedule_mod.build_sharded_slots(M, part, cache=cache))
@@ -195,11 +173,12 @@ def build_spmv_allreduce(M: CSRC, mesh: Mesh, axis: str = "rows",
 
     # x is replicated (P() leaves trailing dims unsharded), so one
     # shard_map serves both the (n,) and (n, B) forms.  check_rep is off
-    # on the flat path: shard_map has no replication rule for pallas_call.
+    # on kernel-backed paths: shard_map has no replication rule for
+    # pallas_call.
     fn = shard_map(
         local, mesh=mesh, in_specs=in_specs,
         out_specs=(P(axis) if scatter_output else P()),
-        check_rep=not flat)
+        check_rep=sup is None)
 
     @jax.jit
     def apply(x):
@@ -219,39 +198,40 @@ def build_spmv_halo(M: CSRC, mesh: Mesh, axis: str = "rows",
 
     The halo geometry depends on the mesh width, not on the plan's
     partition, so it is not part of the ``schedule`` artifact —
-    ``build_halo_layout`` / ``build_flat_halo_layout`` memoize it per
+    ``build_halo_layout`` / ``build_path_halo`` memoize it per
     (matrix, p[, pack geometry]) and repeated builds are zero-precompute.
-    With a 'flat' plan/schedule each shard runs the flat-grid kernel over
-    its local-coordinate pack instead of the scatter-add form."""
+    With a plan/schedule whose path registers ShardSupport each shard
+    runs that path's kernel over its local-coordinate pack instead of
+    the scatter-add form."""
     p = mesh.shape[axis]
     plan = plan if plan is not None else (
         schedule.plan if schedule is not None else None)
-    flat = plan is not None and plan.path == "flat"
+    sup = _shard_support(plan)
 
-    if flat:
+    if sup is not None:
         lay = (layout if layout is not None
-               else schedule_mod.build_flat_halo_layout(M, p, plan,
-                                                        cache=cache))
-        n, ns, h = M.n, lay.ns, lay.h
+               else schedule_mod.build_path_halo(M, p, plan, cache=cache))
+        ns, h, n_local = sup.halo_dims(lay)
+        n = M.n
         n_pad = ns * p
-        local_y = _flat_local_fn(lay, lay.n_local, interpret)
+        local_y = sup.local_fn(lay, n_local, interpret)
 
-        def local(tile, first, vals_l, vals_u, col, row, ad, x_own):
+        def local(*args):
+            x_own = args[-1]
             # x halo from the LEFT neighbor: its tail h rows
             left_tail = jax.lax.ppermute(
                 x_own[-h:], axis, [(i, (i + 1) % p) for i in range(p)])
             x_ext = jnp.concatenate([left_tail, x_own])  # rows [r0-h, r1)
-            y_ext = local_y(tile, first, vals_l, vals_u, col, row, ad,
-                            x_ext)
+            y_ext = local_y(*args[:-1], x_ext)
             # y halo to the LEFT neighbor (it owns rows [r0-h, r0))
             from_right = jax.lax.ppermute(
                 y_ext[:h], axis, [(i, (i - 1) % p) for i in range(p)])
             return y_ext[h:].at[-h:].add(from_right)
 
         sharded = jax.device_put(
-            _flat_shard_arrays(lay),
+            sup.shard_arrays(lay),
             jax.sharding.NamedSharding(mesh, P(axis)))
-        slot_specs = _flat_specs(axis)
+        slot_specs = tuple(sup.shard_specs(axis))
     else:
         lay = (layout if layout is not None
                else schedule_mod.build_halo_layout(M, p, cache=cache))
@@ -282,12 +262,12 @@ def build_spmv_halo(M: CSRC, mesh: Mesh, axis: str = "rows",
 
     def make_fn(two_d: bool):
         x_spec = P(axis, None) if two_d else P(axis)
-        # check_rep off on the flat path: shard_map has no replication
-        # rule for pallas_call
+        # check_rep off on kernel-backed paths: shard_map has no
+        # replication rule for pallas_call
         return shard_map(
             local, mesh=mesh,
             in_specs=slot_specs + (x_spec,),
-            out_specs=x_spec, check_rep=not flat)
+            out_specs=x_spec, check_rep=sup is None)
 
     fns = {False: make_fn(False), True: make_fn(True)}
 
@@ -318,9 +298,10 @@ def build_sharded_spmv(M: CSRC, mesh: Mesh, axis: str = "rows",
     """Factory: y_fn(x) computing A·x (or A·X for (n, B) blocks) across the
     mesh axis.  ``schedule``/``cache`` reuse the precomputed artifact; with
     ``strategy='auto'`` a supplied schedule's (or ``plan``'s) accumulation
-    decides.  A plan/schedule with ``path='flat'`` makes every strategy run
-    the flat-grid kernel shard-locally.  ``layout`` injects a prebuilt
-    shard layout (the serving MeshExecutor's value-refresh path)."""
+    decides.  A plan/schedule whose path registers ShardSupport ('flat',
+    'nnzsplit') makes every strategy run that path's kernel shard-locally.
+    ``layout`` injects a prebuilt shard layout (the serving MeshExecutor's
+    value-refresh path)."""
     p = mesh.shape[axis]
     if strategy == "auto":
         if schedule is not None:

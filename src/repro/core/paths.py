@@ -69,6 +69,54 @@ class CandidateSpace:
     # suite classes) and must additionally pass the tuner's accuracy check
     # before it can win
     value_dtypes: Tuple[str, ...] = ("float32", "bfloat16")
+    # chunk sizes (sublanes; S = ks*128 stream entries per chunk) the
+    # nnz-split enumerator sweeps: small chunks bound the per-chunk row
+    # window, large chunks amortize the per-program overhead
+    nnzsplit_ks: Tuple[int, ...] = (2, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSupport:
+    """How a path executes *shard-locally* inside the distributed
+    strategies (core/distributed.py) and the serving ``MeshExecutor``.
+
+    A path without one (``KernelPath.shard_support is None``) still works
+    on a mesh — the strategies fall back to the segment-sum shard-local
+    product — but a path that registers one is served end-to-end by all
+    three accumulation strategies over its own per-shard sub-packs, with
+    the schedule layer memoizing/shipping the layouts and
+    ``refresh_shard_layout`` refreshing their value streams.  This is the
+    registry's answer to the former ``if plan.path == 'flat'`` special
+    cases in distributed.py / executor.py / tuner.py / schedule.py.
+
+      shards_kind     npz-kind + BUILD_COUNTS key of the row-partition
+                      layout (allreduce / reduce_scatter)
+      halo_kind       likewise for the local-coordinate halo layout
+      layout_classes  () -> {kind: dataclass} (lazy kernel import)
+      geometry        plan -> the plan-derived geometry tuple layouts are
+                      keyed by (memoization + npz cache keys)
+      pack_shards     (M, starts, plan) -> shards layout
+      pack_halo       (M, p, plan) -> halo layout (ValueError: band gate)
+      refresh_shards  (layout, M, starts) -> value-refreshed layout
+      refresh_halo    (layout, M) -> value-refreshed layout
+      shard_arrays    layout -> tuple of leading-axis-p device arrays
+      shard_specs     axis name -> matching shard_map PartitionSpecs
+      local_fn        (layout, n_local, interpret) -> local product
+                      fn(*shard_arrays, x) -> y  (n_local rows)
+      halo_dims       halo layout -> (ns, h, n_local)
+    """
+    shards_kind: str
+    halo_kind: str
+    layout_classes: Callable[[], dict]
+    geometry: Callable[[ExecutionPlan], tuple]
+    pack_shards: Callable[..., object]
+    pack_halo: Callable[..., object]
+    refresh_shards: Callable[..., object]
+    refresh_halo: Callable[..., object]
+    shard_arrays: Callable[[object], tuple]
+    shard_specs: Callable[[str], tuple]
+    local_fn: Callable[..., Callable]
+    halo_dims: Callable[[object], tuple]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +137,10 @@ class KernelPath:
     # purely structural (or absent) and is reused as-is — the executors
     # read values from the matrix directly ('segment', 'colorful').
     refresh_values: Optional[Callable[..., dict]] = None
+    # Shard-local execution hooks for the distributed strategies and the
+    # serving MeshExecutor.  None means the path runs shard-locally as
+    # segment-sum (distributed.py's fallback).
+    shard_support: Optional[ShardSupport] = None
 
 
 _REGISTRY: Dict[str, KernelPath] = {}
@@ -496,6 +548,76 @@ def _flat_make_spmm(M, schedule, plan, *, interpret=True, coloring=None):
                              interpret=interpret)
 
 
+def _flat_layout_classes():
+    from repro.kernels.csrc_spmv_flat import FlatHalo, FlatShards
+    return {"flat_shards": FlatShards, "flat_halo": FlatHalo}
+
+
+def _flat_geometry(plan):
+    return (plan.tm, plan.k_step_sublanes, plan.w_cap, plan.index_dtype,
+            plan.value_dtype)
+
+
+def _flat_pack_shards(M, starts, plan):
+    from repro.kernels import csrc_spmv_flat as flat_mod
+    return flat_mod.pack_flat_shards(
+        M, starts, tm=plan.tm, ks=plan.k_step_sublanes, w_cap=plan.w_cap,
+        dtype=_value_dtype_of(plan), index_dtype=_index_dtype_of(plan))
+
+
+def _flat_pack_halo(M, p, plan):
+    from repro.kernels import csrc_spmv_flat as flat_mod
+    return flat_mod.pack_flat_halo(
+        M, p, tm=plan.tm, ks=plan.k_step_sublanes, w_cap=plan.w_cap,
+        dtype=_value_dtype_of(plan), index_dtype=_index_dtype_of(plan))
+
+
+def _flat_refresh_shards(lay, M, starts):
+    from repro.kernels import csrc_spmv_flat as flat_mod
+    return flat_mod.refresh_flat_shards(lay, M, starts)
+
+
+def _flat_refresh_halo(lay, M):
+    from repro.kernels import csrc_spmv_flat as flat_mod
+    return flat_mod.refresh_flat_halo(lay, M)
+
+
+def _flat_shard_arrays(lay):
+    from repro.kernels import csrc_spmv_flat as flat_mod
+    return flat_mod.flat_shard_arrays(lay)
+
+
+def _flat_shard_specs(axis):
+    from repro.kernels import csrc_spmv_flat as flat_mod
+    return flat_mod.flat_shard_specs(axis)
+
+
+def _flat_local_fn(lay, n_local, interpret):
+    from repro.kernels import csrc_spmv_flat as flat_mod
+    return flat_mod.flat_local_fn(lay, n_local, interpret)
+
+
+def _flat_halo_dims(lay):
+    from repro.kernels import csrc_spmv_flat as flat_mod
+    return flat_mod.flat_halo_dims(lay)
+
+
+FLAT_SHARD_SUPPORT = ShardSupport(
+    shards_kind="flat_shards",
+    halo_kind="flat_halo",
+    layout_classes=_flat_layout_classes,
+    geometry=_flat_geometry,
+    pack_shards=_flat_pack_shards,
+    pack_halo=_flat_pack_halo,
+    refresh_shards=_flat_refresh_shards,
+    refresh_halo=_flat_refresh_halo,
+    shard_arrays=_flat_shard_arrays,
+    shard_specs=_flat_shard_specs,
+    local_fn=_flat_local_fn,
+    halo_dims=_flat_halo_dims,
+)
+
+
 register_path(KernelPath(
     name="flat",
     feasible=_windowed_feasible,
@@ -507,4 +629,226 @@ register_path(KernelPath(
     make_spmv=_flat_make_spmv,
     make_spmm=_flat_make_spmm,
     refresh_values=_flat_refresh,
+    shard_support=FLAT_SHARD_SUPPORT,
+))
+
+
+# ---------------------------------------------------------------------------
+# 'nnzsplit' — merge-style equal-nnz chunking Pallas kernel (unstructured
+# matrices: the CSRC analogue of merge-based CSR SpMV)
+# ---------------------------------------------------------------------------
+
+# Candidate gates.  The windowed paths lose in two distinct ways on
+# unstructured matrices, and each gets a gate:
+#  * skew: nnz-per-row CoV above this means even the flat grid's per-tile
+#    packing pays for hub rows (power-law degree tails) — row-independent
+#    chunking is worth measuring.  Deliberately above FLAT_SKEW_MIN: in
+#    the moderate-skew band the flat path already wins and nnzsplit only
+#    adds tuner work.
+#  * spread: `ja` bandwidth above this fraction of n means the windowed
+#    packs pad a window comparable to the whole matrix (random graphs,
+#    circuits) — there is no band to exploit.
+NNZSPLIT_SKEW_MIN = 2.0
+NNZSPLIT_SPREAD_MIN = 0.25
+
+
+def nnzsplit_worth_measuring(stats) -> bool:
+    """The nnzsplit enumerator's gate, shared with benchmarks: is the
+    matrix unstructured enough (heavy row-length tail OR non-banded column
+    spread) that nnz-balanced chunking could beat the windowed paths?"""
+    if stats.n != stats.m:
+        return False
+    cov = stats.nnz_row_dev / max(stats.nnz_row_mean, 1.0)
+    return (cov > NNZSPLIT_SKEW_MIN
+            or stats.bandwidth > NNZSPLIT_SPREAD_MIN * max(stats.n, 1))
+
+
+def _nnzsplit_feasible(plan, *, n, m, bandwidth) -> bool:
+    """Square matrices only; int16 gather indices additionally need every
+    global index (src into x) to fit.  The per-chunk row window is checked
+    at pack time against plan.w_cap (reused as the chunk-window cap) — it
+    depends on row-gap statistics, not on the bandwidth stat."""
+    if n != m:
+        return False
+    return plan.index_dtype != "int16" or n <= 32767
+
+
+def _nnzsplit_candidates(stats, space):
+    if not nnzsplit_worth_measuring(stats):
+        return []
+    out = []
+    for ks in space.nnzsplit_ks:
+        for idt in space.index_dtypes:
+            if idt == "int16" and stats.n > 32767:
+                continue        # gather index overflows 16 bits
+            for vdt in space.value_dtypes:
+                if (vdt == "bfloat16"
+                        and not stats.numerically_symmetric):
+                    continue
+                out.append(ExecutionPlan(
+                    path="nnzsplit", w_cap=space.w_cap,
+                    k_step_sublanes=ks, index_dtype=idt, value_dtype=vdt,
+                    partition=space.partition,
+                    accumulation=space.accumulation))
+    return out
+
+
+def _nnzsplit_fields(plan) -> tuple:
+    # no tm: the chunking is row-independent; w_cap doubles as the
+    # per-chunk row-window cap
+    return (plan.k_step_sublanes, plan.w_cap, plan.index_dtype,
+            plan.value_dtype)
+
+
+def _nnzsplit_build(M, plan, coloring=None) -> dict:
+    from repro.kernels import csrc_spmv_nnzsplit as nz_mod
+    if not M.is_square:
+        raise ValueError(
+            "nnzsplit path chunks the square CSRC part only; "
+            "use 'segment' for rectangular matrices")
+    BUILD_COUNTS["nnzsplit_pack"] += 1
+    return {"nnzsplit_pack": nz_mod.pack_nnzsplit(
+        M, ks=plan.k_step_sublanes, r_cap=plan.w_cap,
+        dtype=_value_dtype_of(plan),
+        index_dtype=_index_dtype_of(plan))}
+
+
+def _nnzsplit_save(sched):
+    import numpy as np
+    pk = sched.nnzsplit_pack
+    meta = {"nnzsplit_pack": {
+        "n": pk.n, "num_chunks": pk.num_chunks, "ks": pk.ks,
+        "r_pad": pk.r_pad, "num_symmetric": bool(pk.num_symmetric),
+        "value_dtype": str(pk.vals.dtype),
+        "pad_ratio": pk.pad_ratio}}
+    arrays = dict(
+        nnzsplit_vals=np.asarray(pk.vals, dtype=np.float32),
+        nnzsplit_lrow=np.asarray(pk.lrow),
+        nnzsplit_src=np.asarray(pk.src),
+        nnzsplit_chunk_row0=np.asarray(pk.chunk_row0),
+        nnzsplit_fixup_idx=np.asarray(pk.fixup_idx),
+        nnzsplit_ad=np.asarray(pk.ad, dtype=np.float32),
+    )
+    return meta, arrays
+
+
+def _nnzsplit_load(meta, z) -> dict:
+    import jax.numpy as jnp
+    from repro.kernels.csrc_spmv_nnzsplit import NnzSplitPack
+    pm = meta["nnzsplit_pack"]
+    vdt = jnp.dtype(pm.get("value_dtype", "float32"))
+    return {"nnzsplit_pack": NnzSplitPack(
+        n=pm["n"], num_chunks=pm["num_chunks"], ks=pm["ks"],
+        r_pad=pm["r_pad"],
+        vals=jnp.asarray(z["nnzsplit_vals"], dtype=vdt),
+        lrow=jnp.asarray(z["nnzsplit_lrow"]),
+        src=jnp.asarray(z["nnzsplit_src"]),
+        chunk_row0=jnp.asarray(z["nnzsplit_chunk_row0"]),
+        fixup_idx=jnp.asarray(z["nnzsplit_fixup_idx"]),
+        ad=jnp.asarray(z["nnzsplit_ad"], dtype=vdt),
+        num_symmetric=bool(pm["num_symmetric"]),
+        pad_ratio=float(pm["pad_ratio"]),
+    )}
+
+
+def _nnzsplit_refresh(M, sched) -> dict:
+    from repro.kernels import csrc_spmv_nnzsplit as nz_mod
+    return {"nnzsplit_pack": nz_mod.refresh_nnzsplit_values(
+        sched.nnzsplit_pack, M)}
+
+
+def _nnzsplit_make_spmv(M, schedule, plan, *, interpret=True, coloring=None):
+    from repro.kernels import csrc_spmv_nnzsplit as nz_mod
+    return functools.partial(nz_mod.nnzsplit_spmv, schedule.nnzsplit_pack,
+                             interpret=interpret)
+
+
+def _nnzsplit_make_spmm(M, schedule, plan, *, interpret=True, coloring=None):
+    from repro.kernels import csrc_spmv_nnzsplit as nz_mod
+    return functools.partial(nz_mod.nnzsplit_spmm, schedule.nnzsplit_pack,
+                             interpret=interpret)
+
+
+def _nnzsplit_layout_classes():
+    from repro.kernels.csrc_spmv_nnzsplit import NnzSplitHalo, NnzSplitShards
+    return {"nnzsplit_shards": NnzSplitShards, "nnzsplit_halo": NnzSplitHalo}
+
+
+def _nnzsplit_geometry(plan):
+    return (plan.k_step_sublanes, plan.w_cap, plan.index_dtype,
+            plan.value_dtype)
+
+
+def _nnzsplit_pack_shards(M, starts, plan):
+    from repro.kernels import csrc_spmv_nnzsplit as nz_mod
+    return nz_mod.pack_nnzsplit_shards(
+        M, starts, ks=plan.k_step_sublanes, r_cap=plan.w_cap,
+        dtype=_value_dtype_of(plan), index_dtype=_index_dtype_of(plan))
+
+
+def _nnzsplit_pack_halo(M, p, plan):
+    from repro.kernels import csrc_spmv_nnzsplit as nz_mod
+    return nz_mod.pack_nnzsplit_halo(
+        M, p, ks=plan.k_step_sublanes, r_cap=plan.w_cap,
+        dtype=_value_dtype_of(plan), index_dtype=_index_dtype_of(plan))
+
+
+def _nnzsplit_refresh_shards(lay, M, starts):
+    from repro.kernels import csrc_spmv_nnzsplit as nz_mod
+    return nz_mod.refresh_nnzsplit_shards(lay, M, starts)
+
+
+def _nnzsplit_refresh_halo(lay, M):
+    from repro.kernels import csrc_spmv_nnzsplit as nz_mod
+    return nz_mod.refresh_nnzsplit_halo(lay, M)
+
+
+def _nnzsplit_shard_arrays(lay):
+    from repro.kernels import csrc_spmv_nnzsplit as nz_mod
+    return nz_mod.nnzsplit_shard_arrays(lay)
+
+
+def _nnzsplit_shard_specs(axis):
+    from repro.kernels import csrc_spmv_nnzsplit as nz_mod
+    return nz_mod.nnzsplit_shard_specs(axis)
+
+
+def _nnzsplit_local_fn(lay, n_local, interpret):
+    from repro.kernels import csrc_spmv_nnzsplit as nz_mod
+    return nz_mod.nnzsplit_local_fn(lay, n_local, interpret)
+
+
+def _nnzsplit_halo_dims(lay):
+    from repro.kernels import csrc_spmv_nnzsplit as nz_mod
+    return nz_mod.nnzsplit_halo_dims(lay)
+
+
+NNZSPLIT_SHARD_SUPPORT = ShardSupport(
+    shards_kind="nnzsplit_shards",
+    halo_kind="nnzsplit_halo",
+    layout_classes=_nnzsplit_layout_classes,
+    geometry=_nnzsplit_geometry,
+    pack_shards=_nnzsplit_pack_shards,
+    pack_halo=_nnzsplit_pack_halo,
+    refresh_shards=_nnzsplit_refresh_shards,
+    refresh_halo=_nnzsplit_refresh_halo,
+    shard_arrays=_nnzsplit_shard_arrays,
+    shard_specs=_nnzsplit_shard_specs,
+    local_fn=_nnzsplit_local_fn,
+    halo_dims=_nnzsplit_halo_dims,
+)
+
+
+register_path(KernelPath(
+    name="nnzsplit",
+    feasible=_nnzsplit_feasible,
+    candidates=_nnzsplit_candidates,
+    artifact_fields=_nnzsplit_fields,
+    build_artifact=_nnzsplit_build,
+    save_artifact=_nnzsplit_save,
+    load_artifact=_nnzsplit_load,
+    make_spmv=_nnzsplit_make_spmv,
+    make_spmm=_nnzsplit_make_spmm,
+    refresh_values=_nnzsplit_refresh,
+    shard_support=NNZSPLIT_SHARD_SUPPORT,
 ))

@@ -166,6 +166,12 @@ class ExecutionPlan:
             return (f"{self.path}:tm{self.tm}:ks{self.k_step_sublanes}"
                     f"{i16}{bf16}"
                     f":{self.partition}:{self.accumulation}{rhs}{mesh}")
+        if self.path == "nnzsplit":
+            # no tm: chunking is row-independent; ks sets the chunk size
+            i16 = ":i16" if self.index_dtype == "int16" else ""
+            bf16 = ":bf16" if self.value_dtype == "bfloat16" else ""
+            return (f"{self.path}:ks{self.k_step_sublanes}{i16}{bf16}"
+                    f":{self.partition}:{self.accumulation}{rhs}{mesh}")
         return (f"{self.path}:{self.partition}:{self.accumulation}"
                 f"{rhs}{mesh}")
 

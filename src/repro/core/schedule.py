@@ -58,11 +58,10 @@ from .partition import (RowPartition, halo_widths, partition_rows_by_count,
 from .paths import BUILD_COUNTS
 from .plan import ExecutionPlan
 
-# version 4: windowed pack meta records the value-stream dtype
-# (plan.value_dtype — bf16 packs persist as widened f32 arrays and
-# re-narrow on load) and the artifact key pins it.  Version-3 files load
-# as misses and are rebuilt transparently.
-SCHEDULE_VERSION = 4
+# version 5: the 'nnzsplit' path's NnzSplitPack artifact joins the npz
+# layout (nnzsplit_* arrays + "nnzsplit_pack" meta).  Version-4 files
+# load as misses and are rebuilt transparently.
+SCHEDULE_VERSION = 5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +86,7 @@ class SpmvSchedule:
     color_slots: Optional[np.ndarray] = None
     color_slot_ptr: Optional[np.ndarray] = None
     flat_pack: Optional[object] = None       # 'flat' path (FlatBlockEll)
+    nnzsplit_pack: Optional[object] = None   # 'nnzsplit' path (NnzSplitPack)
     # exact-structure digest (ia/ja/iar/jar only — values excluded): the
     # key of the value-refresh fast path (refresh_schedule)
     structure_digest: str = ""
@@ -352,9 +352,15 @@ SHARD_LAYOUT_VERSION = 1
 
 
 def _layout_kinds() -> dict:
-    from repro.kernels.csrc_spmv_flat import FlatHalo, FlatShards
-    return {"sharded_slots": ShardedSlots, "halo": HaloLayout,
-            "flat_shards": FlatShards, "flat_halo": FlatHalo}
+    """npz-kind -> dataclass for every serializable shard layout: the two
+    segment-path layouts owned here, plus every registered path's
+    ShardSupport layouts (the registry keeps this map current — a new
+    path's layouts serialize with zero edits here)."""
+    kinds = {"sharded_slots": ShardedSlots, "halo": HaloLayout}
+    for entry in paths_mod.registered_paths():
+        if entry.shard_support is not None:
+            kinds.update(entry.shard_support.layout_classes())
+    return kinds
 
 
 def shard_layout_key(kind: str, fp: str, digest: str, p: int,
@@ -572,11 +578,19 @@ def build_halo_layout(M: CSRC, p: int, cache=None) -> HaloLayout:
     return out
 
 
-# Shard-local flat-grid layouts (plan.path == 'flat' under a distributed
-# strategy): per-shard flat packs, memoized like the other layouts so
-# repeated builder calls are zero-precompute.
+# Shard-local path layouts (a plan whose path has ShardSupport, under a
+# distributed strategy): per-shard sub-packs, memoized like the other
+# layouts so repeated builder calls are zero-precompute.  One memo dict
+# per layout kind; the flat names are module-level for compatibility
+# (tests clear them to force rebuild counting).
 _FLAT_SHARDS_MEMO: dict = {}
 _FLAT_HALO_MEMO: dict = {}
+_PATH_LAYOUT_MEMOS: dict = {"flat_shards": _FLAT_SHARDS_MEMO,
+                            "flat_halo": _FLAT_HALO_MEMO}
+
+
+def _layout_memo(kind: str) -> dict:
+    return _PATH_LAYOUT_MEMOS.setdefault(kind, {})
 
 
 # one mapping from plan dtype strings to jnp dtypes for the whole stack
@@ -585,68 +599,80 @@ _plan_index_dtype = paths_mod._index_dtype_of
 _plan_value_dtype = paths_mod._value_dtype_of
 
 
-def build_flat_shards(M: CSRC, part: RowPartition, plan: ExecutionPlan,
+def _shard_support_of(path_name: str):
+    sup = paths_mod.get_path(path_name).shard_support
+    if sup is None:
+        raise ValueError(f"path {path_name!r} registers no shard support; "
+                         "distributed strategies run it as segment-sum")
+    return sup
+
+
+def build_path_shards(M: CSRC, part: RowPartition, plan: ExecutionPlan,
                       cache=None):
-    """Per-shard flat sub-packs over the schedule's row partition (global
-    coordinates; allreduce / reduce_scatter strategies).  Memoized per
-    exact matrix + partition boundaries + pack geometry (incl. the plan's
-    index- and value-stream dtypes); with ``cache``, also served from /
-    shipped to the PlanCache npz layer."""
-    from repro.kernels.csrc_spmv_flat import pack_flat_shards
-    geo = (plan.tm, plan.k_step_sublanes, plan.w_cap, plan.index_dtype,
-           plan.value_dtype, *(int(s) for s in np.asarray(part.starts)))
-    memo_key = (value_digest(M), np.asarray(part.starts).tobytes(),
-                plan.tm, plan.k_step_sublanes, plan.w_cap,
-                plan.index_dtype, plan.value_dtype)
-    hit = _FLAT_SHARDS_MEMO.get(memo_key)
+    """Per-shard sub-packs of ``plan.path`` over the schedule's row
+    partition (global coordinates; allreduce / reduce_scatter
+    strategies).  Generic over the registry's ShardSupport: memoized per
+    exact matrix + partition boundaries + path pack geometry; with
+    ``cache``, also served from / shipped to the PlanCache npz layer."""
+    sup = _shard_support_of(plan.path)
+    kind = sup.shards_kind
+    pgeo = sup.geometry(plan)
+    geo = pgeo + tuple(int(s) for s in np.asarray(part.starts))
+    memo = _layout_memo(kind)
+    memo_key = (value_digest(M), np.asarray(part.starts).tobytes()) + pgeo
+    hit = memo.get(memo_key)
     if hit is not None:
-        _ensure_shipped(M, cache, "flat_shards", part.p, geo, hit)
+        _ensure_shipped(M, cache, kind, part.p, geo, hit)
         return hit
-    shipped, key = _cached_layout(M, cache, "flat_shards", part.p, geo)
+    shipped, key = _cached_layout(M, cache, kind, part.p, geo)
     if shipped is not None:
-        _FLAT_SHARDS_MEMO[memo_key] = shipped
+        memo[memo_key] = shipped
         return shipped
-    BUILD_COUNTS["flat_shards"] += 1
-    out = pack_flat_shards(M, part.starts, tm=plan.tm,
-                           ks=plan.k_step_sublanes, w_cap=plan.w_cap,
-                           dtype=_plan_value_dtype(plan),
-                           index_dtype=_plan_index_dtype(plan))
-    _FLAT_SHARDS_MEMO[memo_key] = out
+    BUILD_COUNTS[kind] += 1
+    out = sup.pack_shards(M, np.asarray(part.starts), plan)
+    memo[memo_key] = out
     if key is not None:
         cache.put_shard_layout(key, out)
     return out
+
+
+def build_path_halo(M: CSRC, p: int, plan: ExecutionPlan, cache=None):
+    """Per-shard local-coordinate packs of ``plan.path`` for the halo
+    strategy.  Raises ValueError when the band does not fit inside one
+    shard (same gate as :func:`build_halo_layout`).  Memoized per exact
+    matrix + shard count + path pack geometry; with ``cache``, also
+    served from / shipped to the PlanCache npz layer."""
+    sup = _shard_support_of(plan.path)
+    kind = sup.halo_kind
+    geo = sup.geometry(plan)
+    memo = _layout_memo(kind)
+    memo_key = (value_digest(M), p) + geo
+    hit = memo.get(memo_key)
+    if hit is not None:
+        _ensure_shipped(M, cache, kind, p, geo, hit)
+        return hit
+    shipped, key = _cached_layout(M, cache, kind, p, geo)
+    if shipped is not None:
+        memo[memo_key] = shipped
+        return shipped
+    BUILD_COUNTS[kind] += 1
+    out = sup.pack_halo(M, p, plan)
+    memo[memo_key] = out
+    if key is not None:
+        cache.put_shard_layout(key, out)
+    return out
+
+
+def build_flat_shards(M: CSRC, part: RowPartition, plan: ExecutionPlan,
+                      cache=None):
+    """Back-compat name: :func:`build_path_shards` for a 'flat' plan."""
+    return build_path_shards(M, part, plan, cache=cache)
 
 
 def build_flat_halo_layout(M: CSRC, p: int, plan: ExecutionPlan,
                            cache=None):
-    """Per-shard local-coordinate flat packs for the halo strategy.
-    Raises ValueError when the band does not fit inside one shard (same
-    gate as :func:`build_halo_layout`).  Memoized per exact matrix +
-    shard count + pack geometry (incl. the plan's index- and value-stream
-    dtypes); with ``cache``, also served from / shipped to the PlanCache
-    npz layer."""
-    from repro.kernels.csrc_spmv_flat import pack_flat_halo
-    geo = (plan.tm, plan.k_step_sublanes, plan.w_cap, plan.index_dtype,
-           plan.value_dtype)
-    memo_key = (value_digest(M), p, plan.tm, plan.k_step_sublanes,
-                plan.w_cap, plan.index_dtype, plan.value_dtype)
-    hit = _FLAT_HALO_MEMO.get(memo_key)
-    if hit is not None:
-        _ensure_shipped(M, cache, "flat_halo", p, geo, hit)
-        return hit
-    shipped, key = _cached_layout(M, cache, "flat_halo", p, geo)
-    if shipped is not None:
-        _FLAT_HALO_MEMO[memo_key] = shipped
-        return shipped
-    BUILD_COUNTS["flat_halo"] += 1
-    out = pack_flat_halo(M, p, tm=plan.tm, ks=plan.k_step_sublanes,
-                         w_cap=plan.w_cap,
-                         dtype=_plan_value_dtype(plan),
-                         index_dtype=_plan_index_dtype(plan))
-    _FLAT_HALO_MEMO[memo_key] = out
-    if key is not None:
-        cache.put_shard_layout(key, out)
-    return out
+    """Back-compat name: :func:`build_path_halo` for a 'flat' plan."""
+    return build_path_halo(M, p, plan, cache=cache)
 
 
 # ---------------------------------------------------------------------------
@@ -660,24 +686,28 @@ def refresh_shard_layout(lay, M: CSRC, part: Optional[RowPartition] = None):
     matrix.  Structural arrays (slot indices, tile maps, halo geometry)
     are reused untouched; only al/au/ad streams are rewritten — the probe
     counter is ``shard_value_refresh``, and no structural counter moves.
-    ``part`` is required for FlatShards (the layout does not embed its
-    partition boundaries)."""
-    from repro.kernels.csrc_spmv_flat import (FlatHalo, FlatShards,
-                                              refresh_flat_halo,
-                                              refresh_flat_shards)
-
+    ``part`` is required for the partition-keyed shards layouts
+    (FlatShards, NnzSplitShards, ... — they do not embed their partition
+    boundaries)."""
     BUILD_COUNTS["shard_value_refresh"] += 1
-    if isinstance(lay, FlatShards):
-        if part is None:
-            raise ValueError("refresh_shard_layout: FlatShards needs the "
-                             "row partition it was built over")
-        return refresh_flat_shards(lay, M, np.asarray(part.starts))
-    if isinstance(lay, FlatHalo):
-        return refresh_flat_halo(lay, M)
     if isinstance(lay, ShardedSlots):
         return _refresh_sharded_slots(lay, M)
     if isinstance(lay, HaloLayout):
         return _refresh_halo_layout(lay, M)
+    # path-specific layouts: dispatch through the registry's ShardSupport
+    for entry in paths_mod.registered_paths():
+        sup = entry.shard_support
+        if sup is None:
+            continue
+        classes = sup.layout_classes()
+        if isinstance(lay, classes[sup.shards_kind]):
+            if part is None:
+                raise ValueError(
+                    f"refresh_shard_layout: {type(lay).__name__} needs "
+                    "the row partition it was built over")
+            return sup.refresh_shards(lay, M, np.asarray(part.starts))
+        if isinstance(lay, classes[sup.halo_kind]):
+            return sup.refresh_halo(lay, M)
     raise TypeError(f"unknown shard layout {type(lay).__name__}")
 
 

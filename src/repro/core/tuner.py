@@ -281,8 +281,12 @@ def enumerate_mesh_plans(stats: MatrixStats, p: int,
         # wired into the distributed measurement loop first)
         value_dtypes=("float32",))
     bases: List[ExecutionPlan] = []
-    for name in ("segment", "flat"):
-        entry = paths_mod.get_path(name)
+    # shard-compute candidates: segment (the universal shard-local
+    # fallback) plus every registered path with ShardSupport — the
+    # distributed strategies can run those per shard
+    for entry in paths_mod.registered_paths():
+        if entry.name != "segment" and entry.shard_support is None:
+            continue
         for cand in entry.candidates(stats, space):
             if feasible(cand, n=stats.n, m=stats.m,
                         bandwidth=stats.bandwidth):

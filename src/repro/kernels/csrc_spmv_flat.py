@@ -652,3 +652,42 @@ def refresh_flat_halo(lay: FlatHalo, M: CSRC) -> FlatHalo:
         vals_u=jnp.asarray(np.stack(vus), dtype=vdtype),
         ad=jnp.asarray(ad.reshape(lay.p, lay.nt, lay.tm),
                        dtype=lay.ad.dtype))
+
+
+# --- shard_map plumbing (ShardSupport hooks) -------------------------------
+
+def flat_shard_arrays(fs):
+    """Leading-axis-p arrays a shard_map local function consumes."""
+    return (fs.tile_of_step, fs.first_of_tile, fs.vals_l, fs.vals_u,
+            fs.col_local, fs.row_in_win, fs.ad)
+
+
+def flat_shard_specs(axis: str):
+    from jax.sharding import PartitionSpec as P
+    return (P(axis, None), P(axis, None),
+            P(axis, None, None, None), P(axis, None, None, None),
+            P(axis, None, None, None), P(axis, None, None, None),
+            P(axis, None, None))
+
+
+def flat_local_fn(fs, n_local: int, interpret: bool):
+    """Shard-local flat-grid product: rebuild the shard's FlatBlockEll from
+    the shard_map-sliced stacked arrays and run the Pallas kernel (SpMV or
+    SpMM by x rank).  ``fs`` is a FlatShards or FlatHalo layout."""
+    def local_y(tile, first, vals_l, vals_u, col, row, ad, x):
+        pk = FlatBlockEll(
+            n=n_local, tm=fs.tm, nt=fs.nt, w_pad=fs.w_pad,
+            total_steps=fs.steps, ks=fs.ks,
+            vals_l=vals_l[0], vals_u=vals_u[0], col_local=col[0],
+            row_in_win=row[0], ad=ad[0], tile_of_step=tile[0],
+            first_of_tile=first[0],
+            num_symmetric=fs.num_symmetric, pad_ratio=1.0)
+        if x.ndim == 2:
+            return flat_spmm(pk, x, interpret=interpret)
+        return flat_spmv(pk, x, interpret=interpret)
+
+    return local_y
+
+
+def flat_halo_dims(lay: FlatHalo):
+    return lay.ns, lay.h, lay.n_local

@@ -103,8 +103,10 @@ class SpmvOperator:
         the registry — shared by construction and ``update_values``."""
         self.M = M
         self.schedule = schedule
-        self.pack = (schedule.pack if schedule.pack is not None
-                     else schedule.flat_pack)
+        self.pack = next(
+            (pk for pk in (schedule.pack, schedule.flat_pack,
+                           schedule.nnzsplit_pack) if pk is not None),
+            None)
         self.coloring = schedule.coloring if coloring is None else coloring
 
         # registry dispatch: the path's KernelPath entry builds both

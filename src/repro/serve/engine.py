@@ -65,6 +65,10 @@ class ServingEngine:
         self.queue.append(req)
 
     def _admit(self):
+        """Admit queued requests into free slots; returns the requests
+        that finished at prefill (EOS straight from the prompt, or a
+        one-token budget) — those never occupy a decode slot."""
+        finished = []
         for slot in range(self.max_slots):
             if slot in self.active or not self.queue:
                 continue
@@ -74,9 +78,16 @@ class ServingEngine:
                                           max_len=self.max_len)
             tok = self._sample(logits[:, -1], req.temperature)
             req.out_tokens.append(int(tok[0]))
+            # the prefill token counts toward max_new_tokens; retire here
+            # when it is EOS or exhausts the budget, instead of burning a
+            # decode tick on an already-finished request
+            if int(tok[0]) == self.eos_id or req.max_new_tokens <= 1:
+                finished.append(req)
+                continue
             self.active[slot] = req
             self.remaining[slot] = req.max_new_tokens - 1
             self._states[slot] = (state, tok)
+        return finished
 
     def _sample(self, logits, temperature: float):
         if temperature <= 0.0:
@@ -88,7 +99,7 @@ class ServingEngine:
 
     def step(self):
         """One engine tick: admit, decode every active slot, retire."""
-        self._admit()
+        finished = self._admit()
         done = []
         for slot, req in self.active.items():
             state, last_tok = self._states[slot]
@@ -100,7 +111,6 @@ class ServingEngine:
             self.remaining[slot] -= 1
             if int(tok[0]) == self.eos_id or self.remaining[slot] <= 0:
                 done.append(slot)
-        finished = []
         for slot in done:
             finished.append(self.active.pop(slot))
             self._states.pop(slot)

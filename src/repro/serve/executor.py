@@ -13,8 +13,10 @@ whichever executor the plan's ``strategy`` field names:
   :func:`~repro.core.distributed.build_sharded_spmv`.  Every structural
   artifact the mesh needs — the :class:`~repro.core.schedule.SpmvSchedule`
   (row partition) and the per-shard layout (``ShardedSlots`` /
-  ``HaloLayout`` for segment shard-compute, ``FlatShards`` / ``FlatHalo``
-  for flat) — is built through the schedule layer and, given a cache,
+  ``HaloLayout`` for segment shard-compute, the path's ShardSupport
+  layouts — ``FlatShards``/``FlatHalo``, ``NnzSplitShards``/
+  ``NnzSplitHalo`` — for kernel-backed paths) — is built through the
+  schedule layer and, given a cache,
   served from / shipped to the PlanCache npz layer keyed by
   (fingerprint, value digest, p, strategy kind): a worker process
   re-registering a known matrix performs zero per-shard pack work.
@@ -121,18 +123,20 @@ class MeshExecutor(SpmvExecutor):
         self.p = p
         self.cache = cache
         self.interpret = interpret
-        self._flat = plan.path == "flat"
+        from repro.core import paths as paths_mod
+        self._sup = paths_mod.get_path(plan.path).shard_support
         self._sched = None
         self.layout = None
         self._structure_digest = None
         self._build(M)
 
-    # the schedule artifact only supplies the row partition here; a flat
-    # plan builds its per-shard sub-packs instead of the (unused)
-    # full-matrix pack, so the schedule request is path-free
+    # the schedule artifact only supplies the row partition here; a
+    # shard-supported plan ('flat', 'nnzsplit') builds its per-shard
+    # sub-packs instead of the (unused) full-matrix pack, so the schedule
+    # request is path-free
     def _sched_plan(self) -> ExecutionPlan:
         return (dataclasses.replace(self.plan, path="segment")
-                if self._flat else self.plan)
+                if self._sup is not None else self.plan)
 
     def _build(self, M: CSRC):
         from repro.core import distributed as dist
@@ -143,8 +147,8 @@ class MeshExecutor(SpmvExecutor):
         if strat == "halo":
             # halo geometry depends only on (matrix, p): no schedule needed
             self._sched = None
-            if self._flat:
-                self.layout = schedule_mod.build_flat_halo_layout(
+            if self._sup is not None:
+                self.layout = schedule_mod.build_path_halo(
                     M, self.p, self.plan, cache=self.cache)
             else:
                 self.layout = schedule_mod.build_halo_layout(
@@ -153,8 +157,8 @@ class MeshExecutor(SpmvExecutor):
             self._sched = schedule_mod.schedule_for(
                 M, self._sched_plan(), cache=self.cache, p=self.p)
             part = self._sched.partition
-            if self._flat:
-                self.layout = schedule_mod.build_flat_shards(
+            if self._sup is not None:
+                self.layout = schedule_mod.build_path_shards(
                     M, part, self.plan, cache=self.cache)
             else:
                 self.layout = schedule_mod.build_sharded_slots(

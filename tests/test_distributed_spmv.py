@@ -87,6 +87,42 @@ def test_all_strategies_flat_kernel_match_dense():
 
 
 @pytest.mark.slow
+def test_all_strategies_nnzsplit_match_dense():
+    """Shard-local nnz-split execution (plan.path='nnzsplit') inside
+    every accumulation strategy on 8 shards: the power-law class for the
+    global strategies, a banded matrix for halo (whose gate needs
+    bandwidth <= rows-per-shard), single- and multi-RHS."""
+    print(run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import csrc, distributed as D
+        from repro.core.plan import ExecutionPlan
+        mesh = jax.make_mesh((8,), ('rows',))
+        rng = np.random.default_rng(0)
+        plan = ExecutionPlan(path='nnzsplit', k_step_sublanes=2)
+        cases = [(csrc.powerlaw_laplacian(512, seed=1),
+                  ('allreduce', 'reduce_scatter')),
+                 (csrc.fem_band(512, 16, seed=2), ('halo',))]
+        for M, strats in cases:
+            A = np.asarray(csrc.to_dense(M), np.float64)
+            x = (rng.integers(-64, 64, M.n) / 8.0).astype(np.float32)
+            X = (rng.integers(-64, 64, (M.n, 4)) / 8.0).astype(np.float32)
+            for strat in strats:
+                fn = D.build_sharded_spmv(M, mesh, 'rows', strat,
+                                          plan=plan)
+                y = np.asarray(fn(jnp.asarray(x)))[:M.n]
+                ref = A @ x
+                err = np.abs(y - ref).max() / max(1., np.abs(ref).max())
+                assert err < 1e-5, (strat, err)
+                Y = np.asarray(fn(jnp.asarray(X)))[:M.n]
+                refm = A @ X
+                errm = (np.abs(Y - refm).max()
+                        / max(1., np.abs(refm).max()))
+                assert errm < 1e-5, (strat, errm)
+        print('OK')
+    """))
+
+
+@pytest.mark.slow
 def test_auto_strategy_selection():
     print(run_with_devices("""
         import jax

@@ -97,3 +97,74 @@ def test_conflict_stats_counts():
     s = conflict_stats(M)
     assert s["direct"] == 12       # 2*3*2 grid edges
     assert s["indirect"] > 0
+
+
+def test_paper_example_conflict_counts():
+    """Regression pin for the §3.2 illustration: the 9×9 example has 12
+    direct and 7 indirect conflicts (the hoisted-neighbor-set rewrite of
+    conflict_stats must reproduce both exactly)."""
+    s = conflict_stats(csrc.paper_example())
+    assert s == {"direct": 12, "indirect": 7}
+
+
+def test_balance_matches_full_scan_reference():
+    """The incremental per-class member lists in _balance must reproduce
+    the original full `color == d` scan move for move — same colors, so
+    same balance_stats — on every suite matrix class."""
+    from repro.core.coloring import (_balance, _forbidden_colors, _greedy,
+                                     balance_stats, direct_adjacency)
+
+    def balance_ref(adj, color, include_indirect, max_rounds=3):
+        n = len(color)
+        num_colors = int(color.max()) + 1 if n else 0
+        if num_colors <= 1:
+            return color
+        target = -(-n // num_colors)
+        for _ in range(max_rounds):
+            sizes = np.bincount(color, minlength=num_colors)
+            moved = False
+            for v in range(n):
+                c = int(color[v])
+                if sizes[c] <= target:
+                    continue
+                forbidden = _forbidden_colors(v, adj, color,
+                                              include_indirect)
+                best, best_key = -1, None
+                for d in range(num_colors):
+                    if (d == c or d in forbidden
+                            or sizes[d] + 1 > sizes[c] - 1):
+                        continue
+                    members = np.flatnonzero(color == d)
+                    dist = (int(np.abs(members - v).min())
+                            if members.size else 0)
+                    key = (int(sizes[d]), dist)
+                    if best_key is None or key < best_key:
+                        best, best_key = d, key
+                if best >= 0:
+                    sizes[c] -= 1
+                    sizes[best] += 1
+                    color[v] = best
+                    moved = True
+            if not moved:
+                break
+        return color
+
+    suite = [csrc.poisson2d(6), csrc.fem_band(80, 3, seed=0),
+             csrc.skewed_band(64, 12, 2, seed=1),
+             csrc.random_symmetric_pattern(48, 3, seed=3),
+             csrc.paper_example()]
+    for M in suite:
+        adj = direct_adjacency(M)
+        deg = np.asarray([len(a) for a in adj])
+        order = np.argsort(-deg, kind="stable")
+        c0 = _greedy(adj, np.arange(M.n), True)
+        cd = _greedy(adj, order, True)
+        base = cd if cd.max() <= c0.max() else c0
+        got = _balance(adj, base.copy(), True)
+        ref_c = balance_ref(adj, base.copy(), True)
+        assert np.array_equal(got, ref_c), type(M)
+        col = color_rows(M)
+        assert verify_coloring(M, col)
+        # stats derive from the colors, so they are unchanged too
+        s = balance_stats(col)
+        assert s["imbalance"] >= 1.0 and s["std"] >= 0.0

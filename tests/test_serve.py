@@ -113,3 +113,135 @@ def test_quantize_kv_roundtrip():
     assert q.dtype == jnp.int8
     np.testing.assert_allclose(np.asarray(back), np.asarray(k),
                                atol=float(jnp.abs(k).max()) / 100)
+
+
+# ---------------------------------------------------------------------------
+# Token accounting (the off-by-one/prefill-EOS regression pins)
+# ---------------------------------------------------------------------------
+
+class _CountingModel:
+    """Deterministic toy LM: the next token is always (prev + 1) mod vocab,
+    so tests can steer exactly when EOS appears without a real model."""
+    vocab = 16
+
+    def prefill(self, params, prompt, max_len):
+        nxt = (prompt[:, -1:] + 1) % self.vocab
+        return jnp.zeros(()), jax.nn.one_hot(nxt, self.vocab)
+
+    def decode_step(self, params, state, tok):
+        nxt = (tok[:, -1:] + 1) % self.vocab
+        return state, jax.nn.one_hot(nxt, self.vocab)
+
+
+def _counting_engine(eos_id, max_slots=2):
+    return ServingEngine(_CountingModel(), params=None,
+                         max_slots=max_slots, max_len=32, eos_id=eos_id)
+
+
+def test_max_new_tokens_one_emits_exactly_one_token():
+    """Regression: the prefill token counts toward the budget — a budget
+    of one must not burn a decode tick and emit a second token."""
+    eng = _counting_engine(eos_id=15)
+    eng.submit(Request(uid=0, prompt=np.array([2, 3]), max_new_tokens=1))
+    done = eng.step()
+    assert [r.uid for r in done] == [0]
+    assert done[0].out_tokens == [4]          # exactly one, no decode
+    assert not eng.active and not eng.queue
+
+
+def test_prefill_eos_retires_without_decode_tick():
+    """Regression: a prompt whose very first sampled token is EOS must
+    retire at admission, not occupy a slot for one more decode."""
+    eng = _counting_engine(eos_id=9)
+    eng.submit(Request(uid=0, prompt=np.array([3, 8]),   # prefill -> 9
+                       max_new_tokens=10))
+    done = eng.step()
+    assert [r.uid for r in done] == [0]
+    assert done[0].out_tokens == [9]
+    assert not eng.active and not eng.queue
+
+
+def test_exact_token_budget_without_eos():
+    """max_new_tokens is exact when EOS never fires: k tokens, not k+1."""
+    eng = _counting_engine(eos_id=15)
+    for k in (1, 2, 5):
+        eng.submit(Request(uid=k, prompt=np.array([0]), max_new_tokens=k))
+    done = eng.run_until_drained()
+    assert {r.uid: len(r.out_tokens) for r in done} == {1: 1, 2: 2, 5: 5}
+    assert all(r.out_tokens == list(range(1, r.uid + 1)) for r in done)
+
+
+def test_prefill_eos_frees_slot_for_queue():
+    """A prefill-finished request never occupies a slot, so a queued
+    request behind it is admitted the same tick."""
+    eng = _counting_engine(eos_id=9, max_slots=1)
+    eng.submit(Request(uid=0, prompt=np.array([8]), max_new_tokens=10))
+    eng.submit(Request(uid=1, prompt=np.array([0]), max_new_tokens=3))
+    done = eng.run_until_drained()
+    assert sorted(r.uid for r in done) == [0, 1]
+    by_uid = {r.uid: r.out_tokens for r in done}
+    assert by_uid[0] == [9]
+    assert by_uid[1] == [1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# SpMV serving: overflow ordering and coalesced-batch metadata
+# ---------------------------------------------------------------------------
+
+def _spmv_engine(max_batch):
+    from repro.core import csrc, tuner
+    from repro.serve.engine import SpmvServingEngine
+    eng = SpmvServingEngine(cache=tuner.PlanCache(), max_batch=max_batch)
+    M = csrc.poisson2d(5)
+    eng.register("m", M)
+    return eng, M
+
+
+def test_spmv_step_overflow_drains_fifo_across_ticks():
+    """Requests beyond max_batch stay queued in submission order and are
+    answered on the following ticks, oldest first."""
+    eng, M = _spmv_engine(max_batch=3)
+    rng = np.random.default_rng(0)
+    xs = [rng.standard_normal(M.m).astype(np.float32) for _ in range(8)]
+    uids = [eng.submit("m", x) for x in xs]
+    out1 = eng.step()
+    assert sorted(out1) == uids[:3]           # first tick: oldest three
+    assert [r.uid for r in eng.queue] == uids[3:]
+    out2 = eng.step()
+    assert sorted(out2) == uids[3:6]
+    out3 = eng.step()
+    assert sorted(out3) == uids[6:]
+    assert not eng.queue
+    from repro.core import csrc as C
+    A = np.asarray(C.to_dense(M), np.float64)
+    for out in (out1, out2, out3):
+        for uid, y in out.items():
+            np.testing.assert_allclose(
+                np.asarray(y), A @ xs[uids.index(uid)],
+                rtol=1e-5, atol=1e-5)
+
+
+def test_spmv_result_batched_metadata_matches_group_size():
+    """SpmvResult.batched reports the coalesced SpMM width: the full
+    group on a saturated tick, the remainder afterwards, 1 for a lone
+    request."""
+    eng, M = _spmv_engine(max_batch=4)
+    rng = np.random.default_rng(1)
+    uids = [eng.submit("m", rng.standard_normal(M.m).astype(np.float32))
+            for _ in range(6)]
+    out1 = eng.step()
+    assert all(out1[u].batched == 4 for u in uids[:4])
+    out2 = eng.step()
+    assert all(out2[u].batched == 2 for u in uids[4:])
+    lone = eng.submit("m", rng.standard_normal(M.m).astype(np.float32))
+    out3 = eng.step()
+    assert out3[lone].batched == 1
+
+
+def test_spmv_run_until_drained_covers_overflow():
+    eng, M = _spmv_engine(max_batch=2)
+    rng = np.random.default_rng(2)
+    uids = [eng.submit("m", rng.standard_normal(M.m).astype(np.float32))
+            for _ in range(7)]
+    out = eng.run_until_drained()
+    assert sorted(out) == sorted(uids)

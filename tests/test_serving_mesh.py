@@ -67,9 +67,10 @@ def _dyadic_x(m, seed=0, nrhs=None):
     return (rng.integers(-128, 128, shape) / 64.0).astype(np.float32)
 
 
-STRUCTURAL_KEYS = ("pack", "flat_pack", "partition", "coloring",
-                   "schedule", "sharded_slots", "halo_layout",
-                   "flat_shards", "flat_halo")
+STRUCTURAL_KEYS = ("pack", "flat_pack", "nnzsplit_pack", "partition",
+                   "coloring", "schedule", "sharded_slots", "halo_layout",
+                   "flat_shards", "flat_halo", "nnzsplit_shards",
+                   "nnzsplit_halo")
 
 
 # ---------------------------------------------------------------------------
