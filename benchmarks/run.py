@@ -29,6 +29,15 @@
                       (build) vs steady-state per-tick latency split —
                       written to results/BENCH_serving.json (the CI
                       serving-smoke job asserts the mesh rows exist)
+  local_gap           streaming vs one-hot kernel variants on the suite's
+                      windowed/unstructured classes: steady-state SpMV +
+                      nrhs=8 SpMM per (path, variant) with the analytic
+                      roofline fraction each achieved, the per-path
+                      streaming speedup, and the regenerated local-vs-mesh
+                      steady-state split — written to
+                      results/BENCH_local_gap.json (the CI bench-smoke
+                      job asserts streaming beats one-hot and that every
+                      plan row carries roofline_fraction)
   roofline_summary    single-pod roofline table from results/dryrun (§Roofline)
 
 Output: ``name,us_per_call,derived`` CSV rows.
@@ -60,6 +69,7 @@ BENCH_FLAT_PATH = os.path.join(ROOT, "results", "BENCH_flat.json")
 BENCH_NNZSPLIT_PATH = os.path.join(ROOT, "results", "BENCH_nnzsplit.json")
 BENCH_ASSEMBLY_PATH = os.path.join(ROOT, "results", "BENCH_assembly.json")
 BENCH_SERVING_PATH = os.path.join(ROOT, "results", "BENCH_serving.json")
+BENCH_LOCAL_GAP_PATH = os.path.join(ROOT, "results", "BENCH_local_gap.json")
 
 
 # ---------------------------------------------------------------------------
@@ -553,6 +563,124 @@ def serving(small: bool):
 
 
 # ---------------------------------------------------------------------------
+# Local gap: streaming vs one-hot variants under the analytic roofline
+# ---------------------------------------------------------------------------
+
+def local_gap(small: bool):
+    """The local-path speed gap, closed: per suite matrix and windowed/
+    unstructured path, steady-state SpMV and nrhs=8 SpMM of the one-hot
+    variant (the PR-5 baseline: (S, W) mask contractions, O(W)/slot)
+    against the streaming variant (per-lane gather + segment-sum,
+    O(1)/slot), each annotated with the fraction of the analytic roofline
+    (roofline/cost_model.py) it achieved.  Also regenerates the
+    local-vs-mesh steady-state split: the tuned local engine's per-tick
+    latency next to the mesh rows of results/BENCH_serving.json when that
+    file exists.  CI bench-smoke asserts, from the written JSON, that the
+    streaming variant beats one-hot on the fem_band entry and that every
+    plan row carries ``roofline_fraction``."""
+    print("# local_gap: streaming vs one-hot variants "
+          "(steady-state + roofline fraction)")
+    from repro.roofline import cost_model
+    scale = 4 if small else 1
+    rng = np.random.default_rng(0)
+    cases = [
+        ("fem_band_w16", csrc.fem_band(20000 // scale, 16, seed=2)),
+        ("fem_band_w64_sym", csrc.fem_band(8000 // scale, 64, seed=3,
+                                           numeric_symmetric=True)),
+        ("skew_band_w48", csrc.skewed_band(8000 // scale, 48, 3, seed=6)),
+        ("powerlaw_graph", csrc.powerlaw_laplacian(8000 // scale, seed=7)),
+    ]
+    records = []
+    for name, M in cases:
+        stats = tuner.stats_of(M)
+        x = jnp.asarray(rng.standard_normal(M.m).astype(np.float32))
+        X = jnp.asarray(rng.standard_normal((M.m, 8)).astype(np.float32))
+        paths_here = ["kernel", "flat"]
+        if paths.nnzsplit_worth_measuring(stats):
+            paths_here.append("nnzsplit")
+        by_path = {}
+        for path in paths_here:
+            per_variant = {}
+            for variant in ("onehot", "stream"):
+                plan = (ExecutionPlan(path="nnzsplit", k_step_sublanes=2,
+                                      variant=variant)
+                        if path == "nnzsplit"
+                        else ExecutionPlan(path=path, tm=128,
+                                           variant=variant))
+                try:
+                    op = ops.SpmvOperator.from_plan(M, plan)
+                except ValueError:
+                    continue              # window over cap for this grid
+                t = time_fn(op, x, warmup=2, repeats=5)
+                t_mm = time_fn(op, X, warmup=2, repeats=5)
+                est = cost_model.plan_cost(stats, plan)
+                frac = cost_model.roofline_fraction(est, t)
+                per_variant[variant] = {
+                    "plan": plan.key(),
+                    "spmv_us": round(t * 1e6, 1),
+                    "spmm8_us": round(t_mm * 1e6, 1),
+                    "predicted_ms": round(est.predicted_s * 1e3, 6),
+                    "bound": est.bound,
+                    "roofline_fraction": frac,
+                }
+                row(f"local_gap/{name}/{path}/{variant}", t * 1e6,
+                    f"spmm8_us={t_mm * 1e6:.1f};bound={est.bound};"
+                    f"roofline_fraction={frac:.3e}")
+            if {"onehot", "stream"} <= set(per_variant):
+                oh, st = per_variant["onehot"], per_variant["stream"]
+                by_path[path] = {
+                    "variants": per_variant,
+                    "stream_speedup_spmv":
+                        round(oh["spmv_us"] / st["spmv_us"], 2),
+                    "stream_speedup_spmm8":
+                        round(oh["spmm8_us"] / st["spmm8_us"], 2),
+                }
+        if by_path:
+            records.append({"matrix": name, "n": M.n, "nnz": M.nnz,
+                            "bandwidth": int(stats.bandwidth),
+                            "paths": by_path})
+    # the local-vs-mesh steady-state split, regenerated with the tuned
+    # (variant-aware) local engine; mesh rows join from the serving bench
+    # when its JSON is present (that side needs 8 forced devices)
+    from repro.serve import SpmvServingEngine
+    split = []
+    mesh_rows = {}
+    if os.path.exists(BENCH_SERVING_PATH):
+        for r in json.load(open(BENCH_SERVING_PATH)).get("rows", []):
+            if r.get("executor") == "mesh":
+                mesh_rows[r["matrix"]] = r.get("steady_us_per_tick")
+    for name, M in cases[:2]:
+        eng = SpmvServingEngine(autotune=True)
+        eng.register(name, M)
+        xs = [rng.standard_normal(M.m).astype(np.float32)
+              for _ in range(8)]
+
+        def tick():
+            for xv in xs:
+                eng.submit(name, xv)
+            return eng.step()
+
+        tick()                            # warm the jit caches
+        ts = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            tick()
+            ts.append(time.perf_counter() - t0)
+        local_us = round(float(np.median(ts)) * 1e6, 1)
+        split.append({"matrix": name, "plan": eng.plan(name).key(),
+                      "local_steady_us_per_tick": local_us,
+                      "mesh_steady_us_per_tick": mesh_rows.get(name)})
+        row(f"local_gap/{name}/local_engine", local_us,
+            f"plan={eng.plan(name).key()};"
+            f"mesh_us={mesh_rows.get(name)}")
+    os.makedirs(os.path.dirname(BENCH_LOCAL_GAP_PATH), exist_ok=True)
+    with open(BENCH_LOCAL_GAP_PATH, "w") as f:
+        json.dump({"rows": records, "local_vs_mesh": split},
+                  f, indent=1, sort_keys=True)
+    print(f"# local_gap: {len(records)} rows -> {BENCH_LOCAL_GAP_PATH}")
+
+
+# ---------------------------------------------------------------------------
 # Tuned vs default execution plans (the plan/autotune subsystem)
 # ---------------------------------------------------------------------------
 
@@ -619,8 +747,8 @@ def roofline_summary(small: bool):
 
 BENCHES = [fig5_sequential, table2_accumulation, fig6_colorful,
            fig89_scaling, schedule_build, flat_vs_rect,
-           nnzsplit_unstructured, assembly, serving, tuned_vs_default,
-           roofline_summary]
+           nnzsplit_unstructured, assembly, serving, local_gap,
+           tuned_vs_default, roofline_summary]
 
 
 def main() -> None:

@@ -73,6 +73,12 @@ class CandidateSpace:
     # nnz-split enumerator sweeps: small chunks bound the per-chunk row
     # window, large chunks amortize the per-program overhead
     nnzsplit_ks: Tuple[int, ...] = (2, 8)
+    # kernel body variants the Pallas-path enumerators propose: 'stream'
+    # (per-lane gather + segment-sum, bandwidth-bound) and 'onehot' (MXU
+    # one-hot contraction fallback).  Both share one pack artifact —
+    # variant is not an artifact field — so proposing both costs no extra
+    # schedule builds.
+    variants: Tuple[str, ...] = ("stream", "onehot")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -232,12 +238,13 @@ def _windowed_candidates(path, stats, space):
                         # bf16 value streams are proposed only for the
                         # numerically-symmetric (well-conditioned) classes
                         continue
-                    out.append(ExecutionPlan(
-                        path=path, tm=tm, w_cap=space.w_cap,
-                        k_step_sublanes=ks, index_dtype=idt,
-                        value_dtype=vdt,
-                        partition=space.partition,
-                        accumulation=space.accumulation))
+                    for var in space.variants:
+                        out.append(ExecutionPlan(
+                            path=path, tm=tm, w_cap=space.w_cap,
+                            k_step_sublanes=ks, index_dtype=idt,
+                            value_dtype=vdt, variant=var,
+                            partition=space.partition,
+                            accumulation=space.accumulation))
     return out
 
 
@@ -346,6 +353,11 @@ def _kernel_refresh(M, sched) -> dict:
 
 
 def _kernel_make_spmv(M, schedule, plan, *, interpret=True, coloring=None):
+    if plan.variant == "stream":
+        from repro.kernels import csrc_spmv_stream as stream_mod
+        return functools.partial(stream_mod.blockell_spmv_stream,
+                                 schedule.pack, interpret=interpret,
+                                 k_step_sublanes=plan.k_step_sublanes)
     from repro.kernels import csrc_spmv as kernel_mod
     return functools.partial(kernel_mod.blockell_spmv, schedule.pack,
                              interpret=interpret,
@@ -353,6 +365,11 @@ def _kernel_make_spmv(M, schedule, plan, *, interpret=True, coloring=None):
 
 
 def _kernel_make_spmm(M, schedule, plan, *, interpret=True, coloring=None):
+    if plan.variant == "stream":
+        from repro.kernels import csrc_spmv_stream as stream_mod
+        return functools.partial(stream_mod.blockell_spmm_stream,
+                                 schedule.pack, interpret=interpret,
+                                 k_step_sublanes=plan.k_step_sublanes)
     from repro.kernels import csrc_spmm as kernel_mm_mod
     return functools.partial(kernel_mm_mod.blockell_spmm, schedule.pack,
                              interpret=interpret,
@@ -537,12 +554,20 @@ def _flat_refresh(M, sched) -> dict:
 
 
 def _flat_make_spmv(M, schedule, plan, *, interpret=True, coloring=None):
+    if plan.variant == "stream":
+        from repro.kernels import csrc_spmv_stream as stream_mod
+        return functools.partial(stream_mod.flat_spmv_stream,
+                                 schedule.flat_pack, interpret=interpret)
     from repro.kernels import csrc_spmv_flat as flat_mod
     return functools.partial(flat_mod.flat_spmv, schedule.flat_pack,
                              interpret=interpret)
 
 
 def _flat_make_spmm(M, schedule, plan, *, interpret=True, coloring=None):
+    if plan.variant == "stream":
+        from repro.kernels import csrc_spmv_stream as stream_mod
+        return functools.partial(stream_mod.flat_spmm_stream,
+                                 schedule.flat_pack, interpret=interpret)
     from repro.kernels import csrc_spmv_flat as flat_mod
     return functools.partial(flat_mod.flat_spmm, schedule.flat_pack,
                              interpret=interpret)
@@ -685,11 +710,13 @@ def _nnzsplit_candidates(stats, space):
                 if (vdt == "bfloat16"
                         and not stats.numerically_symmetric):
                     continue
-                out.append(ExecutionPlan(
-                    path="nnzsplit", w_cap=space.w_cap,
-                    k_step_sublanes=ks, index_dtype=idt, value_dtype=vdt,
-                    partition=space.partition,
-                    accumulation=space.accumulation))
+                for var in space.variants:
+                    out.append(ExecutionPlan(
+                        path="nnzsplit", w_cap=space.w_cap,
+                        k_step_sublanes=ks, index_dtype=idt,
+                        value_dtype=vdt, variant=var,
+                        partition=space.partition,
+                        accumulation=space.accumulation))
     return out
 
 
@@ -758,12 +785,22 @@ def _nnzsplit_refresh(M, sched) -> dict:
 
 
 def _nnzsplit_make_spmv(M, schedule, plan, *, interpret=True, coloring=None):
+    if plan.variant == "stream":
+        from repro.kernels import csrc_spmv_stream as stream_mod
+        return functools.partial(stream_mod.nnzsplit_spmv_stream,
+                                 schedule.nnzsplit_pack,
+                                 interpret=interpret)
     from repro.kernels import csrc_spmv_nnzsplit as nz_mod
     return functools.partial(nz_mod.nnzsplit_spmv, schedule.nnzsplit_pack,
                              interpret=interpret)
 
 
 def _nnzsplit_make_spmm(M, schedule, plan, *, interpret=True, coloring=None):
+    if plan.variant == "stream":
+        from repro.kernels import csrc_spmv_stream as stream_mod
+        return functools.partial(stream_mod.nnzsplit_spmm_stream,
+                                 schedule.nnzsplit_pack,
+                                 interpret=interpret)
     from repro.kernels import csrc_spmv_nnzsplit as nz_mod
     return functools.partial(nz_mod.nnzsplit_spmm, schedule.nnzsplit_pack,
                              interpret=interpret)

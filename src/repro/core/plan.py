@@ -90,6 +90,14 @@ VALUE_DTYPES = ("float32", "bfloat16")
 # SpmvOperator, 'mesh' = distributed product over mesh_p shards with the
 # plan's accumulation as the collective pattern.
 STRATEGIES = ("local", "mesh")
+# Kernel body variants of the Pallas paths ('kernel'/'flat'/'nnzsplit'):
+# 'onehot' realizes gather/scatter as one-hot MXU contractions — O(W) work
+# per slot, compute-bound but Mosaic-safe on compiled TPU; 'stream' gathers
+# via per-lane indexing + segment-sum over the precomputed lane offsets —
+# O(1) work per slot, the bandwidth-bound shape the paper requires.  Both
+# share the same pack artifacts (variant is not an artifact field); the
+# tuner measures both and picks per matrix.
+VARIANTS = ("onehot", "stream")
 
 LANES = 128                     # TPU lane count; sublane unit for k_step
 
@@ -113,6 +121,7 @@ class ExecutionPlan:
     value_dtype: str = "float32"
     strategy: str = "local"
     mesh_p: int = 1
+    variant: str = "onehot"
 
     def __post_init__(self):
         if self.path not in PATHS:
@@ -151,6 +160,9 @@ class ExecutionPlan:
             raise ValueError(
                 f"local plans run on one device; mesh_p {self.mesh_p} "
                 "requires strategy='mesh'")
+        if self.variant not in VARIANTS:
+            raise ValueError(
+                f"variant {self.variant!r} not in {VARIANTS}")
 
     @property
     def k_step(self) -> int:
@@ -160,17 +172,18 @@ class ExecutionPlan:
         """Stable short identifier (used in cache timing tables and CSV)."""
         rhs = f":r{self.nrhs}" if self.nrhs != 1 else ""
         mesh = f":mesh{self.mesh_p}" if self.strategy == "mesh" else ""
+        st = ":st" if self.variant == "stream" else ""
         if self.path in ("kernel", "flat"):
             i16 = ":i16" if self.index_dtype == "int16" else ""
             bf16 = ":bf16" if self.value_dtype == "bfloat16" else ""
             return (f"{self.path}:tm{self.tm}:ks{self.k_step_sublanes}"
-                    f"{i16}{bf16}"
+                    f"{i16}{bf16}{st}"
                     f":{self.partition}:{self.accumulation}{rhs}{mesh}")
         if self.path == "nnzsplit":
             # no tm: chunking is row-independent; ks sets the chunk size
             i16 = ":i16" if self.index_dtype == "int16" else ""
             bf16 = ":bf16" if self.value_dtype == "bfloat16" else ""
-            return (f"{self.path}:ks{self.k_step_sublanes}{i16}{bf16}"
+            return (f"{self.path}:ks{self.k_step_sublanes}{i16}{bf16}{st}"
                     f":{self.partition}:{self.accumulation}{rhs}{mesh}")
         return (f"{self.path}:{self.partition}:{self.accumulation}"
                 f"{rhs}{mesh}")

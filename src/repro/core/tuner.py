@@ -406,13 +406,26 @@ class PlanCache:
         return ExecutionPlan.from_dict(e["plan"])
 
     def put(self, fp: str, plan: ExecutionPlan,
-            timings_s: Optional[Dict[str, float]] = None):
+            timings_s: Optional[Dict[str, float]] = None,
+            predictions_s: Optional[Dict[str, float]] = None,
+            roofline: Optional[Dict[str, float]] = None):
+        """``predictions_s`` (plan key -> analytic seconds) and
+        ``roofline`` ({'predicted_ms', 'measured_ms', 'roofline_fraction'}
+        of the winner) are the predict-then-measure provenance: the cache
+        records what the cost model claimed next to what the clock said."""
         entry: Dict = {"plan": plan.to_dict(),
                        "measured": bool(timings_s)}
         if timings_s:
             entry["timings_us"] = {k: round(v * 1e6, 3)
                                    for k, v in timings_s.items()}
             entry["best_us"] = round(min(timings_s.values()) * 1e6, 3)
+        if predictions_s:
+            entry["predicted_us"] = {k: round(v * 1e6, 3)
+                                     for k, v in predictions_s.items()}
+        if roofline:
+            entry.update({k: roofline[k] for k in
+                          ("predicted_ms", "measured_ms",
+                           "roofline_fraction") if k in roofline})
         self.entries[fp] = entry
 
     # ---- schedule artifacts (stored next to the plans) ----
@@ -612,6 +625,12 @@ class TuneResult:
     # otherwise); also recorded in the cache under mesh_fingerprint keys
     mesh_plans: Dict[int, ExecutionPlan] = dataclasses.field(
         default_factory=dict)
+    # predict-then-measure provenance: plan.key() -> analytic roofline
+    # seconds for every ranked candidate (superset of timings_s keys when
+    # pruning ran), and the winner's achieved-roofline fraction
+    predictions_s: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    roofline_fraction: Optional[float] = None
 
 
 def tune(M: CSRC,
@@ -624,17 +643,39 @@ def tune(M: CSRC,
          interpret: bool = True,
          save: bool = True,
          value_dtype_tol: float = VALUE_DTYPE_TOL,
+         predict: bool = True,
+         measure_top_k: Optional[int] = None,
+         nrhs_options=(1,),
          mesh_ps=()) -> TuneResult:
-    """Measure every feasible candidate and return the argmin plan.
+    """Rank candidates by the analytic roofline, measure the top few, and
+    return the argmin plan.
 
     ``cache`` short-circuits: a fingerprint hit returns the stored plan
     with zero measurements.  ``measure(op, x) -> seconds`` is injectable
     for tests; the default is the benchmarks/util timing harness with a
     small budget (the tuner runs at operator-construction time).
 
+    ``predict=True`` (default) is the predict-then-measure mode: every
+    feasible candidate is priced by roofline/cost_model.py (bytes/flops
+    from matrix statistics — no packing, no timing) and only the
+    ``measure_top_k`` cheapest-predicted plans are clocked (default
+    max(3, quarter of the pool) — a >= 2x measurement cut on every suite
+    matrix), plus each distinct path's best-predicted candidate so a
+    cross-path mispricing can never exclude a path from measurement.  The cache entry records ``predicted_us`` per ranked
+    candidate plus the winner's ``predicted_ms`` / ``measured_ms`` /
+    ``roofline_fraction`` (fraction of the analytic roofline the
+    measured time achieved).  ``predict=False`` measures the full pool
+    (the oracle mode the pruned tuner is validated against in tests).
+
     Candidates with a reduced ``value_dtype`` must additionally match the
     exact segment-sum product within ``value_dtype_tol`` relative error or
     they are rejected before measurement (the bf16 accuracy gate).
+
+    ``nrhs_options`` is the serving-time batched operating point: every
+    candidate is replicated per RHS block width and measured at that
+    width (argmin on per-column time), so a serving deployment that
+    coalesces requests into multi-RHS blocks tunes the block product it
+    will actually run — the winner's ``plan.nrhs`` records the width.
 
     ``mesh_ps`` is the mesh-aware mode: for every shard count listed the
     distributed candidates are measured on an actual ``p``-device mesh
@@ -653,7 +694,8 @@ def tune(M: CSRC,
                               cached=True)
 
     stats = stats_of(M)
-    cands = candidates if candidates is not None else enumerate_plans(stats)
+    cands = (candidates if candidates is not None
+             else enumerate_plans(stats, nrhs_options=tuple(nrhs_options)))
     if measure is None:
         def measure(op, xv):
             return _time_fn(op, xv, warmup=warmup, repeats=repeats)
@@ -681,13 +723,35 @@ def tune(M: CSRC,
         hit = None
 
     timings: Dict[str, float] = {}
+    predictions: Dict[str, float] = {}
+    winner_frac: Optional[float] = None
     if hit is not None:
         best_plan, cached_local = hit, True
     else:
-        best_plan, best_t, best_op = None, float("inf"), None
-        for p in cands:
-            if not feasible(p, n=M.n, m=M.m, bandwidth=stats.bandwidth):
-                continue
+        pool = [p for p in cands
+                if feasible(p, n=M.n, m=M.m, bandwidth=stats.bandwidth)]
+        est_by_key: Dict[str, object] = {}
+        if predict and pool:
+            from repro.roofline import cost_model
+            ranked = cost_model.rank_plans(stats, pool)
+            est_by_key = {p.key(): e for p, e in ranked}
+            predictions = {p.key(): e.predicted_s for p, e in ranked}
+            k_top = (measure_top_k if measure_top_k
+                     else max(3, len(ranked) // 4))
+            pool = [p for p, _ in ranked[:max(2, k_top)]]
+            # path-diversity guarantee: the analytic model ranks *within*
+            # a path reliably but can misprice one path against another
+            # (padding on skewed row distributions is the known case), so
+            # every distinct path keeps its best-predicted candidate in
+            # the measured set — at most one extra measurement per path,
+            # which preserves the >= 2x cut on pools of 10+ plans
+            seen_paths = {p.path for p in pool}
+            for p, _ in ranked:
+                if p.path not in seen_paths:
+                    seen_paths.add(p.path)
+                    pool.append(p)
+        best_plan, best_t, best_raw, best_op = None, float("inf"), None, None
+        for p in pool:
             try:
                 op = SpmvOperator.from_plan(M, p, interpret=interpret)
             except ValueError:
@@ -701,12 +765,22 @@ def tune(M: CSRC,
             # comparable across block widths
             t_norm = t / p.nrhs
             if t_norm < best_t:
-                best_plan, best_t, best_op = p, t_norm, op
+                best_plan, best_t, best_raw, best_op = p, t_norm, t, op
         if best_plan is None:
             raise ValueError("no feasible execution plan for this matrix")
 
+        roofline_entry: Optional[Dict[str, float]] = None
+        est = est_by_key.get(best_plan.key())
+        if est is not None and best_raw:
+            winner_frac = est.predicted_s / best_raw
+            roofline_entry = {
+                "predicted_ms": round(est.predicted_s * 1e3, 6),
+                "measured_ms": round(best_raw * 1e3, 6),
+                "roofline_fraction": winner_frac,
+            }
         if cache is not None:
-            cache.put(fp, best_plan, timings)
+            cache.put(fp, best_plan, timings, predictions_s=predictions,
+                      roofline=roofline_entry)
             # store the winner's schedule next to the plan: serving
             # processes constructing this (matrix, plan) never re-pack or
             # re-color
@@ -720,10 +794,13 @@ def tune(M: CSRC,
     for p_mesh in mesh_ps:
         res = tune_mesh(M, p_mesh, cache=cache, x=x, measure=measure,
                         warmup=warmup, repeats=repeats,
-                        interpret=interpret, save=save)
+                        interpret=interpret, save=save,
+                        nrhs_options=nrhs_options)
         mesh_plans[p_mesh] = res.plan
     return TuneResult(plan=best_plan, fingerprint=fp, timings_s=timings,
-                      cached=cached_local, mesh_plans=mesh_plans)
+                      cached=cached_local, mesh_plans=mesh_plans,
+                      predictions_s=predictions,
+                      roofline_fraction=winner_frac)
 
 
 def tune_mesh(M: CSRC, p: int,
@@ -736,9 +813,15 @@ def tune_mesh(M: CSRC, p: int,
               warmup: int = 1,
               repeats: int = 3,
               interpret: bool = True,
-              save: bool = True) -> TuneResult:
+              save: bool = True,
+              nrhs_options=(1,)) -> TuneResult:
     """The mesh-aware tuning mode: measure distributed candidates on an
     actual p-device mesh and cache the per-(matrix, p) winner.
+
+    ``nrhs_options`` replicates the distributed candidates per RHS block
+    width exactly as in :func:`tune` — the serving engine passes its
+    batched operating point so the per-(matrix, p) winner is tuned for
+    the block product it serves, not for nrhs=1.
 
     The winner is recorded under ``mesh_fingerprint(fingerprint(M), p)``,
     so local and distributed decisions for one matrix class coexist in
@@ -769,7 +852,8 @@ def tune_mesh(M: CSRC, p: int,
 
     stats = stats_of(M)
     cands = (candidates if candidates is not None
-             else enumerate_mesh_plans(stats, p))
+             else enumerate_mesh_plans(stats, p,
+                                       nrhs_options=tuple(nrhs_options)))
     if not cands:
         raise ValueError(
             f"no feasible distributed plan for this matrix at p={p}")

@@ -67,9 +67,53 @@ def _kernel(vals_l_ref, vals_u_ref, col_ref, row_ref, ad_ref, x_ref,
         out_ref[0] = out_ref[0] + win
 
 
+def _kernel_stream(vals_l_ref, vals_u_ref, col_ref, row_ref, ad_ref, x_ref,
+                   out_ref, *, tm: int, w_pad: int, nrhs: int,
+                   num_symmetric: bool):
+    """Streaming variant (see csrc_spmv._kernel_stream): per-lane row
+    gather of the (W, B) window + segment-sum scatter — no (S, W) one-hot
+    operands, O(B) work per slot."""
+    b = pl.program_id(0)
+    kt = pl.program_id(1)
+    start = (b + 1) * tm
+    xw = jax.lax.dynamic_slice(x_ref[...], (start, 0), (w_pad, nrhs))
+
+    cols = col_ref[0].astype(jnp.int32).reshape(-1)   # (S,), sentinel == W
+    rows = row_ref[0].astype(jnp.int32).reshape(-1)
+    vl = vals_l_ref[0].reshape(-1)
+    vu = vl if num_symmetric else vals_u_ref[0].reshape(-1)
+
+    xg = jnp.take(xw, jnp.minimum(cols, w_pad - 1), axis=0)   # (S, B)
+    xi = jnp.take(xw, rows, axis=0)
+
+    c_rows = vl[:, None] * xg      # al[p]·x[ja[p],:] -> rows
+    c_cols = vu[:, None] * xi      # au[p]·x[i,:]     -> cols
+
+    win = jax.ops.segment_sum(c_rows.astype(jnp.float32), rows,
+                              num_segments=w_pad)
+    win = win + jax.ops.segment_sum(c_cols.astype(jnp.float32), cols,
+                                    num_segments=w_pad)
+
+    @pl.when(kt == 0)
+    def _init():
+        diag = ad_ref[0][:, None] * jax.lax.dynamic_slice(
+            xw, (w_pad - tm, 0), (tm, nrhs))
+        base = jnp.zeros((w_pad, nrhs), jnp.float32)
+        base = jax.lax.dynamic_update_slice(base, diag, (w_pad - tm, 0))
+        out_ref[0] = base + win
+
+    @pl.when(kt != 0)
+    def _acc():
+        out_ref[0] = out_ref[0] + win
+
+
+_BODIES = {"onehot": _kernel, "stream": _kernel_stream}
+
+
 def blockell_spmm(pack: BlockEll, X: jnp.ndarray,
                   k_step_sublanes: int = 8,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: bool = True,
+                  variant: str = "onehot") -> jnp.ndarray:
     """Y = A @ X for X (n, B); returns (n, B)."""
     n, nrhs = X.shape
     assert n == pack.n
@@ -85,7 +129,7 @@ def blockell_spmm(pack: BlockEll, X: jnp.ndarray,
 
     slot_spec = pl.BlockSpec((1, ks, 128), lambda b, kt: (b, kt, 0))
     wins = pl.pallas_call(
-        functools.partial(_kernel, tm=pack.tm, w_pad=pack.w_pad,
+        functools.partial(_BODIES[variant], tm=pack.tm, w_pad=pack.w_pad,
                           nrhs=nrhs, num_symmetric=pack.num_symmetric),
         grid=(nt, nk),
         in_specs=[

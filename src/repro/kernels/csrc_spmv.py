@@ -94,9 +94,60 @@ def _kernel(vals_l_ref, vals_u_ref, col_ref, row_ref, ad_ref, x_ref,
         out_ref[0] = out_ref[0] + win
 
 
+def _kernel_stream(vals_l_ref, vals_u_ref, col_ref, row_ref, ad_ref, x_ref,
+                   out_ref, *, tm: int, w_pad: int, num_symmetric: bool):
+    """Streaming variant: per-lane gather + segment-sum scatter.
+
+    Avoids the (KS, 128, W) one-hot tensors entirely — O(1) work per slot
+    instead of O(W), so streamed bytes/slot sit at the format's 12-16 B
+    floor and the kernel is bandwidth-bound (the regime the paper requires
+    for CSRC SpMV).  The padding sentinel (col == W) is clamped into range
+    for the gather — inert because padded slot values are zero — and
+    dropped by the segment-sum scatter (id out of range).  Selected by
+    ``ExecutionPlan.variant == 'stream'``; the one-hot body stays the
+    Mosaic-safe fallback for compiled TPU, which has no native scatter.
+    """
+    b = pl.program_id(0)
+    kt = pl.program_id(1)
+    start = (b + 1) * tm
+    xw = jax.lax.dynamic_slice(x_ref[...], (start,), (w_pad,))  # (W,)
+
+    cols = col_ref[0].astype(jnp.int32).reshape(-1)   # (S,), sentinel == W
+    rows = row_ref[0].astype(jnp.int32).reshape(-1)   # (S,) in [W-tm, W)
+    vl = vals_l_ref[0].reshape(-1)
+    vu = vl if num_symmetric else vals_u_ref[0].reshape(-1)
+
+    xg = jnp.take(xw, jnp.minimum(cols, w_pad - 1))   # x[ja[p]]
+    xi = jnp.take(xw, rows)                           # x[i]
+
+    contrib_to_rows = vl * xg      # al[p]*x[ja[p]]  -> y[i]
+    contrib_to_cols = vu * xi      # au[p]*x[i]      -> y[ja[p]]
+
+    win = jax.ops.segment_sum(contrib_to_rows.astype(jnp.float32), rows,
+                              num_segments=w_pad)
+    win = win + jax.ops.segment_sum(contrib_to_cols.astype(jnp.float32),
+                                    cols, num_segments=w_pad)
+
+    @pl.when(kt == 0)
+    def _init():
+        diag = ad_ref[0] * jax.lax.dynamic_slice(xw, (w_pad - tm,), (tm,))
+        base = jnp.zeros((w_pad,), jnp.float32)
+        base = jax.lax.dynamic_update_slice(
+            base, diag, (w_pad - tm,))
+        out_ref[0] = base + win
+
+    @pl.when(kt != 0)
+    def _acc():
+        out_ref[0] = out_ref[0] + win
+
+
+_BODIES = {"onehot": _kernel, "stream": _kernel_stream}
+
+
 def blockell_spmv_windows(pack: BlockEll, x: jnp.ndarray,
                           k_step_sublanes: int = 8,
-                          interpret: bool = True) -> jnp.ndarray:
+                          interpret: bool = True,
+                          variant: str = "onehot") -> jnp.ndarray:
     """Run the kernel; returns per-tile windows (NT, W) before accumulation."""
     nt, s = pack.vals_l.shape
     assert s % (k_step_sublanes * 128) == 0, (
@@ -111,7 +162,7 @@ def blockell_spmv_windows(pack: BlockEll, x: jnp.ndarray,
     grid = (nt, nk)
     slot_spec = pl.BlockSpec((1, ks, 128), lambda b, kt: (b, kt, 0))
     out = pl.pallas_call(
-        functools.partial(_kernel, tm=pack.tm, w_pad=pack.w_pad,
+        functools.partial(_BODIES[variant], tm=pack.tm, w_pad=pack.w_pad,
                           num_symmetric=pack.num_symmetric),
         grid=grid,
         in_specs=[
@@ -133,8 +184,9 @@ def blockell_spmv_windows(pack: BlockEll, x: jnp.ndarray,
 
 def blockell_spmv(pack: BlockEll, x: jnp.ndarray,
                   interpret: bool = True,
-                  k_step_sublanes: int = 8) -> jnp.ndarray:
+                  k_step_sublanes: int = 8,
+                  variant: str = "onehot") -> jnp.ndarray:
     """Full product: kernel windows + effective accumulation."""
     wins = blockell_spmv_windows(pack, x, k_step_sublanes=k_step_sublanes,
-                                 interpret=interpret)
+                                 interpret=interpret, variant=variant)
     return overlap_add(pack, wins)

@@ -229,8 +229,48 @@ def _kernel(tile_ref, first_ref, vals_l_ref, vals_u_ref, col_ref, row_ref,
         out_ref[0] = out_ref[0] + win
 
 
+def _kernel_stream(tile_ref, first_ref, vals_l_ref, vals_u_ref, col_ref,
+                   row_ref, ad_ref, x_ref, out_ref, *, tm: int, w_pad: int,
+                   num_symmetric: bool):
+    """Streaming variant (see csrc_spmv._kernel_stream): per-lane gather +
+    segment-sum scatter instead of the (S, W) one-hot contractions."""
+    j = pl.program_id(0)
+    b = tile_ref[j]
+    start = (b + 1) * tm
+    xw = jax.lax.dynamic_slice(x_ref[...], (start,), (w_pad,))
+
+    cols = col_ref[0].astype(jnp.int32).reshape(-1)   # (S,), sentinel == W
+    rows = row_ref[0].astype(jnp.int32).reshape(-1)
+    vl = vals_l_ref[0].reshape(-1)
+    vu = vl if num_symmetric else vals_u_ref[0].reshape(-1)
+
+    xg = jnp.take(xw, jnp.minimum(cols, w_pad - 1))
+    xi = jnp.take(xw, rows)
+    c_rows = vl * xg
+    c_cols = vu * xi
+    win = jax.ops.segment_sum(c_rows.astype(jnp.float32), rows,
+                              num_segments=w_pad)
+    win = win + jax.ops.segment_sum(c_cols.astype(jnp.float32), cols,
+                                    num_segments=w_pad)
+
+    @pl.when(first_ref[j] == 1)
+    def _init():
+        diag = ad_ref[0] * jax.lax.dynamic_slice(xw, (w_pad - tm,), (tm,))
+        base = jnp.zeros((w_pad,), jnp.float32)
+        base = jax.lax.dynamic_update_slice(base, diag, (w_pad - tm,))
+        out_ref[0] = base + win
+
+    @pl.when(first_ref[j] != 1)
+    def _acc():
+        out_ref[0] = out_ref[0] + win
+
+
+_BODIES = {"onehot": _kernel, "stream": _kernel_stream}
+
+
 def flat_spmv(pack: FlatBlockEll, x: jnp.ndarray,
-              interpret: bool = True) -> jnp.ndarray:
+              interpret: bool = True,
+              variant: str = "onehot") -> jnp.ndarray:
     x_full = jnp.pad(x.astype(jnp.float32),
                      (pack.w_pad, pack.n_pad - pack.n))
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -248,7 +288,7 @@ def flat_spmv(pack: FlatBlockEll, x: jnp.ndarray,
                                lambda j, tile, first: (tile[j], 0)),
     )
     wins = pl.pallas_call(
-        functools.partial(_kernel, tm=pack.tm, w_pad=pack.w_pad,
+        functools.partial(_BODIES[variant], tm=pack.tm, w_pad=pack.w_pad,
                           num_symmetric=pack.num_symmetric),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((pack.nt, pack.w_pad), jnp.float32),
@@ -302,8 +342,49 @@ def _kernel_mm(tile_ref, first_ref, vals_l_ref, vals_u_ref, col_ref,
         out_ref[0] = out_ref[0] + win
 
 
+def _kernel_mm_stream(tile_ref, first_ref, vals_l_ref, vals_u_ref, col_ref,
+                      row_ref, ad_ref, x_ref, out_ref, *, tm: int,
+                      w_pad: int, nrhs: int, num_symmetric: bool):
+    """Streaming multi-RHS variant: per-lane row gather of the (W, B)
+    window + segment-sum scatter — O(B) work per slot."""
+    j = pl.program_id(0)
+    b = tile_ref[j]
+    start = (b + 1) * tm
+    xw = jax.lax.dynamic_slice(x_ref[...], (start, 0), (w_pad, nrhs))
+
+    cols = col_ref[0].astype(jnp.int32).reshape(-1)
+    rows = row_ref[0].astype(jnp.int32).reshape(-1)
+    vl = vals_l_ref[0].reshape(-1)
+    vu = vl if num_symmetric else vals_u_ref[0].reshape(-1)
+
+    xg = jnp.take(xw, jnp.minimum(cols, w_pad - 1), axis=0)   # (S, B)
+    xi = jnp.take(xw, rows, axis=0)
+    c_rows = vl[:, None] * xg
+    c_cols = vu[:, None] * xi
+    win = jax.ops.segment_sum(c_rows.astype(jnp.float32), rows,
+                              num_segments=w_pad)
+    win = win + jax.ops.segment_sum(c_cols.astype(jnp.float32), cols,
+                                    num_segments=w_pad)
+
+    @pl.when(first_ref[j] == 1)
+    def _init():
+        diag = ad_ref[0][:, None] * jax.lax.dynamic_slice(
+            xw, (w_pad - tm, 0), (tm, nrhs))
+        base = jnp.zeros((w_pad, nrhs), jnp.float32)
+        base = jax.lax.dynamic_update_slice(base, diag, (w_pad - tm, 0))
+        out_ref[0] = base + win
+
+    @pl.when(first_ref[j] != 1)
+    def _acc():
+        out_ref[0] = out_ref[0] + win
+
+
+_BODIES_MM = {"onehot": _kernel_mm, "stream": _kernel_mm_stream}
+
+
 def flat_spmm(pack: FlatBlockEll, X: jnp.ndarray,
-              interpret: bool = True) -> jnp.ndarray:
+              interpret: bool = True,
+              variant: str = "onehot") -> jnp.ndarray:
     """Y = A @ X for X (n, B) — the multi-RHS flat-grid product (batched
     serving / block-Krylov shape) with the same per-tile-exact step layout
     as flat_spmv."""
@@ -326,7 +407,7 @@ def flat_spmm(pack: FlatBlockEll, X: jnp.ndarray,
                                lambda j, tile, first: (tile[j], 0, 0)),
     )
     wins = pl.pallas_call(
-        functools.partial(_kernel_mm, tm=pack.tm, w_pad=pack.w_pad,
+        functools.partial(_BODIES_MM[variant], tm=pack.tm, w_pad=pack.w_pad,
                           nrhs=nrhs, num_symmetric=pack.num_symmetric),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((pack.nt, pack.w_pad, nrhs),
@@ -670,7 +751,8 @@ def flat_shard_specs(axis: str):
             P(axis, None, None))
 
 
-def flat_local_fn(fs, n_local: int, interpret: bool):
+def flat_local_fn(fs, n_local: int, interpret: bool,
+                  variant: str = "onehot"):
     """Shard-local flat-grid product: rebuild the shard's FlatBlockEll from
     the shard_map-sliced stacked arrays and run the Pallas kernel (SpMV or
     SpMM by x rank).  ``fs`` is a FlatShards or FlatHalo layout."""
@@ -683,8 +765,8 @@ def flat_local_fn(fs, n_local: int, interpret: bool):
             first_of_tile=first[0],
             num_symmetric=fs.num_symmetric, pad_ratio=1.0)
         if x.ndim == 2:
-            return flat_spmm(pk, x, interpret=interpret)
-        return flat_spmv(pk, x, interpret=interpret)
+            return flat_spmm(pk, x, interpret=interpret, variant=variant)
+        return flat_spmv(pk, x, interpret=interpret, variant=variant)
 
     return local_y
 

@@ -199,12 +199,26 @@ def _kernel(vals_ref, lrow_ref, xg_ref, out_ref, *, r_pad: int):
                                      preferred_element_type=jnp.float32)[:, 0]
 
 
+def _kernel_stream(vals_ref, lrow_ref, xg_ref, out_ref, *, r_pad: int):
+    """Streaming variant: segment-sum over the chunk-local rows instead of
+    the (S, r_pad) one-hot contraction — O(1) work per stream entry.
+    Padding entries carry val=0 and an in-range lrow, so they add exact
+    zeros (same invariant the one-hot body relies on)."""
+    lr = lrow_ref[0].astype(jnp.int32).reshape(-1)     # (S,)
+    c = vals_ref[0].reshape(-1).astype(jnp.float32) * xg_ref[0].reshape(-1)
+    out_ref[0] = jax.ops.segment_sum(c, lr, num_segments=r_pad)
+
+
+_BODIES = {"onehot": _kernel, "stream": _kernel_stream}
+
+
 def nnzsplit_spmv(pack: NnzSplitPack, x: jnp.ndarray,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: bool = True,
+                  variant: str = "onehot") -> jnp.ndarray:
     x = x.astype(jnp.float32)
     xg = x[pack.src.astype(jnp.int32)].reshape(pack.num_chunks, pack.ks, 128)
     partial = pl.pallas_call(
-        functools.partial(_kernel, r_pad=pack.r_pad),
+        functools.partial(_BODIES[variant], r_pad=pack.r_pad),
         grid=(pack.num_chunks,),
         in_specs=[
             pl.BlockSpec((1, pack.ks, 128), lambda j: (j, 0, 0)),
@@ -233,8 +247,21 @@ def _kernel_mm(vals_ref, lrow_ref, xg_ref, out_ref, *, r_pad: int,
                                      preferred_element_type=jnp.float32)
 
 
+def _kernel_mm_stream(vals_ref, lrow_ref, xg_ref, out_ref, *, r_pad: int,
+                      nrhs: int):
+    """Streaming multi-RHS variant: B-wide segment-sum scatter."""
+    lr = lrow_ref[0].astype(jnp.int32).reshape(-1)
+    s = lr.shape[0]
+    c = vals_ref[0].reshape(s, 1).astype(jnp.float32) * xg_ref[0]  # (S, B)
+    out_ref[0] = jax.ops.segment_sum(c, lr, num_segments=r_pad)
+
+
+_BODIES_MM = {"onehot": _kernel_mm, "stream": _kernel_mm_stream}
+
+
 def nnzsplit_spmm(pack: NnzSplitPack, X: jnp.ndarray,
-                  interpret: bool = True) -> jnp.ndarray:
+                  interpret: bool = True,
+                  variant: str = "onehot") -> jnp.ndarray:
     """Y = A @ X for X (n, B): same chunk layout, B-wide partials."""
     n, nrhs = X.shape
     assert n == pack.n
@@ -242,7 +269,7 @@ def nnzsplit_spmm(pack: NnzSplitPack, X: jnp.ndarray,
     s = pack.s
     xg = X[pack.src.astype(jnp.int32), :].reshape(pack.num_chunks, s, nrhs)
     partial = pl.pallas_call(
-        functools.partial(_kernel_mm, r_pad=pack.r_pad, nrhs=nrhs),
+        functools.partial(_BODIES_MM[variant], r_pad=pack.r_pad, nrhs=nrhs),
         grid=(pack.num_chunks,),
         in_specs=[
             pl.BlockSpec((1, pack.ks, 128), lambda j: (j, 0, 0)),
@@ -497,7 +524,8 @@ def nnzsplit_shard_specs(axis: str):
             P(axis, None), P(axis, None), P(axis, None), P(axis, None))
 
 
-def nnzsplit_local_fn(lay, n_local: int, interpret: bool):
+def nnzsplit_local_fn(lay, n_local: int, interpret: bool,
+                      variant: str = "onehot"):
     """Shard-local product: rebuild the shard's pack from the shard_map
     slices (leading axis 1) and dispatch SpMV/SpMM on x's rank."""
     def fn(vals, lrow, src, chunk_row0, fixup_idx, ad, x):
@@ -507,8 +535,8 @@ def nnzsplit_local_fn(lay, n_local: int, interpret: bool):
             chunk_row0=chunk_row0[0], fixup_idx=fixup_idx[0], ad=ad[0],
             num_symmetric=lay.num_symmetric, pad_ratio=1.0)
         if x.ndim == 2:
-            return nnzsplit_spmm(pk, x, interpret=interpret)
-        return nnzsplit_spmv(pk, x, interpret=interpret)
+            return nnzsplit_spmm(pk, x, interpret=interpret, variant=variant)
+        return nnzsplit_spmv(pk, x, interpret=interpret, variant=variant)
     return fn
 
 

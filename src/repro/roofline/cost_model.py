@@ -1,0 +1,154 @@
+"""Analytic per-candidate roofline costs for ExecutionPlans.
+
+The tuner's predict-then-measure mode (core/tuner.py) needs a ranking of
+candidate plans *before* any of them is packed or timed.  This module
+prices a candidate from matrix statistics alone — the same geometry
+formulas the packers use (window width, tile count, slot padding), but
+evaluated on MatrixStats instead of a built pack:
+
+  bytes   the streamed working set per product: value streams (halved for
+          numerically-symmetric matrices and again for bfloat16), index
+          streams (halved for int16), x/y traffic, and the per-tile window
+          writes + overlap-add re-reads;
+  flops   O(1)-per-slot multiply-adds for the streaming/segment variants;
+          the one-hot variants additionally pay the (S, W) mask build
+          (iota + compare + convert, one op per mask element — the same
+          ops roofline/hlo_cost.py now counts) and the dot_general
+          contractions, 2·S·W·nrhs flops each — which is exactly why
+          one-hot is compute-bound and stream is not;
+  predicted_s = max(bytes / HBM_BW, flops / PEAK_FLOPS_BF16), the chip
+          roofline of repro.launch.mesh (the same constants
+          roofline/analysis.py prices whole serving configs with).
+
+Absolute times are TPU-scale and the tests run in interpret mode on CPU,
+so predictions are used for *ranking* (measure only the top-K) and for
+the achieved-roofline observability ratio, never as a substitute for
+measurement.  ``roofline_fraction = predicted_s / measured_s`` — the
+fraction of the analytic roofline a measured plan actually achieved
+(1.0 = at the roofline; interpret-mode CPU numbers are far below).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.plan import ExecutionPlan, kernel_window, LANES
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+_VALUE_BYTES = {"float32": 4, "bfloat16": 2}
+_INDEX_BYTES = {"int32": 4, "int16": 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class CostEstimate:
+    """Roofline price of one candidate plan on one matrix class."""
+    bytes: float                  # streamed bytes per product
+    flops: float                  # arithmetic ops per product
+    memory_s: float               # bytes / HBM_BW
+    compute_s: float              # flops / PEAK_FLOPS_BF16
+    predicted_s: float            # max(memory_s, compute_s)
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.compute_s > self.memory_s else "memory"
+
+    def to_dict(self) -> Dict:
+        return {"bytes": self.bytes, "flops": self.flops,
+                "predicted_ms": self.predicted_s * 1e3, "bound": self.bound}
+
+
+def _windowed_geometry(stats, plan: ExecutionPlan) -> Tuple[int, int, int]:
+    """(nt, w_pad, padded slot count) of a 'kernel'/'flat' pack, estimated
+    from stats — mirrors blockell.pack / pack_flat without building them."""
+    tm = plan.tm
+    nt = max(1, -(-stats.n // tm))
+    w_pad = kernel_window(tm, stats.bandwidth)
+    k_step = plan.k_step_sublanes * LANES
+    if plan.path == "flat":
+        # per-tile-exact packing: ceil(k / k_step) full steps plus at most
+        # one remainder step per tile (rows never share a step across
+        # tiles), so padding stays O(nt·k_step) regardless of skew
+        steps = -(-max(stats.k, 1) // k_step) + nt
+        return nt, w_pad, steps * k_step
+    # rectangular grid: every tile is padded to the fullest tile's slot
+    # count, so skew inflates the pack — model it with the nnz-per-row
+    # dispersion (a tile of tm rows concentrates ~tm·dev of excess)
+    mean_tile = max(stats.k, 1) / nt
+    imbalance = 1.0 + stats.nnz_row_dev / max(stats.nnz_row_mean, 1.0)
+    s_tile = _round_up(max(int(mean_tile * imbalance), 1), k_step)
+    return nt, w_pad, nt * s_tile
+
+
+def _nnzsplit_geometry(stats, plan: ExecutionPlan) -> Tuple[int, int, int]:
+    """(num_chunks, r_pad, padded entry count): the dest-sorted stream has
+    one entry per triangle half (2k total), cut into S = ks·128 chunks."""
+    s = plan.k_step_sublanes * LANES
+    entries = max(2 * stats.k, 1)
+    num_chunks = -(-entries // s)
+    # a chunk of S entries spans ~S / (nnz per row) rows
+    span = s / max(stats.nnz_row_mean, 1.0)
+    r_pad = _round_up(max(int(span), 1), 128)
+    return num_chunks, r_pad, num_chunks * s
+
+
+def plan_cost(stats, plan: ExecutionPlan) -> CostEstimate:
+    """Roofline price of one candidate.  Any registered path prices at
+    least as the generic streaming product (the segment formula), so a
+    future path joins predict-then-measure without editing this module."""
+    nrhs = max(plan.nrhs, 1)
+    vb = _VALUE_BYTES.get(plan.value_dtype, 4)
+    ib = _INDEX_BYTES.get(plan.index_dtype, 4)
+    n, k = stats.n, max(stats.k, 1)
+    vstreams = 1 if stats.numerically_symmetric else 2
+    xy = 2.0 * 4 * max(n, stats.m) * nrhs      # x read + y write
+    diag = 4.0 * n
+
+    if plan.path in ("kernel", "flat"):
+        nt, w_pad, slots = _windowed_geometry(stats, plan)
+        byts = (slots * (vb * vstreams + ib * 2)   # vals + col/row streams
+                + diag + xy
+                + 2.0 * nt * w_pad * 4 * nrhs)     # windows + overlap-add
+        flops = 4.0 * slots * nrhs + 2.0 * n * nrhs
+        if plan.variant == "onehot":
+            # two (S, W) masks: iota + compare + convert per element, then
+            # four dot_generals at 2·S·W·nrhs each
+            flops += slots * w_pad * (6.0 + 8.0 * nrhs)
+    elif plan.path == "nnzsplit":
+        nc, r_pad, slots = _nnzsplit_geometry(stats, plan)
+        byts = (slots * (vb + 4 + ib)     # vals + src gather idx + lrow
+                + diag + xy
+                + 2.0 * nc * r_pad * 4 * nrhs)     # partials + fixup
+        flops = 2.0 * slots * nrhs + 2.0 * n * nrhs
+        if plan.variant == "onehot":
+            flops += slots * r_pad * (3.0 + 2.0 * nrhs)
+    else:
+        # segment / colorful / future paths: the unpadded streaming product
+        byts = k * (4 * vstreams + 4 * 2) + diag + xy
+        flops = 4.0 * k * nrhs + 2.0 * n * nrhs
+
+    mem_s = byts / HBM_BW
+    cmp_s = flops / PEAK_FLOPS_BF16
+    return CostEstimate(bytes=float(byts), flops=float(flops),
+                        memory_s=mem_s, compute_s=cmp_s,
+                        predicted_s=max(mem_s, cmp_s))
+
+
+def rank_plans(stats, plans: Sequence[ExecutionPlan]
+               ) -> List[Tuple[ExecutionPlan, CostEstimate]]:
+    """Candidates cheapest-first by predicted per-RHS-column time (the
+    tuner's argmin metric — an nrhs=8 plan prices 8 columns of work)."""
+    priced = [(p, plan_cost(stats, p)) for p in plans]
+    priced.sort(key=lambda pc: pc[1].predicted_s / max(pc[0].nrhs, 1))
+    return priced
+
+
+def roofline_fraction(est: CostEstimate, measured_s: float) -> float:
+    """Fraction of the analytic roofline the measured time achieved."""
+    if measured_s <= 0:
+        return 0.0
+    return est.predicted_s / measured_s

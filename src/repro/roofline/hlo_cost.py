@@ -13,7 +13,10 @@ walking the HLO computation tree:
         + Σ_while trips × (cost(body) + cost(cond))
         + Σ_call cost(callee);
   * FLOPs: dot ops (2·prod(out)·prod(contracting)) — matmuls dominate all
-    our models; fusion computations are traversed for dots;
+    our models; fusion computations are traversed for dots; iota/compare/
+    convert count one op per output element (the one-hot SpMV kernels
+    synthesize (S, W) masks from exactly these three ops, so eliding them
+    misclassifies that path as bandwidth-bound);
   * bytes: instruction boundary traffic (out + operands) at non-fused
     level — the same semantics as XLA's "bytes accessed";
   * collective bytes: output bytes of all-reduce / all-gather /
@@ -209,6 +212,12 @@ def _comp_cost(comp: Computation, comps: Dict[str, Computation],
             c.flops += _dot_flops(ins, comp.shapes)
         elif ins.op in ("convolution",):
             c.flops += 2.0 * _shape_elems_bytes(ins.shape_str)[0]
+        elif ins.op in ("iota", "compare", "convert"):
+            # one op per output element: the one-hot SpMV kernels build
+            # (S, W) masks from broadcasted_iota + compare + convert, which
+            # dominates their op count — leaving these at zero made the
+            # one-hot path look bandwidth-bound when it is compute-bound
+            c.flops += float(_shape_elems_bytes(ins.shape_str)[0])
         if not in_fusion and ins.op not in ("parameter", "constant",
                                             "get-tuple-element", "tuple",
                                             "bitcast"):

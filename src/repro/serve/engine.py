@@ -185,13 +185,20 @@ class SpmvServingEngine:
 
     def __init__(self, cache=None, autotune: bool = False,
                  interpret: bool = True, max_batch: int = 64,
-                 mesh_p: Optional[int] = None):
+                 mesh_p: Optional[int] = None,
+                 serve_nrhs: Optional[int] = None):
         from repro.core.tuner import PlanCache
         self.cache = cache if cache is not None else PlanCache()
         self.autotune = autotune
         self.interpret = interpret
         self.max_batch = max_batch
         self.mesh_p = mesh_p
+        # the batched operating point registration tunes at: coalesced
+        # groups run as (n, B) SpMM blocks, so the plan must be measured
+        # at a representative B, not at nrhs=1 (capped at 8: per-column
+        # time flattens once the RHS block amortizes the value streams)
+        self.serve_nrhs = (serve_nrhs if serve_nrhs is not None
+                           else min(max_batch, 8))
         self._matrices: Dict[str, object] = {}
         self._ops: Dict[str, object] = {}
         self.queue: List[SpmvRequest] = []
@@ -214,7 +221,8 @@ class SpmvServingEngine:
         if plan is None:
             plan = placement.resolve_plan(
                 M, cache=self.cache, autotune=self.autotune,
-                interpret=self.interpret, mesh_p=self.mesh_p)
+                interpret=self.interpret, mesh_p=self.mesh_p,
+                nrhs=self.serve_nrhs)
         self._matrices[matrix_id] = M
         self._ops[matrix_id] = placement.build_executor(
             M, plan, cache=self.cache, interpret=self.interpret)

@@ -41,17 +41,28 @@ def mesh_available(p: Optional[int]) -> bool:
 
 def resolve_plan(M: CSRC, cache=None, autotune: bool = False,
                  interpret: bool = True,
-                 mesh_p: Optional[int] = None) -> ExecutionPlan:
+                 mesh_p: Optional[int] = None,
+                 nrhs: int = 1) -> ExecutionPlan:
     """The plan to serve this matrix with, honoring a mesh request when
     the process can satisfy it and falling back to local otherwise.
     Rectangular matrices always resolve locally — the distributed
-    strategies shard square rows only."""
+    strategies shard square rows only.
+
+    ``nrhs`` > 1 is the engine's batched operating point: autotuning then
+    measures every candidate at nrhs=1 *and* at that block width (argmin
+    on per-column time), so the cached winner is tuned for the coalesced
+    SpMM the engine actually issues — the winning ``plan.nrhs`` records
+    the width it was tuned at."""
     from repro.core import tuner
+    tune_kw = {}
+    if autotune and nrhs > 1:
+        tune_kw["nrhs_options"] = (1, nrhs)
     if mesh_p is not None and mesh_available(mesh_p) and M.is_square:
         return tuner.mesh_plan_for(M, mesh_p, cache=cache,
-                                   autotune=autotune, interpret=interpret)
+                                   autotune=autotune, interpret=interpret,
+                                   **tune_kw)
     return tuner.plan_for(M, cache=cache, autotune=autotune,
-                          interpret=interpret)
+                          interpret=interpret, **tune_kw)
 
 
 def build_executor(M: CSRC, plan: ExecutionPlan, cache=None,
