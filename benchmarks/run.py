@@ -8,6 +8,13 @@
   schedule_build      schedule/pack build time vs steady-state execute per
                       path (incl. colorful coloring quality) — also written
                       to results/BENCH_schedule.json
+  coloring_quality    greedy vs RACE coloring providers: palette size,
+                      balance, reuse-distance strides, colored-path
+                      steady-state per-column time + cost-model pick on
+                      band/skew/powerlaw rows and tri/tet element graphs —
+                      written to results/BENCH_coloring.json (the CI
+                      bench-smoke job asserts the RACE tet palette beats
+                      greedy)
   flat_vs_rect        flat-grid vs rectangular-grid kernel on skewed and
                       uniform band matrices: pad_ratio, streamed_bytes,
                       SpMV/SpMM time — written to results/BENCH_flat.json
@@ -56,8 +63,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import csrc, paths, schedule as schedule_mod, tuner
-from repro.core.coloring import balance_stats, color_rows
+from repro.core.coloring import (balance_stats, color_rows, group_stats,
+                                 reuse_stats, verify_coloring)
 from repro.core.plan import ExecutionPlan
+from repro.assembly import mesh as amesh
+from repro.assembly.conflict import color_elements, verify_element_coloring
+from repro.roofline import cost_model
 from repro.kernels import ref, ops
 from benchmarks.util import time_fn, row
 from benchmarks.suite import matrices
@@ -70,6 +81,7 @@ BENCH_NNZSPLIT_PATH = os.path.join(ROOT, "results", "BENCH_nnzsplit.json")
 BENCH_ASSEMBLY_PATH = os.path.join(ROOT, "results", "BENCH_assembly.json")
 BENCH_SERVING_PATH = os.path.join(ROOT, "results", "BENCH_serving.json")
 BENCH_LOCAL_GAP_PATH = os.path.join(ROOT, "results", "BENCH_local_gap.json")
+BENCH_COLORING_PATH = os.path.join(ROOT, "results", "BENCH_coloring.json")
 
 
 # ---------------------------------------------------------------------------
@@ -268,6 +280,90 @@ def schedule_build(small: bool):
     with open(BENCH_SCHEDULE_PATH, "w") as f:
         json.dump({"rows": records}, f, indent=1, sort_keys=True)
     print(f"# schedule_build: {len(records)} rows -> {BENCH_SCHEDULE_PATH}")
+
+
+# ---------------------------------------------------------------------------
+# Coloring providers: greedy first-fit vs RACE recursive level-groups
+# ---------------------------------------------------------------------------
+
+def coloring_quality(small: bool):
+    """Greedy vs RACE coloring provider per matrix class: palette size,
+    rows-per-color balance, reuse-distance strides, serial-chunk shape,
+    the colored path's steady-state per-column time, and the cost-model
+    prediction that drives the tuner's provider choice.  Element-graph
+    rows (tri/tet meshes) cover the FEM assembly colorer, where the tet
+    node cliques force any classic coloring past 24 colors while RACE's
+    level groups stay at a handful.  Written to
+    results/BENCH_coloring.json (the CI bench-smoke job asserts the RACE
+    tet palette is below greedy and every provider row carries balance
+    stats)."""
+    print("# coloring_quality: greedy vs RACE coloring providers")
+    rng = np.random.default_rng(0)
+    records = []
+
+    row_cases = [
+        ("fem_band_wide", csrc.fem_band(600 if small else 2400, 24, seed=3)),
+        ("skew_band", csrc.skewed_band(512 if small else 2048, 12, 2,
+                                       seed=6)),
+        ("powerlaw", csrc.powerlaw_laplacian(512 if small else 2048,
+                                             seed=7)),
+    ]
+    for name, M in row_cases:
+        x = jnp.asarray(rng.standard_normal(M.m).astype(np.float32))
+        stats = tuner.stats_of(M)
+        measured, predicted = {}, {}
+        for provider in ("greedy", "race"):
+            plan = ExecutionPlan(path="colorful", coloring=provider)
+            col = color_rows(M, provider=provider)
+            op = ops.SpmvOperator.from_plan(M, plan)
+            t_exec = time_fn(op, x)
+            est = cost_model.plan_cost(stats, plan)
+            measured[provider] = t_exec
+            predicted[provider] = est.predicted_s
+            bs, rs, gs = balance_stats(col), reuse_stats(col), group_stats(
+                col)
+            derived = (f"colors={col.num_colors}"
+                       f";balance={bs['imbalance']:.2f}"
+                       f";mean_stride={rs['mean_stride']:.1f}"
+                       f";predicted_us={est.predicted_s * 1e6:.1f}")
+            row(f"coloring/{name}/{provider}", t_exec * 1e6, derived)
+            records.append({
+                "name": f"coloring/{name}/{provider}", "kind": "rows",
+                "provider": provider, "colors": col.num_colors,
+                "balance": bs, "reuse": rs, "groups": gs,
+                "valid": bool(verify_coloring(M, col)),
+                "execute_us": round(t_exec * 1e6, 2),
+                "predicted_us": round(est.predicted_s * 1e6, 2)})
+        # the tuner's predict-then-measure story per matrix: which provider
+        # the roofline model picks, and which one actually won the clock
+        records.append({
+            "name": f"coloring/{name}/pick", "kind": "pick",
+            "predicted_pick": min(predicted, key=predicted.get),
+            "measured_pick": min(measured, key=measured.get)})
+
+    el_cases = [
+        ("tri", amesh.grid_tri(12 if small else 24)),
+        ("tet", amesh.grid_tet(3 if small else 4)),
+    ]
+    for name, mesh in el_cases:
+        for provider in ("greedy", "race"):
+            col = color_elements(mesh.conn, provider=provider)
+            bs, gs = balance_stats(col), group_stats(col)
+            derived = (f"colors={col.num_colors}"
+                       f";balance={bs['imbalance']:.2f}"
+                       f";chunks={gs['chunks']}")
+            row(f"coloring/{name}_elements/{provider}", 0.0, derived)
+            records.append({
+                "name": f"coloring/{name}_elements/{provider}",
+                "kind": "elements", "provider": provider,
+                "colors": col.num_colors, "balance": bs, "groups": gs,
+                "valid": bool(verify_element_coloring(mesh.conn, col))})
+
+    os.makedirs(os.path.dirname(BENCH_COLORING_PATH), exist_ok=True)
+    with open(BENCH_COLORING_PATH, "w") as f:
+        json.dump({"rows": records}, f, indent=1, sort_keys=True)
+    print(f"# coloring_quality: {len(records)} rows -> "
+          f"{BENCH_COLORING_PATH}")
 
 
 # ---------------------------------------------------------------------------
@@ -746,7 +842,7 @@ def roofline_summary(small: bool):
 
 
 BENCHES = [fig5_sequential, table2_accumulation, fig6_colorful,
-           fig89_scaling, schedule_build, flat_vs_rect,
+           fig89_scaling, schedule_build, coloring_quality, flat_vs_rect,
            nnzsplit_unstructured, assembly, serving, local_gap,
            tuned_vs_default, roofline_summary]
 

@@ -48,9 +48,20 @@ from repro.core.paths import BUILD_COUNTS
 from .conflict import color_elements, element_dofs
 from .mesh import Mesh
 
-ASSEMBLY_VERSION = 1
+# version 2: the element coloring records its provider ('greedy'|'race')
+# plus the RACE level-group metadata; non-greedy providers join the cache
+# key.  Version-1 files load as misses and are rebuilt transparently.
+ASSEMBLY_VERSION = 2
 
 STRATEGIES = ("colored", "private", "serial")
+
+
+def assembly_key(digest: str, num_buffers: int,
+                 coloring: str = "greedy") -> str:
+    """Cache key of one assembly schedule.  Greedy keys are byte-identical
+    to pre-provider caches; other providers append their name."""
+    suffix = "" if coloring == "greedy" else f".{coloring}"
+    return f"asm-{digest}.b{num_buffers}{suffix}"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,7 +90,8 @@ class AssemblySchedule:
         return self.n + 2 * self.k
 
     def key(self) -> str:
-        return f"asm-{self.structure_digest}.b{self.num_buffers}"
+        return assembly_key(self.structure_digest, self.num_buffers,
+                            self.coloring.provider)
 
     # ------------------------------------------------------------------
     # Serialization (npz arrays + JSON meta, SpmvSchedule conventions)
@@ -93,6 +105,7 @@ class AssemblySchedule:
             "ndof_per_node": self.ndof_per_node,
             "num_buffers": self.num_buffers,
             "num_colors": int(self.coloring.num_colors),
+            "coloring_provider": self.coloring.provider,
         }
         arrays = dict(
             ia=np.asarray(self.ia), ja=np.asarray(self.ja),
@@ -102,6 +115,14 @@ class AssemblySchedule:
             color_ptr=np.asarray(self.coloring.color_ptr),
             buffer_elements=np.asarray(self.buffer_elements),
         )
+        # RACE level-group metadata survives the round-trip so reloaded
+        # schedules keep the chunk-aware invariant verifiable
+        if self.coloring.level_of_row is not None:
+            arrays["color_level_of_row"] = np.asarray(
+                self.coloring.level_of_row)
+        if self.coloring.group_of_row is not None:
+            arrays["color_group_of_row"] = np.asarray(
+                self.coloring.group_of_row)
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         tmp = path + ".tmp.npz"
         with open(tmp, "wb") as f:
@@ -118,10 +139,16 @@ class AssemblySchedule:
                 raise ValueError(
                     f"assembly schedule {path}: version "
                     f"{meta.get('version')!r} != {ASSEMBLY_VERSION}")
-            coloring = Coloring(color_of_row=z["color_of_row"],
-                                num_colors=int(meta["num_colors"]),
-                                rows_by_color=z["rows_by_color"],
-                                color_ptr=z["color_ptr"])
+            coloring = Coloring(
+                color_of_row=z["color_of_row"],
+                num_colors=int(meta["num_colors"]),
+                rows_by_color=z["rows_by_color"],
+                color_ptr=z["color_ptr"],
+                provider=meta.get("coloring_provider", "greedy"),
+                level_of_row=(z["color_level_of_row"]
+                              if "color_level_of_row" in z.files else None),
+                group_of_row=(z["color_group_of_row"]
+                              if "color_group_of_row" in z.files else None))
             return cls(structure_digest=meta["structure_digest"],
                        n=meta["n"], k=meta["k"], ne=meta["ne"],
                        edof=meta["edof"],
@@ -150,7 +177,8 @@ def build_assembly_schedule(mesh_or_conn: Union[Mesh, np.ndarray],
                             ndof_per_node: int = 1,
                             num_buffers: int = 8,
                             num_nodes: Optional[int] = None,
-                            coloring: Optional[Coloring] = None
+                            coloring: Optional[Coloring] = None,
+                            coloring_provider: str = "greedy"
                             ) -> AssemblySchedule:
     """Build the full assembly artifact for one connectivity.
 
@@ -197,7 +225,7 @@ def build_assembly_schedule(mesh_or_conn: Union[Mesh, np.ndarray],
 
     if coloring is None:
         BUILD_COUNTS["element_coloring"] += 1
-        coloring = color_elements(conn)
+        coloring = color_elements(conn, provider=coloring_provider)
 
     # private-buffer grouping: contiguous element chunks (locality), padded
     # to a rectangular (B, epb) table with -1 sentinels
@@ -216,18 +244,20 @@ def build_assembly_schedule(mesh_or_conn: Union[Mesh, np.ndarray],
 
 def assembly_schedule_for(mesh_or_conn, ndof_per_node: int = 1,
                           num_buffers: int = 8, cache=None,
-                          num_nodes: Optional[int] = None
+                          num_nodes: Optional[int] = None,
+                          coloring_provider: str = "greedy"
                           ) -> AssemblySchedule:
     """The schedule to assemble this connectivity with — cache hit wins.
 
     ``cache`` is a :class:`~repro.core.tuner.PlanCache`; a hit (keyed by
-    the connectivity digest) performs zero structural work, which is the
-    FEM time-stepping fast path: re-assembly with unchanged connectivity
-    only refreshes value streams.
+    the connectivity digest and the element-coloring provider) performs
+    zero structural work, which is the FEM time-stepping fast path:
+    re-assembly with unchanged connectivity only refreshes value streams.
     """
     if cache is None:
         return build_assembly_schedule(mesh_or_conn, ndof_per_node,
-                                       num_buffers, num_nodes=num_nodes)
+                                       num_buffers, num_nodes=num_nodes,
+                                       coloring_provider=coloring_provider)
     if isinstance(mesh_or_conn, Mesh):
         conn, nn = mesh_or_conn.conn, mesh_or_conn.num_nodes
     else:
@@ -237,11 +267,13 @@ def assembly_schedule_for(mesh_or_conn, ndof_per_node: int = 1,
     # same clamp the builder applies, so lookup and stored keys agree on
     # meshes with fewer elements than buffers
     num_buffers = max(1, min(num_buffers, int(conn.shape[0])))
-    hit = cache.get_assembly_schedule(digest, num_buffers)
+    hit = cache.get_assembly_schedule(digest, num_buffers,
+                                      coloring=coloring_provider)
     if hit is not None:
         return hit
     sched = build_assembly_schedule(conn, ndof_per_node, num_buffers,
-                                    num_nodes=nn)
+                                    num_nodes=nn,
+                                    coloring_provider=coloring_provider)
     cache.put_assembly_schedule(sched)
     return sched
 
@@ -328,10 +360,12 @@ def assemble(sched: AssemblySchedule, ke,
 
 def assemble_mesh(mesh: Mesh, ke, ndof_per_node: int = 1,
                   strategy: str = "colored", cache=None,
-                  num_buffers: int = 8):
+                  num_buffers: int = 8,
+                  coloring_provider: str = "greedy"):
     """One-call mesh → CSRC assembly; returns (matrix, schedule) so
     repeated value refreshes reuse the schedule (or pass ``cache=`` and
     the connectivity digest does it for you)."""
     sched = assembly_schedule_for(mesh, ndof_per_node=ndof_per_node,
-                                  num_buffers=num_buffers, cache=cache)
+                                  num_buffers=num_buffers, cache=cache,
+                                  coloring_provider=coloring_provider)
     return assemble(sched, ke, strategy=strategy), sched

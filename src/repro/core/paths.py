@@ -79,6 +79,13 @@ class CandidateSpace:
     # variant is not an artifact field — so proposing both costs no extra
     # schedule builds.
     variants: Tuple[str, ...] = ("stream", "onehot")
+    # coloring providers the colorful enumerator proposes (core/coloring):
+    # 'greedy' sequential first-fit and 'race' recursive level-groups.
+    # The provider is an artifact field — greedy and race schedules cache
+    # under distinct keys — and the cost model prices the locality gap
+    # (launch count x reuse distance) so predict-then-measure separates
+    # them before the first coloring is ever built.
+    colorings: Tuple[str, ...] = ("greedy", "race")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -400,7 +407,15 @@ def _colorful_candidates(stats, space):
         return []
     return [ExecutionPlan(path="colorful", w_cap=space.w_cap,
                           partition=space.partition,
-                          accumulation=space.accumulation)]
+                          accumulation=space.accumulation,
+                          coloring=provider)
+            for provider in space.colorings]
+
+
+def _colorful_fields(plan) -> tuple:
+    # greedy and race colorings are different artifacts: the provider joins
+    # the schedule cache key so the two never collide
+    return (plan.coloring,)
 
 
 def _colorful_build(M, plan, coloring=None) -> dict:
@@ -412,7 +427,7 @@ def _colorful_build(M, plan, coloring=None) -> dict:
             "use 'segment' for rectangular matrices")
     if coloring is None:
         BUILD_COUNTS["coloring"] += 1
-        col = color_rows(M)
+        col = color_rows(M, provider=plan.coloring)
     else:
         col = coloring
     slots, ptr = schedule_mod.color_slot_batches(M, col)
@@ -422,7 +437,8 @@ def _colorful_build(M, plan, coloring=None) -> dict:
 def _colorful_save(sched):
     import numpy as np
     col = sched.coloring
-    meta = {"num_colors": int(col.num_colors)}
+    meta = {"num_colors": int(col.num_colors),
+            "coloring_provider": col.provider}
     arrays = dict(
         color_of_row=np.asarray(col.color_of_row),
         rows_by_color=np.asarray(col.rows_by_color),
@@ -430,16 +446,29 @@ def _colorful_save(sched):
         color_slots=np.asarray(sched.color_slots),
         color_slot_ptr=np.asarray(sched.color_slot_ptr),
     )
+    # RACE level-group metadata rides along so a loaded schedule keeps the
+    # chunk-aware conflict invariant verifiable without re-coloring
+    if col.level_of_row is not None:
+        arrays["color_level_of_row"] = np.asarray(col.level_of_row)
+    if col.group_of_row is not None:
+        arrays["color_group_of_row"] = np.asarray(col.group_of_row)
     return meta, arrays
 
 
 def _colorful_load(meta, z) -> dict:
     from .coloring import Coloring
+    files = getattr(z, "files", z)
     return {
-        "coloring": Coloring(color_of_row=z["color_of_row"],
-                             num_colors=int(meta["num_colors"]),
-                             rows_by_color=z["rows_by_color"],
-                             color_ptr=z["color_ptr"]),
+        "coloring": Coloring(
+            color_of_row=z["color_of_row"],
+            num_colors=int(meta["num_colors"]),
+            rows_by_color=z["rows_by_color"],
+            color_ptr=z["color_ptr"],
+            provider=meta.get("coloring_provider", "greedy"),
+            level_of_row=(z["color_level_of_row"]
+                          if "color_level_of_row" in files else None),
+            group_of_row=(z["color_group_of_row"]
+                          if "color_group_of_row" in files else None)),
         "color_slots": z["color_slots"],
         "color_slot_ptr": z["color_slot_ptr"],
     }
@@ -460,7 +489,7 @@ register_path(KernelPath(
     name="colorful",
     feasible=_square_feasible,
     candidates=_colorful_candidates,
-    artifact_fields=_empty_fields,
+    artifact_fields=_colorful_fields,
     build_artifact=_colorful_build,
     save_artifact=_colorful_save,
     load_artifact=_colorful_load,

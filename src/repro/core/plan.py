@@ -90,6 +90,12 @@ VALUE_DTYPES = ("float32", "bfloat16")
 # SpmvOperator, 'mesh' = distributed product over mesh_p shards with the
 # plan's accumulation as the collective pattern.
 STRATEGIES = ("local", "mesh")
+# Coloring providers of the colorful path (core/coloring.py): 'greedy' is
+# the sequential largest-degree-first coloring, 'race' the recursive
+# level-group scheme (arXiv:1907.06487) — fewer, locality-preserving
+# classes on banded and mesh-born matrices.  The tuner proposes both and
+# measures; the field is inert on every other path.
+COLORINGS = ("greedy", "race")
 # Kernel body variants of the Pallas paths ('kernel'/'flat'/'nnzsplit'):
 # 'onehot' realizes gather/scatter as one-hot MXU contractions — O(W) work
 # per slot, compute-bound but Mosaic-safe on compiled TPU; 'stream' gathers
@@ -122,6 +128,9 @@ class ExecutionPlan:
     strategy: str = "local"
     mesh_p: int = 1
     variant: str = "onehot"
+    # colorful-path coloring provider; plans serialized before this field
+    # existed load with the greedy default (from_dict fills missing fields)
+    coloring: str = "greedy"
 
     def __post_init__(self):
         if self.path not in PATHS:
@@ -163,6 +172,9 @@ class ExecutionPlan:
         if self.variant not in VARIANTS:
             raise ValueError(
                 f"variant {self.variant!r} not in {VARIANTS}")
+        if self.coloring not in COLORINGS:
+            raise ValueError(
+                f"coloring {self.coloring!r} not in {COLORINGS}")
 
     @property
     def k_step(self) -> int:
@@ -185,7 +197,11 @@ class ExecutionPlan:
             bf16 = ":bf16" if self.value_dtype == "bfloat16" else ""
             return (f"{self.path}:ks{self.k_step_sublanes}{i16}{bf16}{st}"
                     f":{self.partition}:{self.accumulation}{rhs}{mesh}")
-        return (f"{self.path}:{self.partition}:{self.accumulation}"
+        # colorful keys carry the non-default provider (':race'); greedy
+        # keys are byte-identical to pre-provider caches
+        col = (":race" if self.path == "colorful"
+               and self.coloring == "race" else "")
+        return (f"{self.path}{col}:{self.partition}:{self.accumulation}"
                 f"{rhs}{mesh}")
 
     def to_dict(self) -> Dict:

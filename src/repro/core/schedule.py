@@ -61,7 +61,11 @@ from .plan import ExecutionPlan
 # version 5: the 'nnzsplit' path's NnzSplitPack artifact joins the npz
 # layout (nnzsplit_* arrays + "nnzsplit_pack" meta).  Version-4 files
 # load as misses and are rebuilt transparently.
-SCHEDULE_VERSION = 5
+# version 6: the colorful artifact records its coloring provider plus the
+# RACE level-group metadata (color_level_of_row / color_group_of_row), and
+# the provider joins the colorful path's artifact fields (schedule keys).
+# Version-5 files load as misses and are rebuilt transparently.
+SCHEDULE_VERSION = 6
 
 
 @dataclasses.dataclass(frozen=True)

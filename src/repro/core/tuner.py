@@ -163,7 +163,8 @@ def enumerate_plans(stats: MatrixStats,
                     colorful_max_n: int = 2048,
                     p_hint: int = 8,
                     nrhs_options=(1,),
-                    index_dtypes=("int32", "int16")) -> List[ExecutionPlan]:
+                    index_dtypes=("int32", "int16"),
+                    colorings=("greedy", "race")) -> List[ExecutionPlan]:
     """All feasible candidate plans for a matrix with these statistics.
 
     Candidates come from the KernelPath registry (core/paths.py): every
@@ -190,13 +191,21 @@ def enumerate_plans(stats: MatrixStats,
     int16 variants are measured, so the tuner trades index bandwidth per
     matrix — SpMV is bandwidth-bound, and int16 halves 8 of ~16 streamed
     bytes per slot.
+
+    ``colorings`` controls the colorful enumerator's provider proposals:
+    with the default both the greedy first-fit and the RACE recursive
+    level-group coloring (arXiv:1907.06487) are candidates wherever the
+    colored path is feasible, priced apart by the cost model's locality
+    terms (per-color launch overhead x palette size + reuse-distance
+    penalty) and measured per matrix.
     """
     partition, acc = _distributed_fields(stats, p_hint)
     space = paths_mod.CandidateSpace(
         tms=tuple(tms), k_steps_sublanes=tuple(k_steps_sublanes),
         w_cap=w_cap, colorful_max_n=colorful_max_n,
         partition=partition, accumulation=acc,
-        index_dtypes=tuple(index_dtypes))
+        index_dtypes=tuple(index_dtypes),
+        colorings=tuple(colorings))
     raw: List[ExecutionPlan] = []
     for entry in paths_mod.registered_paths():
         raw.extend(entry.candidates(stats, space))
@@ -549,12 +558,15 @@ class PlanCache:
     # ---- assembly schedules (repro.assembly.scatter), stored beside the
     # SpMV schedules and keyed by connectivity digest ----
 
-    def get_assembly_schedule(self, digest: str, num_buffers: int = 8):
+    def get_assembly_schedule(self, digest: str, num_buffers: int = 8,
+                              coloring: str = "greedy"):
         """The cached AssemblySchedule for this connectivity digest, or
         None.  Memory first, then the npz beside the cache — a hit means
-        zero structural assembly work (slot maps, coloring, buffers)."""
-        from repro.assembly.scatter import AssemblySchedule
-        key = f"asm-{digest}.b{num_buffers}"
+        zero structural assembly work (slot maps, coloring, buffers).
+        ``coloring`` picks the element-coloring provider slice of the
+        cache (greedy keys are unchanged from pre-provider caches)."""
+        from repro.assembly.scatter import AssemblySchedule, assembly_key
+        key = assembly_key(digest, num_buffers, coloring)
         sched = self.assembly_schedules.get(key)
         if sched is None:
             d = self._schedule_dir()
@@ -564,7 +576,9 @@ class PlanCache:
                     sched = AssemblySchedule.load_npz(f)
                 except Exception:      # stale version / truncated: rebuild
                     sched = None
-                if sched is not None and sched.structure_digest != digest:
+                if sched is not None and (
+                        sched.structure_digest != digest
+                        or sched.coloring.provider != coloring):
                     sched = None
                 if sched is not None:
                     self.assembly_schedules[key] = sched

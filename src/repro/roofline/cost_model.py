@@ -43,6 +43,40 @@ def _round_up(v: int, m: int) -> int:
 _VALUE_BYTES = {"float32": 4, "bfloat16": 2}
 _INDEX_BYTES = {"int32": 4, "int16": 2}
 
+# --- colorful-path locality terms -----------------------------------------
+# Per-color serial launch overhead: each color class is its own scatter
+# dispatch, serialized against the previous one, so the colored path pays
+# this once per palette entry — the term that makes a 49-color greedy
+# schedule price above a 4-color RACE schedule on the same bytes.
+COLOR_LAUNCH_S = 2e-6
+# Scatter transaction granularity: an isolated y/x touch moves a whole
+# line, using only the 4 bytes it wanted.  Classes whose rows stride the
+# matrix (greedy destroys row locality — the paper's §3.2 criticism) pay
+# the waste on most touches; RACE classes are unions of contiguous level
+# ranges, so neighbouring rows share lines and most of the waste vanishes.
+SCATTER_LINE_BYTES = 64.0
+_REUSE_WASTE_FRACTION = {"greedy": 1.0, "race": 0.25}
+
+
+def _coloring_palette_estimate(stats, provider: str) -> float:
+    """Analytic palette-size estimate for the distance-2 row coloring.
+
+    greedy first-fit needs about the conflict degree + 1 colors: on banded
+    matrices the distance-2 conflict degree is ~2·bandwidth, on
+    unstructured ones ~deg² (capped at n-1).  RACE's bipartition needs two
+    sweeps per recursion depth, and the depth the chunk-size target forces
+    is shallow (one or two) on every class we generate — so it is modeled
+    as a small constant palette, which is exactly its empirical behaviour
+    (2–10 colors where greedy needs 30–70).
+    """
+    n = max(stats.n, 1)
+    deg = 2.0 * stats.k / n
+    conflict_deg = min(float(n - 1), 2.0 * stats.bandwidth,
+                       deg * deg + deg)
+    if provider == "race":
+        return 4.0                       # two sweeps x ~one recursion level
+    return 1.0 + conflict_deg
+
 
 @dataclasses.dataclass(frozen=True)
 class CostEstimate:
@@ -107,6 +141,7 @@ def plan_cost(stats, plan: ExecutionPlan) -> CostEstimate:
     vstreams = 1 if stats.numerically_symmetric else 2
     xy = 2.0 * 4 * max(n, stats.m) * nrhs      # x read + y write
     diag = 4.0 * n
+    launch_s = 0.0                             # serialized dispatch overhead
 
     if plan.path in ("kernel", "flat"):
         nt, w_pad, slots = _windowed_geometry(stats, plan)
@@ -126,8 +161,21 @@ def plan_cost(stats, plan: ExecutionPlan) -> CostEstimate:
         flops = 2.0 * slots * nrhs + 2.0 * n * nrhs
         if plan.variant == "onehot":
             flops += slots * r_pad * (3.0 + 2.0 * nrhs)
+    elif plan.path == "colorful":
+        # colored execution streams the triangle once in total (the color
+        # classes tile the slots), but adds the two locality terms: one
+        # serialized scatter launch per color, and the reuse-distance
+        # penalty — scattered classes touch x/y one isolated line per
+        # element (2k + n targets per product), contiguous RACE level
+        # groups touch dense lines
+        colors = _coloring_palette_estimate(stats, plan.coloring)
+        waste = _REUSE_WASTE_FRACTION.get(plan.coloring, 1.0)
+        byts = k * (4 * vstreams + 4 * 2) + diag + xy
+        byts += waste * (2.0 * k + n) * (SCATTER_LINE_BYTES - 4.0)
+        flops = 4.0 * k * nrhs + 2.0 * n * nrhs
+        launch_s = colors * COLOR_LAUNCH_S
     else:
-        # segment / colorful / future paths: the unpadded streaming product
+        # segment / future paths: the unpadded streaming product
         byts = k * (4 * vstreams + 4 * 2) + diag + xy
         flops = 4.0 * k * nrhs + 2.0 * n * nrhs
 
@@ -135,7 +183,7 @@ def plan_cost(stats, plan: ExecutionPlan) -> CostEstimate:
     cmp_s = flops / PEAK_FLOPS_BF16
     return CostEstimate(bytes=float(byts), flops=float(flops),
                         memory_s=mem_s, compute_s=cmp_s,
-                        predicted_s=max(mem_s, cmp_s))
+                        predicted_s=max(mem_s, cmp_s) + launch_s)
 
 
 def rank_plans(stats, plans: Sequence[ExecutionPlan]

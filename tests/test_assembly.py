@@ -368,3 +368,73 @@ def test_serving_time_stepping_value_refresh():
     M2 = assemble(sched, amesh.poisson_stiffness(mesh, mass=2.5))
     np.testing.assert_allclose(out[uid], csrc.to_dense(M2) @ x,
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# RACE element coloring through assembly schedules and the cache
+# ---------------------------------------------------------------------------
+
+def test_race_halves_tet_element_palette():
+    """The acceptance property: on the tet mesh ~24 elements share one
+    node (a 24-clique), so any classic coloring needs a palette past 24 —
+    RACE's level groups need at most half of greedy's, and the coloring
+    stays valid under the chunk-aware invariant."""
+    mesh = amesh.grid_tet(3)
+    greedy = color_elements(mesh.conn, provider="greedy")
+    race = color_elements(mesh.conn, provider="race")
+    assert race.num_colors * 2 <= greedy.num_colors
+    assert verify_element_coloring(mesh.conn, greedy)
+    assert verify_element_coloring(mesh.conn, race)
+    assert race.provider == "race"
+    assert race.group_of_row is not None
+
+
+@pytest.mark.parametrize("name,make", MESHES, ids=MESH_IDS)
+def test_race_colored_assembly_bit_identical(name, make):
+    """RACE's weaker intra-chunk guarantee is exact on the sum-combining
+    scatter: colored assembly under the race provider matches the serial
+    oracle bit for bit on every mesh class."""
+    mesh = make()
+    ke = amesh.synthetic_stiffness(mesh, seed=11)
+    sched = build_assembly_schedule(mesh.conn, coloring_provider="race")
+    assert sched.coloring.provider == "race"
+    got = scatter_colored(sched, ke)
+    want = scatter_serial(sched, ke)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_assembly_key_separates_providers():
+    """Both providers' schedules coexist: the provider suffixes the
+    assembly cache key (greedy keys stay byte-identical to pre-provider
+    caches)."""
+    from repro.assembly.scatter import assembly_key
+    dig = "abc123"
+    assert assembly_key(dig, 8, "greedy") == assembly_key(dig, 8)
+    assert assembly_key(dig, 8, "race") != assembly_key(dig, 8, "greedy")
+    assert assembly_key(dig, 8, "race").endswith(".race")
+
+
+def test_race_assembly_schedule_roundtrips_zero_rebuild(tmp_path):
+    """A race AssemblySchedule survives the npz round-trip with provider
+    and level-group metadata, a fresh cache rebuilds nothing, and both
+    providers' artifacts live side by side in one cache file."""
+    path = os.path.join(tmp_path, "plans.json")
+    mesh = amesh.grid_tet(2)
+    ke = amesh.synthetic_stiffness(mesh, seed=7)
+    cache = tuner.PlanCache(path=path)
+    s_greedy = assembly_schedule_for(mesh, cache=cache)
+    s1, d1 = _build_delta(lambda: assembly_schedule_for(
+        mesh, cache=cache, coloring_provider="race"))
+    assert d1.get("element_coloring") == 1     # distinct artifact built
+    cache2 = tuner.PlanCache(path=path)            # "new process"
+    s2, d2 = _build_delta(lambda: assembly_schedule_for(
+        mesh, cache=cache2, coloring_provider="race"))
+    assert d2 == {}, f"disk hit rebuilt: {d2}"
+    col = s2.coloring
+    assert col.provider == "race"
+    assert col.level_of_row is not None and col.group_of_row is not None
+    np.testing.assert_array_equal(col.color_of_row,
+                                  s1.coloring.color_of_row)
+    assert s_greedy.coloring.provider == "greedy"
+    np.testing.assert_array_equal(csrc.to_dense(assemble(s1, ke)),
+                                  csrc.to_dense(assemble(s2, ke)))

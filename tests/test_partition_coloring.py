@@ -8,7 +8,10 @@ from repro.core import csrc
 from repro.core.partition import (partition_rows_by_nnz,
                                   partition_rows_by_count, load_imbalance,
                                   interval_boundaries, halo_widths)
-from repro.core.coloring import color_rows, verify_coloring, conflict_stats
+from repro.core.coloring import (color_rows, verify_coloring, conflict_stats,
+                                 balance_stats, color_graph,
+                                 direct_adjacency, group_stats,
+                                 race_color_graph, reuse_stats)
 from repro.kernels import ref
 
 
@@ -168,3 +171,154 @@ def test_balance_matches_full_scan_reference():
         # stats derive from the colors, so they are unchanged too
         s = balance_stats(col)
         assert s["imbalance"] >= 1.0 and s["std"] >= 0.0
+
+
+_SUITE = [lambda: csrc.poisson2d(6), lambda: csrc.fem_band(80, 3, seed=0),
+          lambda: csrc.skewed_band(64, 12, 2, seed=1),
+          lambda: csrc.random_symmetric_pattern(48, 3, seed=3),
+          lambda: csrc.paper_example()]
+
+
+def test_greedy_scratch_matches_set_reference():
+    """The reusable boolean scratch in _greedy must reproduce the original
+    per-vertex set scan move for move — identical color arrays, both
+    natural and degree order, both conflict distances — on every suite
+    matrix class."""
+    from repro.core.coloring import _forbidden_colors, _greedy
+
+    def greedy_ref(adj, order, include_indirect):
+        n = len(adj)
+        color = np.full(n, -1, dtype=np.int64)
+        for v in order:
+            forbidden = _forbidden_colors(int(v), adj, color,
+                                          include_indirect)
+            c = 0
+            while c in forbidden:
+                c += 1
+            color[v] = c
+        return color
+
+    for make in _SUITE:
+        M = make()
+        adj = direct_adjacency(M)
+        deg = np.asarray([len(a) for a in adj])
+        for order in (np.arange(M.n), np.argsort(-deg, kind="stable")):
+            for indirect in (False, True):
+                got = _greedy(adj, order, indirect)
+                want = greedy_ref(adj, order, indirect)
+                assert np.array_equal(got, want), (type(M), indirect)
+
+
+def _graph_coloring_valid(adj, col):
+    """Chunk-aware validity on a raw conflict graph: no edge inside one
+    color crosses two serial chunks (greedy: chunks are singletons)."""
+    grp = col.group_of_row
+    for c in range(col.num_colors):
+        members = set(col.rows(c).tolist())
+        for v in col.rows(c).tolist():
+            gv = int(grp[v]) if grp is not None else v
+            for u in adj[v]:
+                u = int(u)
+                if u in members:
+                    gu = int(grp[u]) if grp is not None else u
+                    if gu != gv:
+                        return False
+    return True
+
+
+def test_paper_example_both_providers_valid():
+    """§3.2 regression on the 9×9 illustration (12 direct / 7 indirect
+    conflicts): both providers produce valid colorings at distance 1
+    (direct conflicts only) and distance 2 (indirect included)."""
+    M = csrc.paper_example()
+    assert conflict_stats(M) == {"direct": 12, "indirect": 7}
+    adj = direct_adjacency(M)
+    for provider in ("greedy", "race"):
+        d1 = color_graph(adj, include_indirect=False, provider=provider)
+        assert _graph_coloring_valid(adj, d1), provider
+        d2 = color_rows(M, include_indirect=True, provider=provider)
+        assert verify_coloring(M, d2), provider
+        assert sorted(np.concatenate(
+            [d2.rows(c) for c in range(d2.num_colors)]).tolist()) == list(
+                range(M.n))
+
+
+def test_race_provider_valid_on_suite():
+    """RACE colorings carry level/group metadata and satisfy the
+    chunk-aware conflict invariant on every suite matrix class."""
+    for make in _SUITE:
+        M = make()
+        col = color_rows(M, provider="race")
+        assert col.provider == "race"
+        assert col.level_of_row is not None and col.group_of_row is not None
+        assert col.level_of_row.shape == (M.n,)
+        assert verify_coloring(M, col)
+        gs = group_stats(col)
+        assert gs["chunks"] >= col.num_colors
+        # every row colored exactly once
+        assert sorted(np.concatenate(
+            [col.rows(c) for c in range(col.num_colors)]).tolist()) == list(
+                range(M.n))
+
+
+def test_race_cuts_palette_and_stride_on_wide_band():
+    """The provider's reason to exist: on a wide-band matrix RACE's level
+    groups need a fraction of greedy's palette and keep consecutive rows
+    of one class adjacent (small reuse strides), per the paper's §3.2
+    locality criticism of scattered color classes."""
+    M = csrc.fem_band(600, 24, seed=3)
+    greedy = color_rows(M, provider="greedy")
+    race = color_rows(M, provider="race")
+    assert race.num_colors * 2 <= greedy.num_colors
+    assert (reuse_stats(race)["mean_stride"]
+            < reuse_stats(greedy)["mean_stride"])
+    assert verify_coloring(M, race)
+
+
+def test_race_groups_disjoint_targets():
+    """The invariant the executors rely on: within a color, two rows of
+    *different* serial chunks never share a write target (y[row] or
+    y[ja[slot]]) — checked directly, not via verify_coloring."""
+    M = csrc.skewed_band(96, 10, 2, seed=5)
+    col = color_rows(M, provider="race")
+    ia = np.asarray(M.ia)
+    ja = np.asarray(M.ja)
+    grp = col.group_of_row
+    for c in range(col.num_colors):
+        owner = {}
+        for r in col.rows(c).tolist():
+            targets = [r] + ja[ia[r]:ia[r + 1]].tolist()
+            for t in targets:
+                og = owner.get(int(t))
+                assert og is None or og == int(grp[r]), (c, r, t)
+                owner[int(t)] = int(grp[r])
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(8, 40), st.integers(1, 5), st.integers(0, 1000))
+def test_property_race_coloring_conflict_free(n, band, seed):
+    """Chunk-aware §3.2 invariant under the RACE provider on random band
+    matrices (the greedy twin of this property runs above)."""
+    M = csrc.fem_band(n, min(band, n - 1), seed=seed)
+    col = color_rows(M, provider="race")
+    assert verify_coloring(M, col)
+    assert 1 <= col.num_colors <= n
+    assert sorted(np.concatenate(
+        [col.rows(c) for c in range(col.num_colors)]).tolist()) == list(
+            range(n))
+
+
+def test_race_balance_pass_keeps_validity():
+    """The balance pass moves rows only under the classic (stronger)
+    forbidden check, so the balanced RACE coloring stays chunk-valid and
+    never widens the palette."""
+    M = csrc.fem_band(200, 8, seed=7)
+    adj = direct_adjacency(M)
+    from repro.core.coloring import _conflict_closure
+    cadj = _conflict_closure(adj)
+    plain = race_color_graph(cadj, include_indirect=False, balance=False)
+    balanced = race_color_graph(cadj, include_indirect=False, balance=True)
+    assert balanced.num_colors <= plain.num_colors
+    assert _graph_coloring_valid(cadj, balanced)
+    assert (balance_stats(balanced)["imbalance"]
+            <= balance_stats(plain)["imbalance"] + 1e-9)

@@ -273,3 +273,56 @@ def test_spmv_serving_engine_tuned_batching():
     for uid, x in zip(uids, xs):
         np.testing.assert_allclose(out[uid], A @ x, rtol=2e-4, atol=2e-4)
     assert eng.plan("fem") == plan
+
+
+# ---------------------------------------------------------------------------
+# coloring providers through the tuner and the cost model
+# ---------------------------------------------------------------------------
+
+def test_cost_model_prefers_race_on_wide_band():
+    """The locality terms the provider choice rides on: per-color launch
+    overhead plus the reuse-distance waste price greedy's ~2·band palette
+    far above RACE's constant handful on a wide-band matrix — so
+    predict-then-measure always measures the race colorful candidate."""
+    from repro.roofline import cost_model
+    stats = tuner.stats_of(csrc.fem_band(512, 24, seed=3))
+    greedy = ExecutionPlan(path="colorful")
+    race = ExecutionPlan(path="colorful", coloring="race")
+    cg = cost_model.plan_cost(stats, greedy)
+    cr = cost_model.plan_cost(stats, race)
+    assert cr.predicted_s < cg.predicted_s
+    ranked = cost_model.rank_plans(stats, [greedy, race])
+    assert ranked[0][0].coloring == "race"
+
+
+def test_tune_measures_best_colorful_provider_and_persists(tmp_path):
+    """tune() measures the colorful path through its best-predicted
+    provider, and the winning plan's coloring field round-trips through
+    the cache JSON."""
+    path = os.path.join(tmp_path, "plans.json")
+    M = csrc.fem_band(96, 8, seed=2)
+    cache = tuner.PlanCache(path=path)
+
+    def prefer_colorful(op, x):
+        return 1.0 if op.plan.path == "colorful" else 2.0
+
+    res = tuner.tune(M, cache=cache, measure=prefer_colorful)
+    assert res.plan.path == "colorful"
+    # the measured colorful candidate is the cost model's provider pick
+    from repro.roofline import cost_model
+    stats = tuner.stats_of(M)
+    colorful_keys = [k for k in res.timings_s if k.startswith("colorful")]
+    want = cost_model.rank_plans(
+        stats, [ExecutionPlan(path="colorful"),
+                ExecutionPlan(path="colorful", coloring="race")])[0][0]
+    prefix = "colorful:race" if want.coloring == "race" else "colorful:nnz"
+    assert len(colorful_keys) == 1 and colorful_keys[0].startswith(prefix)
+    # the provider survives the disk round-trip
+    cache2 = tuner.PlanCache(path=path)
+
+    def boom(op, x):
+        raise AssertionError("re-measured after reload")
+
+    res2 = tuner.tune(M, cache=cache2, measure=boom)
+    assert res2.cached and res2.plan == res.plan
+    assert res2.plan.coloring == res.plan.coloring

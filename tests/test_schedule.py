@@ -537,3 +537,95 @@ def test_int16_schedule_disk_roundtrip_preserves_dtype(tmp_path):
     x = jnp.asarray(np.random.default_rng(6).standard_normal(M.m)
                     .astype(np.float32))
     np.testing.assert_array_equal(np.asarray(op1(x)), np.asarray(op2(x)))
+
+
+# ---------------------------------------------------------------------------
+# coloring provider through plans, schedules, and the disk cache
+# ---------------------------------------------------------------------------
+
+def test_plan_coloring_field_key_and_backcompat():
+    """The coloring provider is a plan field: ':race' marks the colorful
+    key, greedy keys stay byte-identical to pre-provider caches, and old
+    cache JSONs (no 'coloring' entry) deserialize to greedy."""
+    greedy = ExecutionPlan(path="colorful")
+    race = ExecutionPlan(path="colorful", coloring="race")
+    assert greedy.key() == "colorful:nnz:allreduce"      # unchanged key
+    assert race.key() == "colorful:race:nnz:allreduce"
+    assert ExecutionPlan.from_json(race.to_json()) == race
+    with pytest.raises(ValueError):
+        ExecutionPlan(path="colorful", coloring="rainbow")
+    # pre-provider cache entries (no coloring key) deserialize to greedy
+    d = greedy.to_dict()
+    del d["coloring"]
+    restored = ExecutionPlan.from_dict(d)
+    assert restored.coloring == "greedy"
+    assert restored.key() == "colorful:nnz:allreduce"
+    # the provider only marks the path that consumes it
+    assert ":race" not in ExecutionPlan(path="segment",
+                                        coloring="race").key()
+
+
+def test_coloring_provider_separates_schedule_keys():
+    """Both providers' artifacts coexist in one cache: the provider joins
+    the colorful path's artifact fields, so the schedule keys differ."""
+    M = csrc.fem_band(48, 4, seed=3)
+    greedy = ExecutionPlan(path="colorful")
+    race = ExecutionPlan(path="colorful", coloring="race")
+    assert S.plan_artifact_fields(greedy) != S.plan_artifact_fields(race)
+    fp, dig = tuner.fingerprint(M), S.value_digest(M)
+    assert (S.schedule_key(fp, dig, greedy, p=1)
+            != S.schedule_key(fp, dig, race, p=1))
+
+
+def test_colorful_race_schedule_roundtrips_zero_rebuild(tmp_path):
+    """A colorful:race schedule survives the npz round-trip — provider and
+    level-group metadata included — and a fresh cache object rebuilds
+    nothing (the BUILD_COUNTS probe) while producing bit-identical SpMV."""
+    path = os.path.join(tmp_path, "plans.json")
+    M = csrc.fem_band(96, 6, seed=5)
+    plan = ExecutionPlan(path="colorful", coloring="race")
+    x = jnp.asarray(np.random.default_rng(4).standard_normal(M.m)
+                    .astype(np.float32))
+    cache = tuner.PlanCache(path=path)
+    op1, d1 = _build_delta(
+        lambda: ops.SpmvOperator.from_plan(M, plan, cache=cache))
+    assert d1.get("coloring") == 1
+    cache2 = tuner.PlanCache(path=path)          # "new process"
+    op2, d2 = _build_delta(
+        lambda: ops.SpmvOperator.from_plan(M, plan, cache=cache2))
+    assert d2 == {}, f"disk hit rebuilt: {d2}"
+    col = op2.schedule.coloring
+    assert col.provider == "race"
+    assert col.level_of_row is not None and col.group_of_row is not None
+    assert np.array_equal(col.color_of_row,
+                          op1.schedule.coloring.color_of_row)
+    assert verify_coloring(M, col)
+    np.testing.assert_array_equal(np.asarray(op1(x)), np.asarray(op2(x)))
+
+
+def test_race_colorful_spmv_matches_dense_oracle():
+    """The chunk-aware RACE coloring executes exactly on the sum-combining
+    scatter: colorful:race SpMV and SpMM match the dense oracle."""
+    M = csrc.fem_band(80, 8, seed=6)
+    A = csrc.to_dense(M)
+    plan = ExecutionPlan(path="colorful", coloring="race")
+    op = ops.SpmvOperator.from_plan(M, plan)
+    X = np.random.default_rng(5).standard_normal((M.m, 3)).astype(
+        np.float32)
+    np.testing.assert_allclose(np.asarray(op(jnp.asarray(X))), A @ X,
+                               rtol=2e-4, atol=2e-4)
+    x = X[:, 0]
+    np.testing.assert_allclose(np.asarray(op(jnp.asarray(x))), A @ x,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_enumerate_plans_emits_both_coloring_providers():
+    M = csrc.fem_band(96, 4, seed=1)
+    plans = tuner.enumerate_plans(tuner.stats_of(M), tms=(8,))
+    colorful = [p for p in plans if p.path == "colorful"]
+    assert {p.coloring for p in colorful} == {"greedy", "race"}
+    # the sweep can be restricted to one provider (legacy behavior)
+    only_greedy = tuner.enumerate_plans(tuner.stats_of(M), tms=(8,),
+                                        colorings=("greedy",))
+    assert all(p.coloring == "greedy" for p in only_greedy
+               if p.path == "colorful")
