@@ -70,7 +70,7 @@ from repro.assembly import mesh as amesh
 from repro.assembly.conflict import color_elements, verify_element_coloring
 from repro.roofline import cost_model
 from repro.kernels import ref, ops
-from benchmarks.util import time_fn, row
+from benchmarks.util import steady_state, time_fn, row
 from benchmarks.suite import matrices
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -526,11 +526,9 @@ def assembly(small: bool):
             vals = np.asarray(fn(kej))
             times[label] = t
             match[label] = bool(np.array_equal(vals, ref))
-        t1 = time.perf_counter()
-        reps = 5
-        for _ in range(reps):
-            scatter_serial(sched, ke)
-        times["serial"] = (time.perf_counter() - t1) / reps
+        times["serial"] = steady_state(
+            lambda: scatter_serial(sched, ke), warmup=0, repeats=5,
+            name="assembly.serial_oracle", matrix=name)
         col = sched.coloring
         for label in ("colored", "private", "serial"):
             extra = ("" if label == "serial"
@@ -578,6 +576,7 @@ def assembly(small: bool):
 
 _SERVING_CODE = """
     import json, time, numpy as np
+    from benchmarks.util import steady_state
     from repro.core import csrc, tuner
     from repro.serve import SpmvServingEngine
     OUT = %(out)r
@@ -614,20 +613,18 @@ _SERVING_CODE = """
                 return eng.step()
 
             out = tick()                      # warm the jit caches
-            ts = []
-            for _ in range(5):
-                t0 = time.perf_counter()
-                out = tick()
-                ts.append(time.perf_counter() - t0)
             r0 = next(iter(out.values()))
+            t_med = steady_state(tick, warmup=0, repeats=5,
+                                 name='serve.tick_bench',
+                                 matrix=name, mode=mode)
             rows.append({
                 'matrix': name, 'executor': r0.executor,
                 'plan': plan.key(), 'strategy': plan.strategy,
                 'register_us': round(t_reg * 1e6, 1),
-                'steady_us_per_tick': round(float(np.median(ts)) * 1e6, 1),
+                'steady_us_per_tick': round(t_med * 1e6, 1),
                 'batched': 8,
             })
-            print(f'serving/{name}/{mode},{np.median(ts)*1e6:.1f},'
+            print(f'serving/{name}/{mode},{t_med*1e6:.1f},'
                   f'plan={plan.key()};register_us={t_reg*1e6:.1f};'
                   f'executor={r0.executor}')
     with open(OUT, 'w') as f:
@@ -757,12 +754,10 @@ def local_gap(small: bool):
             return eng.step()
 
         tick()                            # warm the jit caches
-        ts = []
-        for _ in range(5):
-            t0 = time.perf_counter()
-            tick()
-            ts.append(time.perf_counter() - t0)
-        local_us = round(float(np.median(ts)) * 1e6, 1)
+        t_med = steady_state(tick, warmup=0, repeats=5,
+                             name="serve.tick_bench",
+                             matrix=name, mode="local")
+        local_us = round(t_med * 1e6, 1)
         split.append({"matrix": name, "plan": eng.plan(name).key(),
                       "local_steady_us_per_tick": local_us,
                       "mesh_steady_us_per_tick": mesh_rows.get(name)})

@@ -1,22 +1,64 @@
-"""Benchmark timing helpers."""
+"""Benchmark timing helpers.
+
+``steady_state`` is the one shared measurement discipline: warmup calls,
+``jax.block_until_ready`` fencing, ``perf_counter`` around each repeat,
+median-of-repeats.  Every benchmark section (and ``time_fn``, which the
+tuner mirrors) goes through it, and each timed repeat runs inside an
+``obs.span`` so traces/metrics attribute bench time to a name — the
+``bench_seconds{name=...}`` histogram receives the median.
+"""
 import time
 
 import jax
 import numpy as np
 
+try:
+    from repro import obs
+except ImportError:                       # bare checkout without src/ on path
+    obs = None
+
+
+def steady_state(fn, *args, warmup: int = 3, repeats: int = 10,
+                 name: str = "bench.steady_state", **labels) -> float:
+    """Median wall-clock seconds per call of ``fn(*args)`` at steady
+    state: ``warmup`` untimed calls (fenced), then ``repeats`` timed
+    calls each fenced with ``block_until_ready``.  Labels ride into the
+    span and the ``bench_seconds`` histogram."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+    if out is not None:
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        if obs is not None:
+            with obs.span(name, **labels):
+                t0 = time.perf_counter()
+                out = fn(*args)
+                jax.block_until_ready(out)
+                ts.append(time.perf_counter() - t0)
+        else:
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            ts.append(time.perf_counter() - t0)
+    med = float(np.median(ts))
+    if obs is not None:
+        # histogram families have fixed labelnames — free-form labels
+        # live on the spans; the histogram keys on the bench name only
+        # (family API: the label is literally called "name", which would
+        # collide with the convenience helper's first argument)
+        obs.REGISTRY.family(
+            "bench_seconds", "histogram", ("name",),
+            help="median steady-state seconds per benchmark call",
+        ).labels(name=name).observe(med)
+    return med
+
 
 def time_fn(fn, *args, warmup: int = 3, repeats: int = 10) -> float:
     """Median wall-clock seconds per call of a jitted fn."""
-    for _ in range(warmup):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    ts = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return steady_state(fn, *args, warmup=warmup, repeats=repeats,
+                        name="bench.time_fn")
 
 
 def row(name: str, us_per_call: float, derived: str):

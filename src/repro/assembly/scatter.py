@@ -45,6 +45,7 @@ from repro.core.coloring import Coloring
 # the shared build probe (re-exported as schedule.BUILD_COUNTS): assembly
 # builds count into the same Counter the SpMV schedule layer uses
 from repro.core.paths import BUILD_COUNTS
+from repro import obs
 from .conflict import color_elements, element_dofs
 from .mesh import Mesh
 
@@ -196,36 +197,43 @@ def build_assembly_schedule(mesh_or_conn: Union[Mesh, np.ndarray],
         conn = np.asarray(mesh_or_conn)
         num_nodes = (int(conn.max()) + 1 if num_nodes is None
                      else num_nodes)
-    BUILD_COUNTS["assembly_schedule"] += 1
+    BUILD_COUNTS.inc("assembly_schedule")
     d = ndof_per_node
     n = num_nodes * d
-    ed = element_dofs(conn, d)                     # (ne, edof)
-    ne, edof = ed.shape
+    with obs.span("assembly.build_schedule", ndof_per_node=d):
+        ed = element_dofs(conn, d)                 # (ne, edof)
+        ne, edof = ed.shape
 
-    ii = np.broadcast_to(ed[:, :, None], (ne, edof, edof)).reshape(-1)
-    jj = np.broadcast_to(ed[:, None, :], (ne, edof, edof)).reshape(-1)
-    ii = ii.astype(np.int64)
-    jj = jj.astype(np.int64)
+        with obs.span("assembly.slot_pack", ne=ne, edof=edof):
+            ii = np.broadcast_to(ed[:, :, None],
+                                 (ne, edof, edof)).reshape(-1)
+            jj = np.broadcast_to(ed[:, None, :],
+                                 (ne, edof, edof)).reshape(-1)
+            ii = ii.astype(np.int64)
+            jj = jj.astype(np.int64)
 
-    low = ii > jj
-    keys = np.unique(ii[low] * n + jj[low])        # sorted lower slots
-    k = int(keys.shape[0])
-    rows = (keys // n).astype(np.int64)
-    ja = (keys % n).astype(np.int32)
-    ia = np.zeros(n + 1, dtype=np.int32)
-    np.add.at(ia, rows + 1, 1)
-    ia = np.cumsum(ia, dtype=np.int32)
+            low = ii > jj
+            keys = np.unique(ii[low] * n + jj[low])  # sorted lower slots
+            k = int(keys.shape[0])
+            rows = (keys // n).astype(np.int64)
+            ja = (keys % n).astype(np.int32)
+            ia = np.zeros(n + 1, dtype=np.int32)
+            np.add.at(ia, rows + 1, 1)
+            ia = np.cumsum(ia, dtype=np.int32)
 
-    targets = np.empty(ne * edof * edof, dtype=np.int32)
-    diag = ii == jj
-    targets[diag] = ii[diag]
-    targets[low] = n + np.searchsorted(keys, ii[low] * n + jj[low])
-    up = ii < jj
-    targets[up] = n + k + np.searchsorted(keys, jj[up] * n + ii[up])
+            targets = np.empty(ne * edof * edof, dtype=np.int32)
+            diag = ii == jj
+            targets[diag] = ii[diag]
+            targets[low] = n + np.searchsorted(keys, ii[low] * n + jj[low])
+            up = ii < jj
+            targets[up] = n + k + np.searchsorted(keys,
+                                                  jj[up] * n + ii[up])
 
-    if coloring is None:
-        BUILD_COUNTS["element_coloring"] += 1
-        coloring = color_elements(conn, provider=coloring_provider)
+        if coloring is None:
+            BUILD_COUNTS.inc("element_coloring")
+            with obs.span("assembly.element_coloring",
+                          provider=coloring_provider):
+                coloring = color_elements(conn, provider=coloring_provider)
 
     # private-buffer grouping: contiguous element chunks (locality), padded
     # to a rectangular (B, epb) table with -1 sentinels

@@ -36,7 +36,6 @@ core, never the reverse at module load).
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import functools
 from typing import Callable, Dict, Optional, Tuple
@@ -46,8 +45,73 @@ from .plan import ExecutionPlan, kernel_window, register_path_name
 # Build probe: how many times each expensive structure precomputation ran.
 # Tests (and ops dashboards) diff these counters around a cache-hit path to
 # assert that no re-pack / re-partition / re-coloring happened.  (Re-exported
-# as ``schedule.BUILD_COUNTS`` — same Counter object.)
-BUILD_COUNTS = collections.Counter()
+# as ``schedule.BUILD_COUNTS`` — same object.)
+#
+# Since the obs spine landed this is a thin dict-like compat shim over the
+# real ``build_total{kind=...}`` counter family in ``repro.obs.REGISTRY``:
+# reads (``BUILD_COUNTS['pack']``, ``dict(BUILD_COUNTS)``, ``.items()``)
+# behave exactly like the old collections.Counter, and the build sites call
+# ``BUILD_COUNTS.inc(kind)``.  Direct item assignment (the old
+# ``BUILD_COUNTS[k] += 1`` pattern) still works but is deprecated — it warns and will be removed once
+# external probes migrate to ``obs.counter('build_total', kind=...)``.
+class BuildCounts:
+    """Counter-compatible view over the ``build_total`` metric family."""
+
+    FAMILY = "build_total"
+    _HELP = ("expensive structure precomputations (pack / partition / "
+             "coloring / shard layouts) that actually ran")
+
+    def _family(self):
+        from repro import obs
+        return obs.REGISTRY.family(self.FAMILY, "counter", ("kind",),
+                                   help=self._HELP)
+
+    def inc(self, kind: str, v: int = 1):
+        """Record ``v`` builds of this kind.  Counts even when metrics
+        are disabled: the probe is a correctness assertion, not
+        telemetry."""
+        self._family().labels(kind=kind).inc_always(v)
+
+    def __getitem__(self, kind: str) -> int:
+        child = self._family().children.get((str(kind),))
+        return 0 if child is None else int(child.value)
+
+    def __setitem__(self, kind: str, v):
+        import warnings
+        warnings.warn(
+            "direct BUILD_COUNTS mutation is deprecated; use "
+            "BUILD_COUNTS.inc(kind) or obs.counter('build_total', ...)",
+            DeprecationWarning, stacklevel=2)
+        self._family().labels(kind=kind).set_always(v)
+
+    def get(self, kind: str, default: int = 0) -> int:
+        v = self[kind]
+        return v if (str(kind),) in self._family().children else default
+
+    def keys(self):
+        return [k for (k,) in self._family().children]
+
+    def values(self):
+        return [int(c.value) for c in self._family().children.values()]
+
+    def items(self):
+        return [(k, int(c.value))
+                for (k,), c in self._family().children.items()]
+
+    def __iter__(self):
+        return iter(self.keys())
+
+    def __len__(self) -> int:
+        return len(self._family().children)
+
+    def __contains__(self, kind) -> bool:
+        return (str(kind),) in self._family().children
+
+    def __repr__(self) -> str:
+        return f"BuildCounts({dict(self.items())!r})"
+
+
+BUILD_COUNTS = BuildCounts()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -309,7 +373,7 @@ def _kernel_build(M, plan, coloring=None) -> dict:
         raise ValueError(
             "kernel path packs the square CSRC part only; "
             "use 'segment' for rectangular matrices")
-    BUILD_COUNTS["pack"] += 1
+    BUILD_COUNTS.inc("pack")
     return {"pack": blockell.pack(M, tm=plan.tm, k_step=plan.k_step,
                                   w_cap=plan.w_cap,
                                   dtype=_value_dtype_of(plan),
@@ -426,7 +490,7 @@ def _colorful_build(M, plan, coloring=None) -> dict:
             "colorful path covers the square CSRC part only; "
             "use 'segment' for rectangular matrices")
     if coloring is None:
-        BUILD_COUNTS["coloring"] += 1
+        BUILD_COUNTS.inc("coloring")
         col = color_rows(M, provider=plan.coloring)
     else:
         col = coloring
@@ -529,7 +593,7 @@ def _flat_build(M, plan, coloring=None) -> dict:
         raise ValueError(
             "flat path packs the square CSRC part only; "
             "use 'segment' for rectangular matrices")
-    BUILD_COUNTS["flat_pack"] += 1
+    BUILD_COUNTS.inc("flat_pack")
     return {"flat_pack": flat_mod.pack_flat(
         M, tm=plan.tm, ks=plan.k_step_sublanes, w_cap=plan.w_cap,
         dtype=_value_dtype_of(plan),
@@ -762,7 +826,7 @@ def _nnzsplit_build(M, plan, coloring=None) -> dict:
         raise ValueError(
             "nnzsplit path chunks the square CSRC part only; "
             "use 'segment' for rectangular matrices")
-    BUILD_COUNTS["nnzsplit_pack"] += 1
+    BUILD_COUNTS.inc("nnzsplit_pack")
     return {"nnzsplit_pack": nz_mod.pack_nnzsplit(
         M, ks=plan.k_step_sublanes, r_cap=plan.w_cap,
         dtype=_value_dtype_of(plan),

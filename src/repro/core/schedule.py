@@ -232,20 +232,23 @@ def build_schedule(M: CSRC, plan: ExecutionPlan, p: int = 8,
     plans on rectangular matrices.
     """
     from .tuner import fingerprint as _fingerprint   # local: avoid cycle
+    from repro import obs
 
     entry = paths_mod.get_path(plan.path)
     # build the path artifact first: infeasible plans raise before any
     # build counter moves
-    fields = entry.build_artifact(M, plan, coloring=coloring)
+    with obs.span("schedule.build_artifact", path=plan.path):
+        fields = entry.build_artifact(M, plan, coloring=coloring)
 
-    BUILD_COUNTS["schedule"] += 1
-    BUILD_COUNTS["partition"] += 1
-    p = max(1, min(p, M.n))
-    if plan.partition == "count":
-        part = partition_rows_by_count(M, p)
-    else:
-        part = partition_rows_by_nnz(M, p)
-    halo = np.asarray(halo_widths(part), dtype=np.int64)
+    BUILD_COUNTS.inc("schedule")
+    BUILD_COUNTS.inc("partition")
+    with obs.span("schedule.partition", partition=plan.partition):
+        p = max(1, min(p, M.n))
+        if plan.partition == "count":
+            part = partition_rows_by_count(M, p)
+        else:
+            part = partition_rows_by_nnz(M, p)
+        halo = np.asarray(halo_widths(part), dtype=np.int64)
 
     return SpmvSchedule(
         fingerprint=_fingerprint(M), value_digest=value_digest(M),
@@ -272,7 +275,7 @@ def refresh_schedule(sched: SpmvSchedule, M: CSRC) -> SpmvSchedule:
             "refresh_schedule: matrix structure differs from the "
             "schedule's; a full rebuild (build_schedule) is required")
     entry = paths_mod.get_path(sched.plan.path)
-    BUILD_COUNTS["value_refresh"] += 1
+    BUILD_COUNTS.inc("value_refresh")
     fields = ({} if entry.refresh_values is None
               else entry.refresh_values(M, sched))
     return dataclasses.replace(sched, value_digest=value_digest(M),
@@ -302,6 +305,9 @@ def schedule_for(M: CSRC, plan: ExecutionPlan, cache=None, p: int = 8,
         return hit
     base = cache.find_schedule_by_structure(fp, structure_digest(M), plan, p)
     if base is not None:
+        from repro import obs
+        obs.counter("plan_cache_lookups_total", kind="schedule",
+                    outcome="refresh").inc()
         sched = refresh_schedule(base, M)
         # the refreshed generation supersedes the base in memory (one
         # schedule per structure, not one per step); the npz already on
@@ -469,7 +475,7 @@ def build_sharded_slots(M: CSRC, part: RowPartition,
     if shipped is not None:
         _SHARDED_SLOTS_MEMO[memo_key] = shipped
         return shipped
-    BUILD_COUNTS["sharded_slots"] += 1
+    BUILD_COUNTS.inc("sharded_slots")
     p = part.p
     ros = row_of_slot(M)
     ja = np.asarray(M.ja)
@@ -539,7 +545,7 @@ def build_halo_layout(M: CSRC, p: int, cache=None) -> HaloLayout:
     if shipped is not None:
         _HALO_LAYOUT_MEMO[memo_key] = shipped
         return shipped
-    BUILD_COUNTS["halo_layout"] += 1
+    BUILD_COUNTS.inc("halo_layout")
     n = M.n
     ns = _round_up(-(-n // p), 8)          # rows per shard
     n_pad = ns * p
@@ -632,7 +638,7 @@ def build_path_shards(M: CSRC, part: RowPartition, plan: ExecutionPlan,
     if shipped is not None:
         memo[memo_key] = shipped
         return shipped
-    BUILD_COUNTS[kind] += 1
+    BUILD_COUNTS.inc(kind)
     out = sup.pack_shards(M, np.asarray(part.starts), plan)
     memo[memo_key] = out
     if key is not None:
@@ -659,7 +665,7 @@ def build_path_halo(M: CSRC, p: int, plan: ExecutionPlan, cache=None):
     if shipped is not None:
         memo[memo_key] = shipped
         return shipped
-    BUILD_COUNTS[kind] += 1
+    BUILD_COUNTS.inc(kind)
     out = sup.pack_halo(M, p, plan)
     memo[memo_key] = out
     if key is not None:
@@ -693,7 +699,7 @@ def refresh_shard_layout(lay, M: CSRC, part: Optional[RowPartition] = None):
     ``part`` is required for the partition-keyed shards layouts
     (FlatShards, NnzSplitShards, ... — they do not embed their partition
     boundaries)."""
-    BUILD_COUNTS["shard_value_refresh"] += 1
+    BUILD_COUNTS.inc("shard_value_refresh")
     if isinstance(lay, ShardedSlots):
         return _refresh_sharded_slots(lay, M)
     if isinstance(lay, HaloLayout):

@@ -58,6 +58,7 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro import obs
 from . import paths as paths_mod
 from .csrc import CSRC, bandwidth as csrc_bandwidth, nnz_per_row
 from .plan import ExecutionPlan, feasible, kernel_window
@@ -410,8 +411,20 @@ class PlanCache:
         e = self.entries.get(fp)
         if e is None or (require_measured and not e.get("measured")):
             self.misses += 1
+            obs.counter("plan_cache_lookups_total", kind="plan",
+                        outcome="miss").inc()
             return None
         self.hits += 1
+        obs.counter("plan_cache_lookups_total", kind="plan",
+                    outcome="hit").inc()
+        env = e.get("env")
+        if env:
+            # a winner measured under a different toolchain/device is
+            # identifiable; loading one bumps the warning counter per
+            # disagreeing field (git SHA excluded — see obs.provenance)
+            for field in obs.env_mismatches(env):
+                obs.counter("plan_cache_env_mismatch_total",
+                            field=field).inc()
         return ExecutionPlan.from_dict(e["plan"])
 
     def put(self, fp: str, plan: ExecutionPlan,
@@ -421,9 +434,12 @@ class PlanCache:
         """``predictions_s`` (plan key -> analytic seconds) and
         ``roofline`` ({'predicted_ms', 'measured_ms', 'roofline_fraction'}
         of the winner) are the predict-then-measure provenance: the cache
-        records what the cost model claimed next to what the clock said."""
+        records what the cost model claimed next to what the clock said —
+        and ``env`` records which jax/device/git environment measured it
+        (obs.environment_provenance)."""
         entry: Dict = {"plan": plan.to_dict(),
-                       "measured": bool(timings_s)}
+                       "measured": bool(timings_s),
+                       "env": dict(obs.environment_provenance())}
         if timings_s:
             entry["timings_us"] = {k: round(v * 1e6, 3)
                                    for k, v in timings_s.items()}
@@ -471,8 +487,12 @@ class PlanCache:
                     self.schedules[key] = sched
         if sched is None:
             self.schedule_misses += 1
+            obs.counter("plan_cache_lookups_total", kind="schedule",
+                        outcome="miss").inc()
             return None
         self.schedule_hits += 1
+        obs.counter("plan_cache_lookups_total", kind="schedule",
+                    outcome="hit").inc()
         return sched
 
     def put_schedule(self, sched, persist: bool = True):
@@ -544,8 +564,12 @@ class PlanCache:
                     self.shard_layouts[key] = lay
         if lay is None:
             self.shard_layout_misses += 1
+            obs.counter("plan_cache_lookups_total", kind="shard_layout",
+                        outcome="miss").inc()
             return None
         self.shard_layout_hits += 1
+        obs.counter("plan_cache_lookups_total", kind="shard_layout",
+                    outcome="hit").inc()
         return lay
 
     def put_shard_layout(self, key: str, lay, persist: bool = True):
@@ -584,8 +608,12 @@ class PlanCache:
                     self.assembly_schedules[key] = sched
         if sched is None:
             self.assembly_misses += 1
+            obs.counter("plan_cache_lookups_total", kind="assembly",
+                        outcome="miss").inc()
             return None
         self.assembly_hits += 1
+        obs.counter("plan_cache_lookups_total", kind="assembly",
+                    outcome="hit").inc()
         return sched
 
     def put_assembly_schedule(self, sched):
@@ -744,6 +772,7 @@ def tune(M: CSRC,
     else:
         pool = [p for p in cands
                 if feasible(p, n=M.n, m=M.m, bandwidth=stats.bandwidth)]
+        obs.counter("tuner_candidates_enumerated_total").inc(len(pool))
         est_by_key: Dict[str, object] = {}
         if predict and pool:
             from repro.roofline import cost_model
@@ -764,15 +793,25 @@ def tune(M: CSRC,
                 if p.path not in seen_paths:
                     seen_paths.add(p.path)
                     pool.append(p)
+            pruned = len(ranked) - len(pool)
+            obs.counter("tuner_candidates_pruned_total").inc(pruned)
+            if ranked:
+                # predict-then-measure savings: fraction of the feasible
+                # pool the roofline ranking removed from the clock
+                obs.gauge("tuner_predict_measure_savings").set(
+                    pruned / len(ranked))
         best_plan, best_t, best_raw, best_op = None, float("inf"), None, None
         for p in pool:
-            try:
-                op = SpmvOperator.from_plan(M, p, interpret=interpret)
-            except ValueError:
-                continue          # pack-time infeasibility (bandwidth gate)
-            if p.value_dtype != "float32" and not _accuracy_ok(op, p.nrhs):
-                continue          # precision trade failed the gate
-            t = float(measure(op, _x_for(p.nrhs)))
+            with obs.span("tune.measure", plan=p.key()):
+                try:
+                    op = SpmvOperator.from_plan(M, p, interpret=interpret)
+                except ValueError:
+                    continue      # pack-time infeasibility (bandwidth gate)
+                if (p.value_dtype != "float32"
+                        and not _accuracy_ok(op, p.nrhs)):
+                    continue      # precision trade failed the gate
+                t = float(measure(op, _x_for(p.nrhs)))
+            obs.counter("tuner_candidates_measured_total").inc()
             timings[p.key()] = t
             # argmin on per-RHS-column time: an nrhs=8 candidate does 8x
             # the work of a single product, so raw runtimes are not
@@ -787,6 +826,8 @@ def tune(M: CSRC,
         est = est_by_key.get(best_plan.key())
         if est is not None and best_raw:
             winner_frac = est.predicted_s / best_raw
+            obs.gauge("tuner_winner_roofline_fraction",
+                      path=best_plan.path).set(winner_frac)
             roofline_entry = {
                 "predicted_ms": round(est.predicted_s * 1e3, 6),
                 "measured_ms": round(best_raw * 1e3, 6),
@@ -888,7 +929,9 @@ def tune_mesh(M: CSRC, p: int,
                                     interpret=interpret)
         except ValueError:
             continue              # halo band gate / window over cap
-        t = float(measure(fn, _x_for(cand.nrhs)))
+        with obs.span("tune.measure_mesh", plan=cand.key(), p=p):
+            t = float(measure(fn, _x_for(cand.nrhs)))
+        obs.counter("tuner_candidates_measured_total").inc()
         timings[cand.key()] = t
         t_norm = t / cand.nrhs
         if t_norm < best_t:

@@ -1,0 +1,88 @@
+"""Environment provenance: which toolchain/devices produced a cached
+tuning decision.
+
+``environment_provenance()`` returns a small JSON-safe dict (jax version,
+backend, device kind/count, git SHA, python version) that
+:class:`~repro.core.tuner.PlanCache` stores next to every entry's
+``predicted_ms``/``measured_ms`` — a cached winner measured on different
+hardware is identifiable, and loading one increments the
+``plan_cache_env_mismatch_total{field=...}`` warning counter (the git SHA
+is recorded for identification but not treated as a mismatch: winners
+stay valid across commits, not across device kinds).
+
+jax is imported lazily and failure-tolerated so the obs package itself
+stays dependency-free.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import platform
+import subprocess
+from typing import Dict, Optional
+
+# env fields whose disagreement means the measurement environment changed
+# (the git SHA deliberately excluded — see module docstring)
+MISMATCH_FIELDS = ("jax", "backend", "device_kind", "device_count")
+
+
+def _repo_root() -> Optional[str]:
+    d = os.path.dirname(os.path.abspath(__file__))
+    for _ in range(8):
+        if os.path.isdir(os.path.join(d, ".git")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            return None
+        d = parent
+    return None
+
+
+@functools.lru_cache(maxsize=1)
+def git_sha() -> str:
+    """Current commit SHA: ``REPRO_GIT_SHA`` env override (CI images
+    without a .git dir), else ``git rev-parse HEAD``, else 'unknown'."""
+    sha = os.environ.get("REPRO_GIT_SHA")
+    if sha:
+        return sha
+    root = _repo_root()
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=root or os.getcwd(),
+            capture_output=True, text=True, timeout=10)
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except Exception:
+        pass
+    return "unknown"
+
+
+@functools.lru_cache(maxsize=1)
+def environment_provenance() -> Dict[str, object]:
+    info: Dict[str, object] = {
+        "python": platform.python_version(),
+        "git_sha": git_sha(),
+    }
+    try:
+        import jax
+        info["jax"] = jax.__version__
+        devs = jax.devices()
+        info["backend"] = devs[0].platform
+        info["device_kind"] = str(getattr(devs[0], "device_kind",
+                                          devs[0].platform))
+        info["device_count"] = len(devs)
+    except Exception:                 # jax missing or backend init failed
+        info.update({"jax": None, "backend": None,
+                     "device_kind": None, "device_count": None})
+    return info
+
+
+def env_mismatches(recorded: Dict[str, object]) -> Dict[str, object]:
+    """Fields of a recorded provenance dict that disagree with the
+    current environment: ``{field: (recorded, current)}``."""
+    cur = environment_provenance()
+    out = {}
+    for k in MISMATCH_FIELDS:
+        if k in recorded and str(recorded[k]) != str(cur.get(k)):
+            out[k] = (recorded[k], cur.get(k))
+    return out

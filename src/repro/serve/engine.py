@@ -25,11 +25,14 @@ The decode step is the same function the launch layer lowers for the
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 
 @dataclasses.dataclass
@@ -135,6 +138,7 @@ class SpmvRequest:
     uid: int
     matrix_id: str
     x: np.ndarray
+    t_submit: float = 0.0         # perf_counter at submit (0 = unknown)
 
 
 class SpmvResult(np.ndarray):
@@ -149,10 +153,12 @@ class SpmvResult(np.ndarray):
       mesh_p      shard count (1 for local)
       executor    executor kind that ran it
       batched     how many requests shared the coalesced SpMM
+      timings     {'queue_wait_s', 'execute_s'} for this request (None
+                  when the engine was constructed before timing landed)
     """
 
     _META = ("matrix_id", "plan_key", "path", "strategy", "mesh_p",
-             "executor", "batched")
+             "executor", "batched", "timings")
 
     def __array_finalize__(self, obj):
         for k in self._META:
@@ -256,10 +262,13 @@ class SpmvServingEngine:
                 f"x has shape {x.shape}, matrix {matrix_id!r} needs ({m},)")
         uid = self._uid
         self._uid += 1
-        self.queue.append(SpmvRequest(uid=uid, matrix_id=matrix_id, x=x))
+        obs.counter("serve_requests_total", matrix_id=matrix_id).inc()
+        self.queue.append(SpmvRequest(uid=uid, matrix_id=matrix_id, x=x,
+                                      t_submit=time.perf_counter()))
         return uid
 
-    def _wrap(self, y, matrix_id: str, batched: int) -> SpmvResult:
+    def _wrap(self, y, matrix_id: str, batched: int,
+              timings=None) -> SpmvResult:
         """Attach per-request plan/strategy metadata to a result array."""
         ex = self._ops[matrix_id]
         plan = getattr(ex, "plan", None)
@@ -271,6 +280,7 @@ class SpmvServingEngine:
         r.mesh_p = getattr(plan, "mesh_p", 1)
         r.executor = getattr(ex, "kind", "local")
         r.batched = batched
+        r.timings = timings
         return r
 
     def step(self) -> Dict[int, SpmvResult]:
@@ -278,6 +288,7 @@ class SpmvServingEngine:
         coalesced into a single batched SpMM through the chosen executor
         (every registered path executes blocks natively, locally or on
         the mesh)."""
+        t_tick = time.perf_counter()
         by_matrix: Dict[str, List[SpmvRequest]] = {}
         rest: List[SpmvRequest] = []
         for r in self.queue:
@@ -288,17 +299,52 @@ class SpmvServingEngine:
                 rest.append(r)
         self.queue = rest
         out: Dict[int, SpmvResult] = {}
-        for mid, group in by_matrix.items():
-            op = self._ops[mid]
-            if len(group) == 1:
-                out[group[0].uid] = self._wrap(
-                    op(jnp.asarray(group[0].x)), mid, batched=1)
-            else:
-                X = jnp.asarray(np.stack([r.x for r in group], axis=1))
-                Y = np.asarray(op(X))
-                for i, r in enumerate(group):
-                    out[r.uid] = self._wrap(Y[:, i], mid,
-                                            batched=len(group))
+        with obs.span("serve.tick", groups=len(by_matrix)):
+            for mid, group in by_matrix.items():
+                op = self._ops[mid]
+                plan = getattr(op, "plan", None)
+                t0 = time.perf_counter()
+                if len(group) == 1:
+                    Y = np.asarray(op(jnp.asarray(group[0].x)))
+                else:
+                    X = jnp.asarray(np.stack([r.x for r in group], axis=1))
+                    Y = np.asarray(op(X))
+                dt = time.perf_counter() - t0
+                if obs.STATE.enabled:
+                    lbl = dict(matrix_id=mid,
+                               path=getattr(plan, "path", None),
+                               variant=getattr(plan, "variant", None),
+                               strategy=getattr(plan, "strategy", "local"),
+                               nrhs=len(group))
+                    obs.histogram("serve_execute_seconds",
+                                  **lbl).observe(dt)
+                    obs.histogram("serve_batch_size",
+                                  _buckets=obs.log_buckets(1.0, 1024.0, 2),
+                                  matrix_id=mid).observe(len(group))
+                    for r in group:
+                        if r.t_submit:
+                            obs.histogram(
+                                "serve_queue_wait_seconds", matrix_id=mid,
+                            ).observe(max(0.0, t0 - r.t_submit))
+                if len(group) == 1:
+                    timings = {"queue_wait_s":
+                               (max(0.0, t0 - group[0].t_submit)
+                                if group[0].t_submit else None),
+                               "execute_s": dt}
+                    out[group[0].uid] = self._wrap(Y, mid, batched=1,
+                                                   timings=timings)
+                else:
+                    for i, r in enumerate(group):
+                        timings = {"queue_wait_s":
+                                   (max(0.0, t0 - r.t_submit)
+                                    if r.t_submit else None),
+                                   "execute_s": dt}
+                        out[r.uid] = self._wrap(Y[:, i], mid,
+                                                batched=len(group),
+                                                timings=timings)
+        if obs.STATE.enabled:
+            obs.histogram("serve_tick_seconds").observe(
+                time.perf_counter() - t_tick)
         return out
 
     def run_until_drained(self, max_ticks: int = 1000) -> Dict[int, SpmvResult]:
