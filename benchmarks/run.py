@@ -25,11 +25,17 @@
                       results/BENCH_nnzsplit.json (the CI bench-smoke job
                       asserts nnzsplit is selected and streams fewer
                       bytes than either windowed grid)
-  assembly            FEM assembly (repro.assembly): colored vs
-                      private-buffer vs serial-oracle scatter per mesh
-                      generator + the assemble→tune→solve pipeline —
-                      written to results/BENCH_assembly.json (CI asserts
-                      the strategies match the oracle bit-for-bit)
+  assembly            FEM assembly (repro.assembly): per mesh generator,
+                      every (strategy, variant) scatter executor —
+                      fused colored-batch kernels (stream/onehot), the
+                      per-color XLA baseline, sorted-slot, private
+                      buffers, serial oracle — steady-state time +
+                      predicted roofline fraction per row, plus the
+                      tune_assembly winner and the assemble→tune→solve
+                      pipeline — written to results/BENCH_assembly.json
+                      (CI asserts bit-identity everywhere and that a
+                      Pallas strategy beats the per-color baseline on
+                      the tet mesh)
   serving             local vs mesh serving engines (repro.serve) on 8
                       forced host devices in a subprocess: mesh-aware
                       tuning of the per-(matrix, p) winner, register
@@ -494,58 +500,109 @@ def nnzsplit_unstructured(small: bool):
 def assembly(small: bool):
     """Conflict-free CSRC assembly (repro.assembly): per mesh generator,
     the one-time AssemblySchedule build vs the per-step value scatter of
-    each accumulation strategy (colored permutation writes, private
-    buffers + reduce, serial numpy oracle).  The colored and private
-    results must equal the oracle bit-for-bit (dyadic stiffness) — the CI
-    assembly smoke asserts it from results/BENCH_assembly.json.  Ends
-    with the assemble→tune→solve pipeline on the tri mesh."""
+    every (strategy, variant) executor — the fused colored-batch Pallas
+    kernels (stream/onehot), the legacy per-color XLA baseline, the
+    sorted-slot single segment-sum, private buffers + reduce, and the
+    serial numpy oracle — each row carrying its predicted roofline
+    fraction.  Every executor must equal the oracle bit-for-bit (dyadic
+    stiffness) and a fused kernel must beat the per-color baseline on
+    the tet mesh — the CI assembly smoke asserts both from
+    results/BENCH_assembly.json.  Ends with the tune_assembly winner per
+    mesh and the assemble→tune→solve pipeline on the tri mesh."""
     from repro.assembly import (assembly_schedule_for, mesh as amesh,
                                 scatter_colored, scatter_private,
-                                scatter_serial, values_to_csrc)
+                                scatter_serial, scatter_sorted,
+                                tune_assembly, values_to_csrc)
     from repro.core.solvers import cg_solve
 
-    print("# assembly: colored vs private-buffer vs serial oracle "
-          "(build split from per-step scatter)")
+    print("# assembly: fused kernels vs per-color baseline vs serial "
+          "oracle (build split from per-step scatter)")
     s = 12 if small else 40
     meshes = [(name, gen(s)) for name, gen in amesh.MESH_GENERATORS]
     records = []
     cache = tuner.PlanCache()
+    combos = (("colored", "stream",
+               lambda sc: jax.jit(lambda k: scatter_colored(sc, k))),
+              ("colored", "onehot",
+               lambda sc: jax.jit(
+                   lambda k: scatter_colored(sc, k, variant="onehot"))),
+              ("colored", "percolor",
+               lambda sc: jax.jit(
+                   lambda k: scatter_colored(sc, k, variant="percolor"))),
+              ("sorted", "stream",
+               lambda sc: jax.jit(lambda k: scatter_sorted(sc, k))),
+              ("private", "vmap",
+               lambda sc: jax.jit(lambda k: scatter_private(sc, k))))
     for name, mesh in meshes:
         ke = amesh.poisson_stiffness(mesh, mass=1.0)
         t0 = time.perf_counter()
         sched = assembly_schedule_for(mesh, cache=cache)
         t_build = time.perf_counter() - t0
         ref = scatter_serial(sched, ke)
-        times, match = {}, {}
+        col = sched.coloring
         kej = jnp.asarray(ke)
-        for label, fn in (("colored", jax.jit(
-                              lambda k: scatter_colored(sched, k))),
-                          ("private", jax.jit(
-                              lambda k: scatter_private(sched, k)))):
-            t = time_fn(fn, kej)
+        times, match = {}, {}
+        for strategy, variant, make_fn in combos:
+            key = f"{strategy}/{variant}"
+            fn = make_fn(sched)
+            t = steady_state(fn, kej, warmup=2, repeats=5,
+                             name="assembly.scatter", matrix=name,
+                             strategy=strategy, variant=variant)
             vals = np.asarray(fn(kej))
-            times[label] = t
-            match[label] = bool(np.array_equal(vals, ref))
-        times["serial"] = steady_state(
+            times[key] = t
+            match[key] = bool(np.array_equal(vals, ref))
+            est = cost_model.assembly_cost(sched, strategy, variant)
+            frac = cost_model.roofline_fraction(est, t)
+            row(f"assembly/{name}/{strategy}_{variant}", t * 1e6,
+                f"build_us={t_build*1e6:.1f};ne={sched.ne};"
+                f"colors={col.num_colors};matches_serial={match[key]};"
+                f"roofline_fraction={frac:.2e}")
+            records.append({
+                "mesh": name, "ne": sched.ne, "n": sched.n,
+                "k": sched.k, "colors": int(col.num_colors),
+                "strategy": strategy, "variant": variant,
+                "us": round(t * 1e6, 1),
+                "matches_serial": match[key],
+                "predicted_ms": round(est.predicted_s * 1e3, 6),
+                "bound": est.bound,
+                "roofline_fraction": frac,
+                "index_dtypes": sched.index_dtypes,
+                "build_us": round(t_build * 1e6, 1),
+            })
+        t_serial = steady_state(
             lambda: scatter_serial(sched, ke), warmup=0, repeats=5,
             name="assembly.serial_oracle", matrix=name)
-        col = sched.coloring
-        for label in ("colored", "private", "serial"):
-            extra = ("" if label == "serial"
-                     else f";matches_serial={match[label]}")
-            row(f"assembly/{name}/{label}", times[label] * 1e6,
-                f"build_us={t_build*1e6:.1f};ne={sched.ne};"
-                f"colors={col.num_colors}{extra}")
+        row(f"assembly/{name}/serial_numpy", t_serial * 1e6,
+            f"ne={sched.ne};oracle=True")
+        records.append({"mesh": name, "strategy": "serial",
+                        "variant": "numpy",
+                        "us": round(t_serial * 1e6, 1),
+                        "matches_serial": True})
+        # per-mesh summary: does a fused Pallas strategy beat the
+        # per-color XLA baseline?  (the CI tet assertion)
+        pallas = {k: v for k, v in times.items()
+                  if k in ("colored/stream", "colored/onehot",
+                           "sorted/stream")}
+        best_key = min(pallas, key=pallas.get)
+        res = tune_assembly(sched, ke, cache=cache, repeats=3)
         records.append({
-            "mesh": name, "ne": sched.ne, "n": sched.n, "k": sched.k,
-            "colors": int(col.num_colors),
-            "build_us": round(t_build * 1e6, 1),
-            "colored_us": round(times["colored"] * 1e6, 1),
-            "private_us": round(times["private"] * 1e6, 1),
-            "serial_us": round(times["serial"] * 1e6, 1),
-            "colored_matches_serial": match["colored"],
-            "private_matches_serial": match["private"],
+            "mesh": name, "summary": True,
+            "best_pallas": best_key,
+            "best_pallas_us": round(pallas[best_key] * 1e6, 1),
+            "percolor_us": round(times["colored/percolor"] * 1e6, 1),
+            "pallas_beats_percolor": bool(
+                pallas[best_key] < times["colored/percolor"]),
+            "speedup_vs_percolor": round(
+                times["colored/percolor"] / pallas[best_key], 2),
+            "all_match_serial": all(match.values()),
+            "tuned": res.key(),
+            "tuned_roofline_fraction": res.roofline_fraction.get(
+                res.key()),
         })
+        row(f"assembly/{name}/summary", pallas[best_key] * 1e6,
+            f"best={best_key};speedup_vs_percolor="
+            f"{times['colored/percolor'] / pallas[best_key]:.2f};"
+            f"tuned={res.key()}")
     # assemble -> tune -> solve (the end-to-end acceptance demo)
     mesh = meshes[0][1]
     sched = assembly_schedule_for(mesh, cache=cache)

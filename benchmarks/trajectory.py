@@ -59,6 +59,17 @@ def fold_benches() -> Dict[str, Dict]:
                   and r.get("matrix")}
         if steady:
             summ["steady_us_per_tick"] = steady
+        if name == "assembly":
+            # per-mesh winner of the fused assembly-scatter bake-off:
+            # {mesh: {best_pallas, speedup_vs_percolor, tuned}}
+            asm = {r["mesh"]: {
+                       "best_pallas": r.get("best_pallas"),
+                       "speedup_vs_percolor": r.get("speedup_vs_percolor"),
+                       "tuned": r.get("tuned")}
+                   for r in rows if isinstance(r, dict) and r.get("summary")
+                   and r.get("mesh")}
+            if asm:
+                summ["assembly"] = asm
         out[name] = summ
     return out
 

@@ -12,7 +12,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.assembly import (assemble, assembly_schedule_for, mesh as amesh,
-                            scatter_serial)
+                            scatter_serial, tune_assembly)
 from repro.core import csrc, schedule as S, tuner
 from repro.core.solvers import cg_solve
 
@@ -34,15 +34,20 @@ def main():
           f"colors={sched.coloring.num_colors} "
           f"({(time.perf_counter()-t0)*1e3:.1f} ms)")
 
-    # --- assemble (colored, conflict-free) and check against the oracle ---
+    # --- pick the scatter executor, assemble, check against the oracle ---
     ke = amesh.poisson_stiffness(mesh, mass=1.0)
-    M = assemble(sched, ke, strategy="colored")
+    ares = tune_assembly(sched, ke, cache=cache)
+    frac = ares.roofline_fraction.get(ares.key(), 0.0)
+    print(f"[tune_assembly] winner={ares.key()} "
+          f"roofline_fraction={frac:.2f} "
+          f"({len(ares.timings_s)} candidates measured)")
+    M = assemble(sched, ke, strategy=ares.strategy, variant=ares.variant)
     oracle = scatter_serial(sched, ke)
     exact = np.array_equal(
         np.concatenate([np.asarray(M.ad), np.asarray(M.al),
                         np.asarray(M.au)]), oracle)
     print(f"[assemble] nnz={M.nnz} band={csrc.bandwidth(M)} "
-          f"colored==serial: {exact}")
+          f"{ares.key()}==serial: {exact}")
 
     # --- tune, then solve through the shared cache ---
     res = tuner.tune(M, cache=cache)
@@ -61,7 +66,8 @@ def main():
     for step in range(1, args.steps + 1):
         before = dict(S.BUILD_COUNTS)
         ke_t = amesh.poisson_stiffness(mesh, mass=1.0 + 0.5 * step)
-        M_t = assemble(sched, ke_t, strategy="colored")
+        M_t = assemble(sched, ke_t, strategy=ares.strategy,
+                       variant=ares.variant)
         op.update_values(M_t)
         delta = {k: v - before.get(k, 0) for k, v in S.BUILD_COUNTS.items()
                  if v - before.get(k, 0)}

@@ -10,7 +10,16 @@ that vector and the two race-avoidance families of the paper map exactly:
 
   colored   per-color batched scatter (elements of one color share no
             DOF ⇒ within a color every target is written once ⇒ a
-            permutation write, like the colorful SpMV path §3.2)
+            permutation write, like the colorful SpMV path §3.2).
+            Executed by the fused colored-batch kernels of
+            ``repro.kernels.assembly_scatter`` (stream/onehot variants,
+            one launch total); the legacy one-XLA-scatter-per-color
+            discipline survives as ``variant='percolor'`` — the
+            baseline the kernels are benchmarked against
+  sorted    contributions pre-sorted by destination slot at
+            schedule-build time, so assembly is ONE color-free
+            monotone segment-sum (the atomics-style GPU assembly
+            format of arXiv:2012.00585, docs/DESIGN.md §10)
   private   per-buffer full-length partials reduced at the end (the
             local-buffers / all-in-one accumulation family §3.1)
   serial    numpy ``np.add.at`` in element order — the ground-truth
@@ -34,7 +43,8 @@ import dataclasses
 import hashlib
 import json
 import os
-from typing import Optional, Union
+import time
+from typing import Dict, Optional, Tuple, Union
 
 import numpy as np
 import jax
@@ -46,15 +56,33 @@ from repro.core.coloring import Coloring
 # builds count into the same Counter the SpMV schedule layer uses
 from repro.core.paths import BUILD_COUNTS
 from repro import obs
+from repro.kernels import assembly_scatter as akern
+from repro.kernels.assembly_scatter import COLORED_VARIANTS  # noqa: F401
 from .conflict import color_elements, element_dofs
 from .mesh import Mesh
 
-# version 2: the element coloring records its provider ('greedy'|'race')
-# plus the RACE level-group metadata; non-greedy providers join the cache
-# key.  Version-1 files load as misses and are rebuilt transparently.
-ASSEMBLY_VERSION = 2
+# version 3: the schedule carries the kernel slot packs — per-color
+# (slots, targets) streams and the destination-sorted permutation — with
+# overflow-gated int16 index dtypes.  Version-2 files load as misses and
+# are rebuilt transparently (version 2 added the coloring provider).
+ASSEMBLY_VERSION = 3
 
-STRATEGIES = ("colored", "private", "serial")
+STRATEGIES = ("colored", "sorted", "private", "serial")
+
+# the (strategy, variant) pool tune_assembly prices and measures; variant
+# labels the executor ('percolor' = the legacy one-scatter-per-color
+# XLA baseline, 'vmap'/'numpy' are the single executors of their strategy)
+ASSEMBLY_CANDIDATES = (
+    ("colored", "stream"), ("colored", "onehot"), ("colored", "percolor"),
+    ("sorted", "stream"), ("private", "vmap"))
+
+_DEFAULT_VARIANT = {"colored": "stream", "sorted": "stream",
+                    "private": "vmap", "serial": "numpy"}
+
+# int16 index streams iff every representable value (including the
+# sentinel one past the real range) fits — same overflow gate as the
+# SpMV window streams (core/blockell.pack)
+_INT16_MAX = np.iinfo(np.int16).max
 
 
 def assembly_key(digest: str, num_buffers: int,
@@ -84,11 +112,28 @@ class AssemblySchedule:
     targets: np.ndarray         # (ne·edof²,) int32
     coloring: Coloring          # element coloring (conflict.color_elements)
     buffer_elements: np.ndarray  # (num_buffers, epb) int32, -1 = padding
+    # --- kernel slot packs (version 3) -------------------------------
+    # per-color contribution streams, padded to a rectangular (C, Lmax)
+    # table: slots index the flat ke (sentinel = ne·edof², gathers an
+    # appended zero), targets index the unified vector (sentinel = size,
+    # the segment-sum drop slot).  int16 when the overflow gate allows.
+    color_slots: np.ndarray      # (C, Lmax) int16|int32
+    color_targets: np.ndarray    # (C, Lmax) int16|int32
+    # destination-sorted permutation of all contributions (sorted-slot
+    # strategy): perm gathers ke.flat, sorted_targets is monotone
+    sorted_perm: np.ndarray      # (ne·edof²,) int16|int32
+    sorted_targets: np.ndarray   # (ne·edof²,) int16|int32
 
     @property
     def size(self) -> int:
         """Length of the unified value vector."""
         return self.n + 2 * self.k
+
+    @property
+    def index_dtypes(self) -> Dict[str, str]:
+        """Gated dtypes of the kernel index streams (bench provenance)."""
+        return {"slots": str(self.color_slots.dtype),
+                "targets": str(self.color_targets.dtype)}
 
     def key(self) -> str:
         return assembly_key(self.structure_digest, self.num_buffers,
@@ -115,6 +160,10 @@ class AssemblySchedule:
             rows_by_color=np.asarray(self.coloring.rows_by_color),
             color_ptr=np.asarray(self.coloring.color_ptr),
             buffer_elements=np.asarray(self.buffer_elements),
+            color_slots=np.asarray(self.color_slots),
+            color_targets=np.asarray(self.color_targets),
+            sorted_perm=np.asarray(self.sorted_perm),
+            sorted_targets=np.asarray(self.sorted_targets),
         )
         # RACE level-group metadata survives the round-trip so reloaded
         # schedules keep the chunk-aware invariant verifiable
@@ -157,7 +206,11 @@ class AssemblySchedule:
                        num_buffers=meta["num_buffers"],
                        ia=z["ia"], ja=z["ja"], targets=z["targets"],
                        coloring=coloring,
-                       buffer_elements=z["buffer_elements"])
+                       buffer_elements=z["buffer_elements"],
+                       color_slots=z["color_slots"],
+                       color_targets=z["color_targets"],
+                       sorted_perm=z["sorted_perm"],
+                       sorted_targets=z["sorted_targets"])
 
 
 def structure_digest(conn: np.ndarray, ndof_per_node: int = 1,
@@ -172,6 +225,54 @@ def structure_digest(conn: np.ndarray, ndof_per_node: int = 1,
                          ndof_per_node], np.int64).tobytes())
     h.update(conn.tobytes())
     return h.hexdigest()[:16]
+
+
+def _index_dtype(max_value: int):
+    """Narrowest stream dtype that holds every value up to ``max_value``
+    (the sentinel, one past the real range) — the SpMV int16 overflow
+    gate applied to assembly index streams."""
+    return np.int16 if max_value <= _INT16_MAX else np.int32
+
+
+def _pack_colored(targets: np.ndarray, coloring: Coloring, edof2: int,
+                  size: int) -> Tuple[np.ndarray, np.ndarray]:
+    """The colored-batch kernel's (C, Lmax) slot/target streams.
+
+    Row c lists color c's contribution indices (element-major) and their
+    destinations, lane-aligned to a multiple of 128 and padded with the
+    sentinels the kernels drop (slot = G reads the appended zero, target
+    = size lands in the drop segment)."""
+    num_contribs = int(targets.size)
+    counts = [len(coloring.rows(c)) * edof2
+              for c in range(coloring.num_colors)]
+    lmax = max(128, -(-max(counts + [1]) // 128) * 128)
+    slot_dt = _index_dtype(num_contribs)
+    tgt_dt = _index_dtype(size)
+    color_slots = np.full((coloring.num_colors, lmax), num_contribs,
+                          dtype=slot_dt)
+    color_targets = np.full((coloring.num_colors, lmax), size,
+                            dtype=tgt_dt)
+    lane = np.arange(edof2, dtype=np.int64)
+    for c in range(coloring.num_colors):
+        els = np.asarray(coloring.rows(c), np.int64)
+        if els.size == 0:
+            continue
+        sl = (els[:, None] * edof2 + lane).reshape(-1)
+        color_slots[c, :sl.size] = sl.astype(slot_dt)
+        color_targets[c, :sl.size] = targets[sl].astype(tgt_dt)
+    return color_slots, color_targets
+
+
+def _pack_sorted(targets: np.ndarray,
+                 size: int) -> Tuple[np.ndarray, np.ndarray]:
+    """The sorted-slot strategy's destination order: a stable argsort of
+    the targets (build-time work) so the value refresh is one monotone
+    segment-sum with no coloring at all."""
+    num_contribs = int(targets.size)
+    perm = np.argsort(targets, kind="stable")
+    sorted_perm = perm.astype(_index_dtype(num_contribs))
+    sorted_targets = targets[perm].astype(_index_dtype(size))
+    return sorted_perm, sorted_targets
 
 
 def build_assembly_schedule(mesh_or_conn: Union[Mesh, np.ndarray],
@@ -235,6 +336,16 @@ def build_assembly_schedule(mesh_or_conn: Union[Mesh, np.ndarray],
                           provider=coloring_provider):
                 coloring = color_elements(conn, provider=coloring_provider)
 
+        size = n + 2 * k
+        BUILD_COUNTS.inc("assembly_color_pack")
+        with obs.span("assembly.color_pack",
+                      num_colors=int(coloring.num_colors)):
+            color_slots, color_targets = _pack_colored(
+                targets, coloring, edof * edof, size)
+        BUILD_COUNTS.inc("assembly_sorted_pack")
+        with obs.span("assembly.sorted_pack", contributions=targets.size):
+            sorted_perm, sorted_targets = _pack_sorted(targets, size)
+
     # private-buffer grouping: contiguous element chunks (locality), padded
     # to a rectangular (B, epb) table with -1 sentinels
     B = max(1, min(num_buffers, ne))
@@ -247,7 +358,9 @@ def build_assembly_schedule(mesh_or_conn: Union[Mesh, np.ndarray],
         structure_digest=structure_digest(conn, d, num_nodes),
         n=n, k=k, ne=ne, edof=edof, ndof_per_node=d, num_buffers=B,
         ia=ia, ja=ja, targets=targets, coloring=coloring,
-        buffer_elements=buffer_elements)
+        buffer_elements=buffer_elements,
+        color_slots=color_slots, color_targets=color_targets,
+        sorted_perm=sorted_perm, sorted_targets=sorted_targets)
 
 
 def assembly_schedule_for(mesh_or_conn, ndof_per_node: int = 1,
@@ -290,12 +403,11 @@ def assembly_schedule_for(mesh_or_conn, ndof_per_node: int = 1,
 # Accumulation strategies
 # ---------------------------------------------------------------------------
 
-def scatter_colored(sched: AssemblySchedule, ke) -> jnp.ndarray:
-    """Per-color batched conflict-free scatter-add: inside one color every
-    target index is unique (no two elements share a DOF), so each
-    ``.at[].add`` is a permutation write — the colorful path's execution
-    discipline applied to assembly.  jit-compatible (color batches are
-    static per schedule)."""
+def scatter_colored_percolor(sched: AssemblySchedule, ke) -> jnp.ndarray:
+    """The legacy per-color discipline: one XLA ``.at[].add`` scatter per
+    color class, serialized — C dispatches per refresh.  Kept as the
+    baseline the fused colored-batch kernels are benchmarked against
+    (CI asserts a Pallas strategy beats it on the tet suite)."""
     kflat = jnp.asarray(ke, jnp.float32).reshape(sched.ne, -1)
     t2 = np.asarray(sched.targets).reshape(sched.ne, -1)
     vals = jnp.zeros(sched.size, jnp.float32)
@@ -307,6 +419,34 @@ def scatter_colored(sched: AssemblySchedule, ke) -> jnp.ndarray:
         tg = jnp.asarray(t2[els].reshape(-1))
         vals = vals.at[tg].add(kflat[jnp.asarray(els)].reshape(-1))
     return vals
+
+
+def scatter_colored(sched: AssemblySchedule, ke, variant: str = "stream",
+                    interpret: bool = True) -> jnp.ndarray:
+    """Per-color batched conflict-free scatter-add: inside one color every
+    target index is unique (no two elements share a DOF), so each color
+    batch is a permutation write — the colorful path's execution
+    discipline applied to assembly.  Executed by the fused colored-batch
+    kernels (``variant`` in {'stream', 'onehot'}, dispatched like the
+    SpMV variants) over the schedule's precomputed (C, Lmax) packs;
+    ``variant='percolor'`` selects the legacy one-scatter-per-color
+    baseline.  jit-compatible (the packs are static per schedule)."""
+    if variant == "percolor":
+        return scatter_colored_percolor(sched, ke)
+    return akern.colored_scatter(
+        sched.color_slots, sched.color_targets,
+        jnp.asarray(ke, jnp.float32), sched.size,
+        variant=variant, interpret=interpret)
+
+
+def scatter_sorted(sched: AssemblySchedule, ke) -> jnp.ndarray:
+    """Sorted-slot assembly (arXiv:2012.00585 analogue): contributions
+    were argsorted by destination at schedule-build time, so the refresh
+    is one color-free gather + monotone segment-sum — a single fused
+    launch with no palette term.  jit-compatible."""
+    return akern.sorted_scatter(
+        sched.sorted_perm, sched.sorted_targets,
+        jnp.asarray(ke, jnp.float32), sched.size)
 
 
 def scatter_private(sched: AssemblySchedule, ke) -> jnp.ndarray:
@@ -350,20 +490,41 @@ def values_to_csrc(sched: AssemblySchedule, vals) -> csrc.CSRC:
                               vals[:n], vals[n:n + k], vals[n + k:])
 
 
-def assemble(sched: AssemblySchedule, ke,
-             strategy: str = "colored") -> csrc.CSRC:
+def assemble(sched: AssemblySchedule, ke, strategy: str = "colored",
+             variant: Optional[str] = None,
+             interpret: bool = True) -> csrc.CSRC:
     """Assemble the global CSRC matrix from per-element dense blocks
     ``ke`` of shape (ne, edof, edof) with the chosen accumulation
-    strategy."""
+    strategy.
+
+    This IS the value-refresh fast path: every call reuses the
+    schedule's precomputed packs (zero structural work — the
+    ``BUILD_COUNTS['assembly_value_refresh']`` probe counts exactly one
+    refresh per call and nothing else moves), runs under an obs span,
+    and lands its wall time in ``assembly_scatter_seconds{strategy,
+    variant}``."""
     if strategy not in STRATEGIES:
         raise ValueError(f"strategy {strategy!r} not in {STRATEGIES}")
-    if strategy == "colored":
-        vals = scatter_colored(sched, ke)
-    elif strategy == "private":
-        vals = scatter_private(sched, ke)
-    else:
-        vals = scatter_serial(sched, ke)
-    return values_to_csrc(sched, vals)
+    variant = _DEFAULT_VARIANT[strategy] if variant is None else variant
+    t0 = time.perf_counter()
+    with obs.span("assembly.value_refresh", strategy=strategy,
+                  variant=variant):
+        if strategy == "colored":
+            vals = scatter_colored(sched, ke, variant=variant,
+                                   interpret=interpret)
+        elif strategy == "sorted":
+            vals = scatter_sorted(sched, ke)
+        elif strategy == "private":
+            vals = scatter_private(sched, ke)
+        else:
+            vals = scatter_serial(sched, ke)
+        # values_to_csrc materializes the device values, so the span and
+        # the histogram cover the actual scatter work
+        M = values_to_csrc(sched, vals)
+    BUILD_COUNTS.inc("assembly_value_refresh")
+    obs.histogram("assembly_scatter_seconds", strategy=strategy,
+                  variant=variant).observe(time.perf_counter() - t0)
+    return M
 
 
 def assemble_mesh(mesh: Mesh, ke, ndof_per_node: int = 1,
@@ -377,3 +538,113 @@ def assemble_mesh(mesh: Mesh, ke, ndof_per_node: int = 1,
                                   num_buffers=num_buffers, cache=cache,
                                   coloring_provider=coloring_provider)
     return assemble(sched, ke, strategy=strategy), sched
+
+
+# ---------------------------------------------------------------------------
+# Predict-then-measure strategy selection (the assembly tuner path)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AssemblyTuneResult:
+    """Winner of one assembly strategy tune (mirrors tuner.TuneResult)."""
+    strategy: str
+    variant: str
+    timings_s: Dict[str, float]        # "strategy/variant" -> measured s
+    predictions_s: Dict[str, float]    # every priced candidate
+    roofline_fraction: Dict[str, float]  # predicted/measured, measured set
+    cached: bool                       # True = PlanCache hit, nothing timed
+
+    def key(self) -> str:
+        return f"{self.strategy}/{self.variant}"
+
+
+def _scatter_fn(sched: AssemblySchedule, strategy: str, variant: str):
+    """The jitted value-refresh executor of one candidate."""
+    if strategy == "colored":
+        return jax.jit(lambda k: scatter_colored(sched, k,
+                                                 variant=variant))
+    if strategy == "sorted":
+        return jax.jit(lambda k: scatter_sorted(sched, k))
+    if strategy == "private":
+        return jax.jit(lambda k: scatter_private(sched, k))
+    raise ValueError(f"no tunable executor for strategy {strategy!r}")
+
+
+def _time_scatter(fn, kej, warmup: int = 2, repeats: int = 5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(kej))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(kej))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def tune_assembly(sched: AssemblySchedule, ke, cache=None,
+                  measure=None, repeats: int = 5,
+                  force: bool = False) -> AssemblyTuneResult:
+    """Pick the assembly (strategy, variant) for this schedule: price the
+    whole candidate pool with the roofline model, measure the cheapest
+    half (plus each strategy's best-predicted variant, so no family is
+    pruned unseen), argmin, and record predicted-vs-measured provenance.
+
+    The winner persists in the PlanCache under ``asmplan-<schedule key>``
+    — a later call with the same cache returns it without timing
+    anything.  ``measure(fn, ke)`` is injectable for deterministic
+    tests."""
+    from repro.roofline import cost_model
+
+    plan_key = "asmplan-" + sched.key()
+    if cache is not None and not force:
+        hit = cache.get_assembly_plan(plan_key)
+        if hit is not None:
+            return AssemblyTuneResult(
+                strategy=hit["strategy"], variant=hit["variant"],
+                timings_s=dict(hit.get("timings_s", {})),
+                predictions_s=dict(hit.get("predictions_s", {})),
+                roofline_fraction=dict(hit.get("roofline_fraction", {})),
+                cached=True)
+
+    priced = cost_model.rank_assembly_candidates(sched,
+                                                 ASSEMBLY_CANDIDATES)
+    predictions = {f"{s}/{v}": est.predicted_s for (s, v), est in priced}
+    ests = {f"{s}/{v}": est for (s, v), est in priced}
+    obs.counter("assembly_tuner_candidates_total",
+                outcome="enumerated").inc(len(priced))
+
+    pool = [sv for sv, _ in priced]
+    chosen = list(pool[:max(2, len(pool) // 2)])
+    seen_strategies = {s for s, _ in chosen}
+    for s, v in pool:                  # best-predicted variant per family
+        if s not in seen_strategies:
+            chosen.append((s, v))
+            seen_strategies.add(s)
+
+    kej = jnp.asarray(np.asarray(ke, np.float32))
+    timings: Dict[str, float] = {}
+    for s, v in chosen:
+        fn = _scatter_fn(sched, s, v)
+        t = (measure(fn, kej) if measure is not None
+             else _time_scatter(fn, kej, repeats=repeats))
+        timings[f"{s}/{v}"] = float(t)
+    obs.counter("assembly_tuner_candidates_total",
+                outcome="measured").inc(len(timings))
+
+    winner = min(timings, key=timings.get)
+    fractions = {key: cost_model.roofline_fraction(ests[key], t)
+                 for key, t in timings.items() if t > 0}
+    ws, wv = winner.split("/")
+    obs.gauge("assembly_roofline_fraction", strategy=ws,
+              variant=wv).set(fractions.get(winner, 0.0))
+
+    result = AssemblyTuneResult(
+        strategy=ws, variant=wv, timings_s=timings,
+        predictions_s=predictions, roofline_fraction=fractions,
+        cached=False)
+    if cache is not None:
+        cache.put_assembly_plan(plan_key, {
+            "strategy": ws, "variant": wv, "timings_s": timings,
+            "predictions_s": predictions,
+            "roofline_fraction": fractions})
+    return result

@@ -623,6 +623,27 @@ class PlanCache:
         if d is not None:
             sched.save_npz(os.path.join(d, key + ".npz"))
 
+    # ---- assembly strategy plans (assembly.scatter.tune_assembly):
+    # the tuned (strategy, variant) winner + predict/measure provenance,
+    # stored as a JSON record under "asmplan-<schedule key>" ----
+
+    def get_assembly_plan(self, key: str):
+        """The tuned assembly record for this schedule key, or None."""
+        e = self.entries.get(key)
+        rec = None if e is None else e.get("assembly")
+        if rec is None:
+            obs.counter("plan_cache_lookups_total", kind="assembly_plan",
+                        outcome="miss").inc()
+            return None
+        obs.counter("plan_cache_lookups_total", kind="assembly_plan",
+                    outcome="hit").inc()
+        return dict(rec)
+
+    def put_assembly_plan(self, key: str, record: Dict):
+        self.entries[key] = {"assembly": dict(record), "measured": True}
+        if self.path:
+            self.save()
+
     def __len__(self) -> int:
         return len(self.entries)
 

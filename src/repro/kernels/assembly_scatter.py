@@ -1,0 +1,212 @@
+"""Pallas colored-batch + sorted-slot kernels for FEM assembly scatter.
+
+The assembly hot path (repro.assembly.scatter) historically executed one
+XLA ``.at[].add`` scatter per color class — C serialized dispatches per
+value refresh, the exact launch-bound regime the colored SpMV path left
+behind in PR 7.  This module is the streaming formulation of the
+scatter-add ``vals[targets[g]] += ke.flat[g]``, consuming the
+per-color slot packs the AssemblySchedule precomputes:
+
+  colored-batch   one grid program per color class.  Within a color no
+                  two contributions share a target (the conflict-free
+                  coloring invariant), so a program's segment-sum is a
+                  permutation write; programs accumulate into the same
+                  revisited output block.  Two bodies, dispatched like
+                  the SpMV variants:
+                    stream   per-lane ``jnp.take`` gather of the
+                             contribution values + one ``segment_sum``
+                             over the target stream — O(1) work/slot,
+                             bandwidth-bound;
+                    onehot   targets realized as an (S, TS) one-hot
+                             mask contracted on the MXU per output tile
+                             — the Mosaic-safe compiled-TPU fallback,
+                             compute-bound by construction.
+  sorted-slot     the arXiv:2012.00585 analogue: contributions are
+                  pre-sorted by destination at schedule-build time, so
+                  the whole assembly is ONE color-free gather +
+                  ``segment_sum(..., indices_are_sorted=True)`` — a
+                  single fused launch, no palette term at all.
+
+Sentinel discipline (shared with csrc_spmv_stream): padded pack entries
+carry slot sentinel G (one past the last contribution — the gather reads
+an appended zero) and target sentinel ``size`` (one past the last real
+segment — the segment-sum drops it).  Index streams arrive int16 when
+the schedule's overflow gate allowed it and are upcast in-register.
+
+In interpret mode (the CPU backend of this repo's tests and benches) the
+emulated Pallas grid costs ~1 ms/step, so the stream variant evaluates
+the identical per-color computation as one fused XLA expression over all
+(color, slot) pairs — same slots summed into the same segments, so for
+dyadic element values the result is bit-identical to the in-grid bodies
+and to the serial ``np.add.at`` oracle (tests assert equality, not
+closeness).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# output-tile width of the one-hot body: each (color, tile) program
+# contracts an (S, TILE) mask on the MXU
+ONEHOT_TILE = 512
+COLORED_VARIANTS = ("stream", "onehot")
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _padded_contribs(kflat) -> jnp.ndarray:
+    """Flat contribution values with one appended zero — the slot
+    sentinel G gathers it, so padded pack entries are numerically inert."""
+    flat = jnp.asarray(kflat, jnp.float32).reshape(-1)
+    return jnp.concatenate([flat, jnp.zeros((1,), jnp.float32)])
+
+
+# ---------------------------------------------------------------------------
+# Fused XLA executors (the interpret-mode / CPU route)
+# ---------------------------------------------------------------------------
+
+def colored_scatter_fused(color_slots, color_targets, kflat,
+                          size: int) -> jnp.ndarray:
+    """All color batches as one gather + one segment-sum: the same
+    (slot, target) pairs the in-grid bodies process per color, evaluated
+    grid-free.  Target sentinel ``size`` routes padding to the drop
+    segment one past the vector end."""
+    kpad = _padded_contribs(kflat)
+    slots = jnp.asarray(color_slots).astype(jnp.int32).reshape(-1)
+    tgts = jnp.asarray(color_targets).astype(jnp.int32).reshape(-1)
+    contribs = jnp.take(kpad, slots)
+    out = jax.ops.segment_sum(contribs, tgts, num_segments=size + 1)
+    return out[:size]
+
+
+def sorted_scatter(sorted_perm, sorted_targets, kflat,
+                   size: int) -> jnp.ndarray:
+    """Sorted-slot assembly: gather contributions in destination order,
+    then one monotone segment-sum — no colors, no sentinels, one launch."""
+    kvals = jnp.asarray(kflat, jnp.float32).reshape(-1)
+    contribs = jnp.take(kvals, jnp.asarray(sorted_perm).astype(jnp.int32))
+    return jax.ops.segment_sum(
+        contribs, jnp.asarray(sorted_targets).astype(jnp.int32),
+        num_segments=size, indices_are_sorted=True)
+
+
+# ---------------------------------------------------------------------------
+# In-grid Pallas bodies (one program per color / per (color, tile))
+# ---------------------------------------------------------------------------
+
+def _colored_kernel_stream(slots_ref, tgts_ref, kvals_ref, out_ref, *,
+                           size_pad: int):
+    """grid = (C,): gather this color's contributions, segment-sum them
+    into the full output block (revisited across colors)."""
+    c = pl.program_id(0)
+    slots = slots_ref[0].astype(jnp.int32)        # (L,), sentinel == G
+    tgts = tgts_ref[0].astype(jnp.int32)          # (L,), sentinel == size
+    contribs = jnp.take(kvals_ref[...], slots)
+    win = jax.ops.segment_sum(contribs, tgts, num_segments=size_pad)
+
+    @pl.when(c == 0)
+    def _init():
+        out_ref[...] = win
+
+    @pl.when(c != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + win
+
+
+def _colored_kernel_onehot(slots_ref, tgts_ref, kvals_ref, out_ref, *,
+                           tile: int):
+    """grid = (C, NT): the scatter as an MXU contraction.  The (TILE, L)
+    one-hot of this tile's local targets is contracted with the color's
+    contribution vector; out-of-tile targets (including the sentinel)
+    match no iota row and contribute zero."""
+    c = pl.program_id(0)
+    t = pl.program_id(1)
+    slots = slots_ref[0].astype(jnp.int32)               # (L,)
+    local = tgts_ref[0].astype(jnp.int32) - t * tile     # (L,)
+    contribs = jnp.take(kvals_ref[...], slots)
+    length = local.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tile, length), 0)
+    onehot = (iota == local[None, :]).astype(jnp.float32)   # (TILE, L)
+    win = jax.lax.dot_general(
+        onehot, contribs[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]           # (TILE,)
+
+    @pl.when(c == 0)
+    def _init():
+        out_ref[...] = win
+
+    @pl.when(c != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + win
+
+
+def colored_scatter_grid(color_slots, color_targets, kflat, size: int,
+                         variant: str = "stream",
+                         interpret: bool = True) -> jnp.ndarray:
+    """The colored-batch kernel through the Pallas grid (both variants).
+
+    Inputs are the schedule's (C, L) packs; the contribution table is
+    padded with the sentinel zero and lane-aligned.  The output block is
+    revisited across the color axis (standard revisited-output
+    accumulation), then sliced back to ``size`` — the drop segment and
+    the alignment pad fall off."""
+    if variant not in COLORED_VARIANTS:
+        raise ValueError(
+            f"variant {variant!r} not in {COLORED_VARIANTS}")
+    slots = jnp.asarray(color_slots)
+    tgts = jnp.asarray(color_targets)
+    num_colors, length = slots.shape
+    kpad = _padded_contribs(kflat)
+    g_pad = _round_up(kpad.shape[0], 128)
+    kpad = jnp.pad(kpad, (0, g_pad - kpad.shape[0]))
+
+    if variant == "stream":
+        size_pad = _round_up(size + 1, 128)
+        out = pl.pallas_call(
+            functools.partial(_colored_kernel_stream, size_pad=size_pad),
+            grid=(num_colors,),
+            in_specs=[
+                pl.BlockSpec((1, length), lambda c: (c, 0)),   # slots
+                pl.BlockSpec((1, length), lambda c: (c, 0)),   # targets
+                pl.BlockSpec((g_pad,), lambda c: (0,)),        # contribs
+            ],
+            out_specs=pl.BlockSpec((size_pad,), lambda c: (0,)),
+            out_shape=jax.ShapeDtypeStruct((size_pad,), jnp.float32),
+            interpret=interpret,
+        )(slots, tgts, kpad)
+        return out[:size]
+
+    size_pad = _round_up(size + 1, ONEHOT_TILE)
+    nt = size_pad // ONEHOT_TILE
+    out = pl.pallas_call(
+        functools.partial(_colored_kernel_onehot, tile=ONEHOT_TILE),
+        grid=(num_colors, nt),
+        in_specs=[
+            pl.BlockSpec((1, length), lambda c, t: (c, 0)),    # slots
+            pl.BlockSpec((1, length), lambda c, t: (c, 0)),    # targets
+            pl.BlockSpec((g_pad,), lambda c, t: (0,)),         # contribs
+        ],
+        out_specs=pl.BlockSpec((ONEHOT_TILE,), lambda c, t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((size_pad,), jnp.float32),
+        interpret=interpret,
+    )(slots, tgts, kpad)
+    return out[:size]
+
+
+def colored_scatter(color_slots, color_targets, kflat, size: int,
+                    variant: str = "stream",
+                    interpret: bool = True) -> jnp.ndarray:
+    """Variant dispatch, mirroring the SpMV stream modules: the stream
+    variant in interpret mode takes the grid-free fused route (the
+    emulated grid's per-step cost dwarfs the kernel math); everything
+    else runs the in-grid bodies."""
+    if variant == "stream" and interpret:
+        return colored_scatter_fused(color_slots, color_targets, kflat,
+                                     size)
+    return colored_scatter_grid(color_slots, color_targets, kflat, size,
+                                variant=variant, interpret=interpret)

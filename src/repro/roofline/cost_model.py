@@ -200,3 +200,84 @@ def roofline_fraction(est: CostEstimate, measured_s: float) -> float:
     if measured_s <= 0:
         return 0.0
     return est.predicted_s / measured_s
+
+
+# ---------------------------------------------------------------------------
+# FEM assembly scatter pricing (repro.assembly.scatter.tune_assembly)
+# ---------------------------------------------------------------------------
+
+def assembly_cost(sched, strategy: str,
+                  variant: str = "stream") -> CostEstimate:
+    """Roofline price of one assembly value refresh for a (strategy,
+    variant) candidate on an AssemblySchedule (duck-typed: ne, edof,
+    size, num_buffers, coloring, and the kernel packs).
+
+    All strategies stream the G = ne·edof² contribution values plus
+    their index streams (halved under the int16 gate) and write the
+    size-length unified vector.  What separates them are the overhead
+    terms: the colored-batch kernels pay the (C, Lmax) pack padding;
+    the one-hot body additionally builds an (L, TILE) mask per output
+    tile (iota + compare + convert + 2-op contraction per element —
+    compute-bound by construction); the legacy per-color baseline pays
+    one serialized scatter launch per palette entry plus the isolated
+    scatter-line waste; private pays 2·B·size partial traffic for the
+    buffer reduce; sorted-slot streams exactly G with none of the above
+    — which is precisely when it beats colored (docs/DESIGN.md §10)."""
+    from repro.kernels.assembly_scatter import ONEHOT_TILE
+
+    contribs = float(sched.ne * sched.edof * sched.edof)   # G
+    size = float(sched.size)
+    out_bytes = size * 4.0
+    ib_slot = _INDEX_BYTES.get(str(sched.color_slots.dtype), 4)
+    ib_tgt = _INDEX_BYTES.get(str(sched.color_targets.dtype), 4)
+    launch_s = 0.0
+
+    if strategy == "colored" and variant == "percolor":
+        colors = int(sched.coloring.num_colors)
+        byts = contribs * (4.0 + 4.0) + out_bytes
+        # each color's targets stride the unified vector: isolated
+        # line-granularity touches, like the colorful SpMV path
+        byts += contribs * (SCATTER_LINE_BYTES - 4.0)
+        flops = contribs
+        launch_s = colors * COLOR_LAUNCH_S
+    elif strategy == "colored":
+        padded = float(sched.color_slots.shape[0]
+                       * sched.color_slots.shape[1])       # C·Lmax
+        byts = padded * (4.0 + ib_slot + ib_tgt) + out_bytes
+        flops = padded
+        if variant == "onehot":
+            # per (color, tile) program: an (L, TILE) mask — iota +
+            # compare + convert (3 ops) + the 2-op dot contraction —
+            # over ceil((size+1)/TILE) tiles
+            size_pad = float(_round_up(int(size) + 1, ONEHOT_TILE))
+            flops += padded * size_pad * 5.0
+    elif strategy == "sorted":
+        byts = contribs * (4.0 + ib_slot + ib_tgt) + out_bytes
+        flops = contribs
+    elif strategy == "private":
+        buffers = float(sched.num_buffers)
+        # partials written then re-read for the reduce
+        byts = (contribs * (4.0 + 4.0) + out_bytes
+                + 2.0 * buffers * (size + 1.0) * 4.0)
+        flops = contribs + buffers * size
+    else:                              # serial oracle — not a candidate
+        byts = contribs * (4.0 + 4.0) + out_bytes
+        byts += contribs * (SCATTER_LINE_BYTES - 4.0)
+        flops = contribs
+
+    mem_s = byts / HBM_BW
+    cmp_s = flops / PEAK_FLOPS_BF16
+    return CostEstimate(bytes=float(byts), flops=float(flops),
+                        memory_s=mem_s, compute_s=cmp_s,
+                        predicted_s=max(mem_s, cmp_s) + launch_s)
+
+
+def rank_assembly_candidates(
+        sched, candidates: Sequence[Tuple[str, str]]
+        ) -> List[Tuple[Tuple[str, str], CostEstimate]]:
+    """(strategy, variant) candidates cheapest-first by predicted time —
+    the assembly tuner's measure-ordering (tune_assembly)."""
+    priced = [(sv, assembly_cost(sched, sv[0], sv[1]))
+              for sv in candidates]
+    priced.sort(key=lambda pc: pc[1].predicted_s)
+    return priced

@@ -20,7 +20,8 @@ from repro.assembly import mesh as amesh
 from repro.assembly import (assemble, assemble_mesh, assembly_schedule_for,
                             build_assembly_schedule, color_elements,
                             element_dofs, scatter_colored, scatter_private,
-                            scatter_serial, verify_element_coloring)
+                            scatter_serial, scatter_sorted,
+                            verify_element_coloring)
 from repro.assembly import scatter as scatter_mod
 from repro.core import csrc, schedule as S, tuner
 from repro.core.plan import ExecutionPlan
@@ -165,6 +166,8 @@ def test_all_strategies_bit_identical(name, make):
     ref = scatter_serial(sched, ke)
     np.testing.assert_array_equal(np.asarray(scatter_colored(sched, ke)),
                                   ref)
+    np.testing.assert_array_equal(np.asarray(scatter_sorted(sched, ke)),
+                                  ref)
     np.testing.assert_array_equal(np.asarray(scatter_private(sched, ke)),
                                   ref)
 
@@ -233,8 +236,10 @@ def test_assembly_schedule_npz_roundtrip_through_disk_cache(tmp_path):
     cache2 = tuner.PlanCache(path=path)            # "new process"
     s2, d = _build_delta(lambda: assembly_schedule_for(mesh, cache=cache2))
     assert d == {}, f"disk hit rebuilt: {d}"
-    for f in ("ia", "ja", "targets", "buffer_elements"):
+    for f in ("ia", "ja", "targets", "buffer_elements", "color_slots",
+              "color_targets", "sorted_perm", "sorted_targets"):
         np.testing.assert_array_equal(getattr(s1, f), getattr(s2, f))
+        assert getattr(s1, f).dtype == getattr(s2, f).dtype, f
     np.testing.assert_array_equal(csrc.to_dense(assemble(s1, ke)),
                                   csrc.to_dense(assemble(s2, ke)))
 
@@ -300,6 +305,11 @@ def test_time_stepping_reuses_everything():
         ke = amesh.poisson_stiffness(mesh, mass=0.5 + 0.25 * t)
         return assemble(sched, ke, strategy="colored")
 
+    # the value-refresh fast path: one refresh probe per assemble, zero
+    # structural rebuilds (the kernel packs are reused as-is)
+    _, da = _build_delta(lambda: step(0))
+    assert da == {"assembly_value_refresh": 1}, f"refresh rebuilt: {da}"
+
     M0 = step(0)
     op, d0 = _build_delta(
         lambda: ops.SpmvOperator.from_plan(M0, plan, cache=cache))
@@ -359,9 +369,11 @@ def test_serving_time_stepping_value_refresh():
     eng.register("fem", M0)
     _, d = _build_delta(lambda: eng.register("fem", M1))
     assert d == {"value_refresh": 1}, f"structural rebuild: {d}"
+    # the delta wraps an assemble() call too: exactly one assembly value
+    # refresh fires (the satellite probe) and no pack/schedule rebuilds
     _, d2 = _build_delta(lambda: eng.update_values(
         "fem", assemble(sched, amesh.poisson_stiffness(mesh, mass=2.5))))
-    assert d2 == {"value_refresh": 1}
+    assert d2 == {"value_refresh": 1, "assembly_value_refresh": 1}
     x = np.random.default_rng(1).standard_normal(M1.m).astype(np.float32)
     uid = eng.submit("fem", x)
     out = eng.run_until_drained()
